@@ -1,0 +1,60 @@
+"""Paper Figure 5 analogue: fraction of batch-processing time spent in sort,
+multisearch, and other components (the paper: up to 94% sort, <5% multisearch).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row, timeit
+from repro.core.rank import rank_all
+from repro.core.state import init_state
+from repro.core.bulk import bulk_update_all
+from repro.data.graph_stream import barabasi_albert_stream
+from repro.primitives.sort import pack2
+
+
+def main(r: int = 100_000, s: int = 16384) -> list[str]:
+    edges = barabasi_albert_stream(10_000, 8, seed=1)[:s]
+    W = jnp.asarray(edges)
+    nv = jnp.int32(s)
+
+    # sort+rank structure build
+    build = jax.jit(lambda w: rank_all(w, nv))
+    t_build = timeit(build, W)
+    R = build(W)
+
+    # multisearch: 3r queries as in one bulk step
+    rng = np.random.default_rng(0)
+    qs = jnp.asarray(
+        pack2(jnp.asarray(rng.integers(0, 10_000, 3 * r), jnp.int32),
+              jnp.asarray(rng.integers(0, s, 3 * r), jnp.int32))
+    )
+    search = jax.jit(lambda keys, q: jnp.searchsorted(keys, q))
+    t_search = timeit(search, R.key_desc, qs)
+
+    # full step for the total
+    state = init_state(r)
+    key = jax.random.PRNGKey(0)
+    step = jax.jit(bulk_update_all)  # no donation: benchmark reuses the state
+    full = lambda st: step(st, W, nv, key)
+    t_total = timeit(full, state, warmup=1, iters=3)
+
+    other = max(t_total - t_build - t_search, 0.0)
+    rows = [
+        csv_row("breakdown/sort_rank", t_build * 1e6,
+                f"frac={t_build/t_total:.2f}"),
+        csv_row("breakdown/multisearch", t_search * 1e6,
+                f"frac={t_search/t_total:.2f}"),
+        csv_row("breakdown/other", other * 1e6, f"frac={other/t_total:.2f}"),
+        csv_row("breakdown/total_step", t_total * 1e6,
+                f"s={s};r={r};edges_per_s={s/t_total:.0f}"),
+    ]
+    for r_ in rows:
+        print(r_, flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Pallas kernel microbench: kernel-vs-oracle agreement + derived bandwidth.
+
+Wall time on CPU is interpret-mode (Python) and NOT indicative of TPU perf;
+the derived column reports the bytes each kernel moves per call — the number
+the VMEM tiling was designed around."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row, timeit
+from repro.kernels import ops
+from repro.kernels.ref import (
+    bitonic_sort_tiles_ref,
+    multisearch_counts_ref,
+    segscan_ref,
+)
+
+
+def main() -> list[str]:
+    rng = np.random.default_rng(0)
+    rows = []
+
+    n = 1 << 15
+    v = jnp.asarray(rng.integers(0, 5, n), jnp.int32)
+    f = jnp.asarray(rng.random(n) < 0.1)
+    t = timeit(lambda: ops.segscan_op(v, f, block=1024), iters=2)
+    ok = bool(jnp.array_equal(ops.segscan_op(v, f), segscan_ref(v, f)))
+    rows.append(csv_row("kernels/segscan", t * 1e6,
+                        f"ok={ok};bytes={2*4*n};n={n}"))
+
+    keys = jnp.sort(jnp.asarray(rng.integers(0, 1 << 40, 1 << 14), jnp.int64))
+    qs = jnp.asarray(rng.integers(0, 1 << 40, 1 << 12), jnp.int64)
+    t = timeit(lambda: ops.multisearch_counts_op(keys, qs), iters=2)
+    got = ops.multisearch_counts_op(keys, qs)
+    exp = multisearch_counts_ref(keys, qs)
+    ok = bool(jnp.array_equal(got[0], exp[0]) and jnp.array_equal(got[1], exp[1]))
+    rows.append(csv_row("kernels/multisearch", t * 1e6,
+                        f"ok={ok};bytes={8*(len(keys)+2*len(qs))}"))
+
+    k = jnp.asarray(rng.integers(0, 1 << 40, 1 << 13), jnp.int64)
+    val = jnp.arange(1 << 13, dtype=jnp.int32)
+    t = timeit(lambda: ops.bitonic_sort_tiles_op(k, val, tile=1024), iters=2)
+    gk, gv = ops.bitonic_sort_tiles_op(k, val, tile=1024)
+    ek, _ = bitonic_sort_tiles_ref(k, val, 1024)
+    ok = bool(jnp.array_equal(gk, ek))
+    rows.append(csv_row("kernels/bitonic_sort", t * 1e6,
+                        f"ok={ok};bytes={12*len(k)}"))
+    for r_ in rows:
+        print(r_, flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

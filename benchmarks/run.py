@@ -1,0 +1,46 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only accuracy,throughput,...]
+
+Prints ``name,us_per_call,derived`` CSV rows (plus a header). Scaled to finish
+on a single CPU core; the dry-run + roofline (EXPERIMENTS.md) carry the
+at-scale numbers.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="comma list of bench names")
+    args = ap.parse_args()
+    only = set(filter(None, args.only.split(",")))
+
+    from benchmarks import accuracy, breakdown, kernels, schemes, throughput
+
+    benches = {
+        "accuracy": accuracy.main,      # paper Table 2
+        "throughput": throughput.main,  # paper Figure 6
+        "schemes": schemes.main,        # paper Table 3 / Section 1
+        "breakdown": breakdown.main,    # paper Figure 5
+        "kernels": kernels.main,        # kernel contracts + bytes
+    }
+    print("name,us_per_call,derived")
+    all_rows = []
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            all_rows += fn()
+        except Exception as e:  # pragma: no cover
+            print(f"{name},0,ERROR={type(e).__name__}:{e}", file=sys.stderr)
+            raise
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Paper Figure 6 analogue: sustained throughput (edges/s) vs batch size."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row
+from repro.core import bulk_update_all_jit, init_state
+from repro.data.graph_stream import barabasi_albert_stream, batches
+
+
+def main(r: int = 200_000) -> list[str]:
+    edges = barabasi_albert_stream(30_000, 8, seed=0)
+    m = len(edges)
+    rows = []
+    for bs in (1024, 4096, 16384, 65536):
+        state = init_state(r)
+        key = jax.random.PRNGKey(0)
+        # warmup/compile on first batch shape
+        it = list(batches(edges, bs))
+        state = bulk_update_all_jit(
+            state, jnp.asarray(it[0][0]), jnp.int32(it[0][1]), key
+        )
+        jax.block_until_ready(state.chi)
+        t0 = time.perf_counter()
+        for i, (W, nv) in enumerate(it[1:]):
+            state = bulk_update_all_jit(
+                state, jnp.asarray(W), jnp.int32(nv), jax.random.fold_in(key, i)
+            )
+        jax.block_until_ready(state.chi)
+        dt = time.perf_counter() - t0
+        eps = (m - it[0][1]) / dt
+        rows.append(csv_row(
+            f"throughput/batch{bs}", dt / max(len(it) - 1, 1) * 1e6,
+            f"edges_per_s={eps:.0f};r={r};m={m}"))
+        print(rows[-1], flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

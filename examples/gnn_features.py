@@ -1,0 +1,60 @@
+"""The paper's engine as a feature service for a GNN (DESIGN.md §6).
+
+Streams a graph once to estimate per-graph triangle density, then feeds the
+estimate as a global feature into a GAT node classifier — the natural
+integration point between the streaming-analytics core and the model zoo.
+
+  PYTHONPATH=src python examples/gnn_features.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bulk_update_all_jit, estimate, init_state
+from repro.data.graph_stream import barabasi_albert_stream, batches
+from repro.models.gnn import GNNConfig, init_params, node_classification_loss
+from repro.train.optimizer import adamw
+
+# --- streaming pass: triangle density feature ---
+edges = barabasi_albert_stream(n=1500, k=6, seed=3)
+state = init_state(50_000)
+key = jax.random.PRNGKey(0)
+for i, (W, nv) in enumerate(batches(edges, 2048)):
+    state = bulk_update_all_jit(state, jnp.asarray(W), jnp.int32(nv),
+                                jax.random.fold_in(key, i))
+tri_density = float(estimate(state)) / len(edges)
+print(f"streaming feature: triangles/edge = {tri_density:.3f}")
+
+# --- GNN training with the streamed feature appended to node inputs ---
+n = 1500
+rng = np.random.default_rng(0)
+deg = np.zeros(n)
+for u, v in edges:
+    deg[u] += 1
+    deg[v] += 1
+feats = np.stack([deg, np.full(n, tri_density)], axis=1).astype(np.float32)
+labels = (deg > np.median(deg)).astype(np.int32)  # toy target
+
+cfg = GNNConfig(name="gat-feat", kind="gat", n_layers=2, d_hidden=8,
+                n_heads=4, d_in=2, n_classes=2, aggregator="attn")
+params = init_params(jax.random.PRNGKey(1), cfg)
+opt = adamw(lr=5e-3)
+opt_state = opt.init(params)
+ei = jnp.asarray(np.concatenate([edges.T, edges.T[::-1]], axis=1), jnp.int32)
+nf = jnp.asarray(feats)
+lab = jnp.asarray(labels)
+mask = jnp.ones((n,), jnp.float32)
+
+@jax.jit
+def step(params, opt_state):
+    loss, g = jax.value_and_grad(
+        lambda p: node_classification_loss(p, cfg, nf, ei, lab, mask)
+    )(params)
+    params, opt_state = opt.update(g, opt_state, params)
+    return params, opt_state, loss
+
+for i in range(60):
+    params, opt_state, loss = step(params, opt_state)
+    if i % 20 == 0:
+        print(f"step {i:3d} loss {float(loss):.4f}")
+print(f"final loss {float(loss):.4f}")

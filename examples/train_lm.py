@@ -1,0 +1,16 @@
+"""Train the full smollm-135m config for a few hundred steps on synthetic
+structured text (CPU-sized batch; the 512-chip shardings are exercised by the
+dry-run). Thin wrapper over the production driver.
+
+  PYTHONPATH=src python examples/train_lm.py            # full 135M params
+  PYTHONPATH=src python examples/train_lm.py --smoke    # seconds, tiny model
+"""
+import subprocess
+import sys
+
+args = [
+    sys.executable, "-m", "repro.launch.train",
+    "--arch", "smollm-135m", "--steps", "200", "--batch", "4", "--seq", "128",
+    "--ckpt-every", "50",
+] + sys.argv[1:]
+subprocess.run(args, check=True)

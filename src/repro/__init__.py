@@ -1,0 +1,12 @@
+"""repro: parallel streaming triangle counting (Tangwongsan-Pavan-Tirthapura, CIKM'13)
+as a multi-pod JAX framework.
+
+x64 is enabled globally: stream edge counts (m ~ 9.3e9 for the paper's powerlaw
+stress graph) and packed 2x32-bit edge keys require int64. All model code uses
+explicit dtypes (bf16/f32) so numerics are unaffected by the x64 default.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+__version__ = "1.0.0"

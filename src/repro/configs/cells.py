@@ -1,0 +1,387 @@
+"""Cell definitions: every (architecture x input-shape) combination as an
+abstract, lowerable unit — input ShapeDtypeStructs (no allocation), the step
+function, and baseline mesh shardings.
+
+40 assigned cells (5 LM x 4, 4 GNN x 4, 1 recsys x 4) + the paper's own
+triangle-stream cells. ``build_cell(arch, shape, mesh)`` returns everything
+launch/dryrun.py needs to lower + compile.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.train import steps as steps_mod
+from repro.train.optimizer import get_optimizer
+from repro.train.sharding import batch_axes, lm_param_specs, opt_state_specs
+
+# ---------------------------------------------------------------------------
+# shape tables
+# ---------------------------------------------------------------------------
+LM_SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    # long-context decode: one token vs a 512k KV cache (linear in cache len).
+    # No 500k train/prefill is claimed for these full-attention archs —
+    # see DESIGN.md §6.
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+GNN_SHAPES = {
+    "full_graph_sm": dict(n_nodes=2708, n_edges=10556, d_feat=1433, n_classes=7),
+    "minibatch_lg": dict(n_nodes=169984, n_edges=168960, d_feat=602, n_classes=41),
+    "ogb_products": dict(n_nodes=2449029, n_edges=61859140, d_feat=100, n_classes=47),
+    "molecule": dict(n_nodes=3840, n_edges=8192, d_feat=64, n_classes=16),
+}
+GNN_SMOKE_SHAPES = {
+    "full_graph_sm": dict(n_nodes=40, n_edges=120, d_feat=12, n_classes=5),
+    "minibatch_lg": dict(n_nodes=176, n_edges=160, d_feat=12, n_classes=5),
+    "ogb_products": dict(n_nodes=64, n_edges=200, d_feat=12, n_classes=5),
+    "molecule": dict(n_nodes=20, n_edges=48, d_feat=8, n_classes=4),
+}
+RECSYS_SHAPES = {
+    "train_batch": dict(kind="train", batch=65536),
+    "serve_p99": dict(kind="score", batch=512, cands=1024, per_user=True),
+    "serve_bulk": dict(kind="score", batch=262144, cands=1024, per_user=False),
+    "retrieval_cand": dict(kind="score", batch=1, cands=1_000_000, per_user=False),
+}
+
+LM_ARCHS = {
+    "smollm-135m": ("repro.configs.smollm_135m", "adamw"),
+    "qwen3-4b": ("repro.configs.qwen3_4b", "adamw"),
+    "qwen2-1.5b": ("repro.configs.qwen2_1_5b", "adamw"),
+    "kimi-k2-1t-a32b": ("repro.configs.kimi_k2_1t_a32b", "adafactor"),
+    "granite-moe-1b-a400m": ("repro.configs.granite_moe_1b_a400m", "adamw"),
+}
+GNN_ARCHS = {
+    "graphcast": "repro.configs.graphcast",
+    "gat-cora": "repro.configs.gat_cora",
+}
+EQV_ARCHS = {
+    "egnn": "repro.configs.egnn",
+    "mace": "repro.configs.mace",
+}
+
+ALL_ARCHS = (
+    list(LM_ARCHS) + list(GNN_ARCHS) + list(EQV_ARCHS) + ["bert4rec"]
+)
+
+
+def arch_shapes(arch: str) -> list[str]:
+    if arch in LM_ARCHS:
+        return list(LM_SHAPES)
+    if arch in GNN_ARCHS or arch in EQV_ARCHS:
+        return list(GNN_SHAPES)
+    if arch == "bert4rec":
+        return list(RECSYS_SHAPES)
+    raise ValueError(arch)
+
+
+def all_cells() -> list[tuple[str, str]]:
+    return [(a, s) for a in ALL_ARCHS for s in arch_shapes(a)]
+
+
+def _pad_to(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str
+    fn: Callable  # to be jitted
+    args: tuple  # ShapeDtypeStructs (dry-run) or concrete arrays (smoke)
+    in_specs: Any  # PartitionSpec pytree matching args
+    out_specs: Any  # PartitionSpec pytree or None (auto)
+    config: Any = None
+    model_flops: float = 0.0  # useful-work floor (6ND etc.)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _key_spec():
+    return _sds((2,), jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+def _lm_cell(arch, shape, mesh_axes_names, smoke=False, overrides=None):
+    mod, opt_name = LM_ARCHS[arch]
+    cfg = getattr(importlib.import_module(mod), "SMOKE" if smoke else "FULL")
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    sh = dict(LM_SHAPES[shape])
+    if smoke:
+        sh["seq"], sh["batch"] = 16, 4
+        if sh["kind"] == "decode":
+            sh["seq"] = 32
+    opt = get_optimizer(opt_name, 1e-3 if not smoke else 1e-2)
+    bp = batch_axes(mesh_axes_names)
+    pspec = lm_param_specs(cfg, mesh_axes_names, fsdp=getattr(cfg, 'fsdp_params', False))
+    ospec = opt_state_specs(opt_name, pspec)
+    params_s = jax.eval_shape(
+        lambda k: importlib.import_module("repro.models.transformer").init_params(
+            k, cfg
+        ),
+        _key_spec(),
+    )
+    B, S = sh["batch"], sh["seq"]
+    n, d = cfg.param_count(), cfg.active_param_count()
+
+    if sh["kind"] == "train":
+        opt_s = jax.eval_shape(opt.init, params_s)
+        batch = {
+            "tokens": _sds((B, S), jnp.int32),
+            "labels": _sds((B, S), jnp.int32),
+        }
+        fn = steps_mod.make_lm_train_step(cfg, opt)
+        args = (params_s, opt_s, batch, _sds((2,), jnp.uint32))
+        bspec = {"tokens": P(bp, None), "labels": P(bp, None)}
+        in_specs = (pspec, ospec, bspec, P())
+        out_specs = (pspec, ospec, {"loss": P()})
+        mf = 6.0 * d * B * S
+    elif sh["kind"] == "prefill":
+        batch = {"tokens": _sds((B, S), jnp.int32)}
+        fn = steps_mod.make_lm_prefill_step(cfg)
+        args = (params_s, batch)
+        in_specs = (pspec, {"tokens": P(bp, None)})
+        out_specs = P(bp, None, None)
+        mf = 2.0 * d * B * S
+    else:  # decode
+        cache = {
+            "k": _sds((cfg.n_layers, B, S, cfg.n_kv_heads, cfg.dh), cfg.dtype),
+            "v": _sds((cfg.n_layers, B, S, cfg.n_kv_heads, cfg.dh), cfg.dtype),
+            "pos": _sds((), jnp.int32),
+        }
+        batch = {"tokens": _sds((B, 1), jnp.int32)}
+        fn = steps_mod.make_lm_decode_step(cfg)
+        args = (params_s, cache, batch)
+        seq_ax = "model"
+        cspec = {
+            "k": P(None, bp if B > 1 else None, seq_ax, None, None),
+            "v": P(None, bp if B > 1 else None, seq_ax, None, None),
+            "pos": P(),
+        }
+        in_specs = (pspec, cspec, {"tokens": P(bp if B > 1 else None, None)})
+        out_specs = (P(bp if B > 1 else None, None, None), cspec)
+        mf = 2.0 * d * B  # one token per sequence
+    return Cell(arch, shape, sh["kind"], fn, args, in_specs, out_specs, cfg, mf)
+
+
+# ---------------------------------------------------------------------------
+# GNN / equivariant cells
+# ---------------------------------------------------------------------------
+def _gnn_batch_specs(sh, mesh_axes_names, equivariant, graphcast_targets,
+                     shard_nodes="auto"):
+    axes = tuple(mesh_axes_names)
+    bp = batch_axes(mesh_axes_names)
+    N, E, F, C = sh["n_nodes"], sh["n_edges"], sh["d_feat"], sh["n_classes"]
+    big = N > 500_000
+    if shard_nodes == "auto":
+        node_p = P(bp, None) if big else P(None, None)
+        node_p1 = P(bp) if big else P(None)
+    elif shard_nodes == "all":
+        node_p, node_p1 = P(axes, None), P(axes)
+    elif shard_nodes == "data":
+        node_p, node_p1 = P(bp, None), P(bp)
+    else:  # replicated
+        node_p, node_p1 = P(None, None), P(None)
+    dt = jnp.float32
+    batch = {
+        "node_feats": _sds((N, F), dt),
+        "edge_index": _sds((2, E), jnp.int32),
+    }
+    bspec = {
+        "node_feats": node_p,
+        "edge_index": P(None, axes),
+    }
+    if equivariant:
+        batch |= {
+            "coords": _sds((N, 3), jnp.float32),
+            "edge_mask": _sds((E,), bool),
+            "energy": _sds((), jnp.float32),
+        }
+        bspec |= {
+            "coords": node_p,
+            "edge_mask": P(axes),
+            "energy": P(),
+        }
+    elif graphcast_targets is not None:
+        batch |= {"targets": _sds((N, graphcast_targets), jnp.float32)}
+        bspec |= {"targets": node_p}
+    else:
+        batch |= {
+            "labels": _sds((N,), jnp.int32),
+            "label_mask": _sds((N,), jnp.float32),
+        }
+        bspec |= {
+            "labels": node_p1,
+            "label_mask": node_p1,
+        }
+    return batch, bspec
+
+
+def _gnn_cell(arch, shape, mesh_axes_names, smoke=False, overrides=None):
+    sh = dict((GNN_SMOKE_SHAPES if smoke else GNN_SHAPES)[shape])
+    # pad edge/node counts to device multiples for even sharding
+    if not smoke:
+        sh["n_edges"] = _pad_to(sh["n_edges"], 1024)
+        if sh["n_nodes"] > 500_000:
+            sh["n_nodes"] = _pad_to(sh["n_nodes"], 1024)
+    equivariant = arch in EQV_ARCHS
+    opt = get_optimizer("adamw", 1e-3)
+
+    if equivariant:
+        mod = importlib.import_module(EQV_ARCHS[arch])
+        cfg = mod.SMOKE if smoke else mod.FULL
+        if overrides:
+            cfg = dataclasses.replace(cfg, **overrides)
+        sh["d_feat"] = cfg.d_hidden  # input h is the embedded atom features
+        batch, bspec = _gnn_batch_specs(
+            sh, mesh_axes_names, True, None,
+            shard_nodes=getattr(cfg, "shard_nodes", "auto"),
+        )
+        from repro.models.equivariant import init_params
+
+        fn = steps_mod.make_equivariant_train_step(cfg, opt)
+        N, E, d = sh["n_nodes"], sh["n_edges"], cfg.d_hidden
+        if cfg.kind == "mace":
+            per_layer = (
+                2 * E * cfg.n_rbf * d + 2 * E * d * 9 * d  # radial MLP
+                + E * 9 * d * 3  # msg outer products
+                + 2 * N * 4 * d * d  # product-basis mix
+                + 2 * N * (2 * d * d + d * d)  # node MLP
+            )
+        else:  # egnn
+            per_layer = 2 * E * ((2 * d + 1) * d + d * d) + 2 * E * (d * d + d) \
+                + 2 * N * (2 * d * d + d * d)
+        mf = 3.0 * (cfg.n_layers * per_layer + 2 * N * d * d)  # x3 train
+    else:
+        mod = importlib.import_module(GNN_ARCHS[arch])
+        gc_targets = None
+        n_cls = sh["n_classes"]
+        if arch == "graphcast":
+            gc_targets = 227 if not smoke else 9
+            n_cls = gc_targets
+        cfg = (mod.smoke if smoke else mod.full)(sh["d_feat"], n_cls)
+        if overrides:
+            cfg = dataclasses.replace(cfg, **overrides)
+        if isinstance(cfg.dtype, str):
+            cfg = dataclasses.replace(cfg, dtype=getattr(jnp, cfg.dtype))
+        batch, bspec = _gnn_batch_specs(
+            sh, mesh_axes_names, False, gc_targets,
+            shard_nodes=getattr(cfg, "shard_nodes", "auto"),
+        )
+        from repro.models.gnn import init_params
+
+        fn = steps_mod.make_gnn_train_step(cfg, opt)
+        N, E, d = sh["n_nodes"], sh["n_edges"], cfg.d_hidden
+        if cfg.kind == "gat":
+            w = d * cfg.n_heads
+            per_layer = 2 * N * sh["d_feat"] * w + 4 * E * w + 2 * E * w
+            mf = 3.0 * (cfg.n_layers * per_layer + 2 * N * w * n_cls)
+        else:  # mpnn: edge MLP (3d->d->d) + node MLP (2d->d->d) per layer
+            per_layer = 2 * E * (3 * d * d + d * d) + 2 * N * (2 * d * d + d * d)
+            enc_dec = 2 * N * (sh["d_feat"] * d + d * d) + 2 * N * (d * d + d * n_cls)
+            mf = 3.0 * (cfg.n_layers * per_layer + enc_dec)
+
+    params_s = jax.eval_shape(lambda k: init_params(k, cfg), _key_spec())
+    opt_s = jax.eval_shape(opt.init, params_s)
+    prep = jax.tree.map(lambda _: P(), params_s)
+    args = (params_s, opt_s, batch, _sds((2,), jnp.uint32))
+    in_specs = (prep, jax.tree.map(lambda _: P(), opt_s), bspec, P())
+    out_specs = (prep, jax.tree.map(lambda _: P(), opt_s), {"loss": P()})
+    return Cell(arch, shape, "train", fn, args, in_specs, out_specs, cfg, mf)
+
+
+# ---------------------------------------------------------------------------
+# recsys cells
+# ---------------------------------------------------------------------------
+def _recsys_cell(arch, shape, mesh_axes_names, smoke=False, overrides=None):
+    mod = importlib.import_module("repro.configs.bert4rec")
+    cfg = mod.SMOKE if smoke else mod.FULL
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    sh = dict(RECSYS_SHAPES[shape])
+    if smoke:
+        sh["batch"] = 4
+        sh["cands"] = min(sh.get("cands", 64), 64)
+    bp = batch_axes(mesh_axes_names)
+    axes = tuple(mesh_axes_names)
+    bcfg = cfg.backbone
+    pspec = lm_param_specs(bcfg, mesh_axes_names)
+    from repro.models.bert4rec import init_params
+
+    params_s = jax.eval_shape(lambda k: init_params(k, cfg), _key_spec())
+    B, S = sh["batch"], cfg.seq_len
+    from repro.roofline.flops import recsys_flops
+
+    mf = recsys_flops(cfg, sh["kind"], B, sh.get("cands", 0))
+
+    if sh["kind"] == "train":
+        opt = get_optimizer("adamw", 1e-3)
+        opt_s = jax.eval_shape(opt.init, params_s)
+        batch = {"items": _sds((B, S), jnp.int32)}
+        fn = steps_mod.make_recsys_train_step(cfg, opt)
+        args = (params_s, opt_s, batch, _sds((2,), jnp.uint32))
+        in_specs = (
+            pspec,
+            opt_state_specs("adamw", pspec),
+            {"items": P(bp, None)},
+            P(),
+        )
+        out_specs = (pspec, opt_state_specs("adamw", pspec), {"loss": P()})
+    else:
+        C = sh["cands"]
+        if not smoke and C >= 1_000_000:
+            C = _pad_to(C, 1024)  # even sharding over 512 devices (pad ids repeat)
+        if sh["per_user"]:
+            batch = {
+                "items": _sds((B, S), jnp.int32),
+                "candidates": _sds((B, C), jnp.int32),
+            }
+            bspec = {"items": P(bp, None), "candidates": P(bp, None)}
+            out_specs = P(bp, None)
+        else:
+            batch = {
+                "items": _sds((B, S), jnp.int32),
+                "candidates": _sds((C,), jnp.int32),
+            }
+            big_c = C >= 1_000_000
+            bspec = {
+                "items": P(bp, None) if B > 1 else P(None, None),
+                "candidates": P(axes) if big_c else P(None),
+            }
+            out_specs = P(None, axes) if big_c else P(bp, None)
+        fn = steps_mod.make_recsys_score_step(cfg)
+        args = (params_s, batch)
+        in_specs = (pspec, bspec)
+    return Cell(arch, shape, sh["kind"], fn, args, in_specs, out_specs, cfg, mf)
+
+
+# ---------------------------------------------------------------------------
+# public entry
+# ---------------------------------------------------------------------------
+def build_cell(
+    arch: str,
+    shape: str,
+    mesh_axes_names=("data", "model"),
+    smoke: bool = False,
+    overrides: Optional[dict] = None,
+) -> Cell:
+    if arch in LM_ARCHS:
+        return _lm_cell(arch, shape, mesh_axes_names, smoke, overrides)
+    if arch in GNN_ARCHS or arch in EQV_ARCHS:
+        return _gnn_cell(arch, shape, mesh_axes_names, smoke, overrides)
+    if arch == "bert4rec":
+        return _recsys_cell(arch, shape, mesh_axes_names, smoke, overrides)
+    raise ValueError(arch)

@@ -1,0 +1,17 @@
+"""Core: the paper's coordinated bulk-parallel streaming triangle counter."""
+from repro.core.state import EstimatorState, init_state
+from repro.core.rank import rank_all, RankStructure
+from repro.core.bulk import bulk_update_all, bulk_update_all_jit
+from repro.core.estimate import coarse_estimates, estimate, estimate_jit
+
+__all__ = [
+    "EstimatorState",
+    "init_state",
+    "rank_all",
+    "RankStructure",
+    "bulk_update_all",
+    "bulk_update_all_jit",
+    "coarse_estimates",
+    "estimate",
+    "estimate_jit",
+]

@@ -1,0 +1,168 @@
+"""bulkUpdateAll (paper Section 4): incorporate a batch of edges into all r
+estimators while maintaining the neighborhood sampling invariant (NBSI).
+
+One jit-compiled pure function: (state, W, n_valid, key) -> state'. The three
+steps map 1:1 onto the paper:
+
+  Step 1  level-1 reservoir over E ∪ W            (map + extract/combine)
+  Step 2  rankAll(W) + multisearch for ld/rd, chi+, and the (src, rank)
+          "naming system" decode of the new level-2 edge (Q1/Q2 queries)
+  Step 3  exact multisearch of the wedge complement against the (min,max)
+          sorted batch, with the pos > pos(f2) arrival check
+
+Randomness is counter-based (jax.random.fold_in) so the result distribution is
+identical regardless of device count or batch sharding — required for elastic
+re-scaling and for the coordinated/independent paths to be interchangeable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.rank import RankStructure, rank_all
+from repro.core.state import EstimatorState
+from repro.primitives.search import exact_multisearch
+from repro.primitives.sort import pack2
+
+
+def _step1_level1(state: EstimatorState, W, n_valid, key):
+    """Reservoir-sample level-1 edges over E ∪ W (paper Section 4.2).
+
+    Draw t ~ U[0, m + |W|); t >= m selects replacement edge W[t - m]. For batch
+    size 1 this is exactly classic reservoir sampling.
+    """
+    r = state.r
+    m = state.m_seen
+    total = m + n_valid.astype(jnp.int64)
+    t = jax.random.randint(
+        key, (r,), jnp.int64(0), jnp.maximum(total, 1), dtype=jnp.int64
+    )
+    replace = (t >= m) & (total > 0)
+    idx = jnp.clip(t - m, 0, jnp.maximum(n_valid.astype(jnp.int64) - 1, 0)).astype(
+        jnp.int32
+    )
+    f1 = jnp.where(replace[:, None], W[idx], state.f1)
+    chi = jnp.where(replace, 0, state.chi)
+    f2 = jnp.where(replace[:, None], jnp.int32(-1), state.f2)
+    has_f3 = state.has_f3 & ~replace
+    f1_bpos = jnp.where(replace, idx, -1)  # ephemeral: position of f1 within W
+    return f1, chi, f2, has_f3, f1_bpos
+
+
+def _rank_queries(R: RankStructure, endpoint, other, f1_bpos):
+    """rank(endpoint -> other) for every estimator (paper Observation 4.4).
+
+    Fresh f1 (in W at pos p): the arc (endpoint, pos=p) exists in the structure;
+    its stored rank *is* #arcs on endpoint after p — one exact Q1 multisearch.
+    Old f1: rank = deg_W(endpoint) — realized as the same Q1 search with p = -1
+    (paper footnote 5): key (endpoint, s-1-(-1)) ... = first entry past the
+    segment, so we instead count via two searchsorted bounds on pack2(src, ·).
+    Both paths are computed vectorized and selected per estimator.
+    """
+    s = R.s
+    fresh = f1_bpos >= 0
+    # fresh path: exact search for our own arc in (src, s-1-pos) order
+    qk = pack2(endpoint, (s - 1) - f1_bpos)
+    j, found = exact_multisearch(R.key_desc, qk)
+    rank_fresh = jnp.where(found, R.rank[jnp.maximum(j, 0)], 0)
+    # old path: degree of endpoint in W = width of its src segment.
+    lo = jnp.searchsorted(R.key_desc, pack2(endpoint, jnp.zeros_like(f1_bpos)))
+    hi = jnp.searchsorted(
+        R.key_desc, pack2(endpoint, jnp.full_like(f1_bpos, s))
+    )
+    deg = (hi - lo).astype(jnp.int32)
+    return jnp.where(fresh, rank_fresh, deg)
+
+
+def _step2_level2(f1, chi_minus, f2, has_f3, f1_bpos, R: RankStructure, key):
+    """Update level-2 edges and chi (paper Section 4.3)."""
+    s = R.s
+    u, v = f1[:, 0], f1[:, 1]
+    have_f1 = u >= 0
+
+    ld = jnp.where(have_f1, _rank_queries(R, u, v, f1_bpos), 0)
+    rd = jnp.where(have_f1, _rank_queries(R, v, u, f1_bpos), 0)
+    chi_plus = ld + rd
+    chi_new = chi_minus + chi_plus
+
+    k_coin, k_phi = jax.random.split(key)
+    coin = jax.random.uniform(k_coin, (f1.shape[0],), dtype=jnp.float32)
+    p_new = chi_plus.astype(jnp.float32) / jnp.maximum(
+        chi_new.astype(jnp.float32), 1.0
+    )
+    take_new = have_f1 & (chi_plus > 0) & (coin < p_new)
+
+    # draw phi in [0, chi+) and decode via the (src, rank) naming system
+    phi = jax.random.randint(
+        k_phi, (f1.shape[0],), 0, jnp.maximum(chi_plus, 1), dtype=jnp.int32
+    )
+    t_src = jnp.where(phi < ld, u, v)
+    t_rank = jnp.where(phi < ld, phi, phi - ld)
+    j, found = exact_multisearch(R.key_rank, pack2(t_src, t_rank))
+    j = jnp.maximum(j, 0)
+    cand_a, cand_b = R.src[j], R.dst[j]
+    cand = jnp.stack(
+        [jnp.minimum(cand_a, cand_b), jnp.maximum(cand_a, cand_b)], axis=-1
+    )
+    cand_pos = R.pos[j]
+    take_new = take_new & found  # found is guaranteed when chi_plus>0; belt+braces
+
+    f2_new = jnp.where(take_new[:, None], cand, f2)
+    f2_bpos = jnp.where(take_new, cand_pos, -1)  # ephemeral
+    has_f3 = has_f3 & ~take_new
+    return f2_new, chi_new, has_f3, f2_bpos
+
+
+def _step3_closing(f1, f2, has_f3, f2_bpos, R: RankStructure):
+    """Detect closing edges in W (paper Section 4.4).
+
+    The closing edge of the wedge (f1, f2) joins the two non-shared endpoints.
+    It must appear after f2: for f2 sampled from this batch at pos p2, require
+    batch pos > p2; for older f2 any batch pos qualifies (f2_bpos = -1).
+    """
+    u, v = f1[:, 0], f1[:, 1]
+    a, b = f2[:, 0], f2[:, 1]
+    have_wedge = (u >= 0) & (a >= 0)
+
+    u_shared = (u == a) | (u == b)
+    o1 = jnp.where(u_shared, v, u)
+    a_shared = (a == u) | (a == v)
+    o2 = jnp.where(a_shared, b, a)
+    cmin = jnp.minimum(o1, o2)
+    cmax = jnp.maximum(o1, o2)
+
+    j, found = exact_multisearch(R.ekey, pack2(cmin, cmax))
+    p3 = R.epos[jnp.maximum(j, 0)]
+    closed_now = have_wedge & found & (p3 > f2_bpos)
+    return has_f3 | closed_now
+
+
+def bulk_update_all(
+    state: EstimatorState, W: jax.Array, n_valid: jax.Array, key: jax.Array
+) -> EstimatorState:
+    """Process one batch of edges into all estimators (paper Theorem 4.1).
+
+    W: (s, 2) int32; first n_valid rows are real edges (tail is padding).
+    Cost: O(sort(r) + sort(s)) memory accesses, O(log^2(r+s)) depth — sorts and
+    multisearches only, no per-estimator scalar work.
+    """
+    n_valid = jnp.asarray(n_valid, dtype=jnp.int32)
+    k1, k2 = jax.random.split(key)
+
+    f1, chi_m, f2, has_f3, f1_bpos = _step1_level1(state, W, n_valid, k1)
+    R = rank_all(W, n_valid)
+    f2, chi, has_f3, f2_bpos = _step2_level2(
+        f1, chi_m, f2, has_f3, f1_bpos, R, k2
+    )
+    has_f3 = _step3_closing(f1, f2, has_f3, f2_bpos, R)
+
+    return EstimatorState(
+        f1=f1,
+        chi=chi,
+        f2=f2,
+        has_f3=has_f3,
+        m_seen=state.m_seen + n_valid.astype(jnp.int64),
+    )
+
+
+bulk_update_all_jit = jax.jit(bulk_update_all, donate_argnums=(0,))

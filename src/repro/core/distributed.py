@@ -1,0 +1,373 @@
+"""Coordinated bulk-parallel update on a TPU mesh (DESIGN.md Section 5).
+
+The paper's distinction between "independent bulk parallel" (every processor
+re-does the batch work; total work O(p * s log s)) and "coordinated" (shared
+structure built once; O(s log s)) lifts from cache lines to ICI links:
+
+* ``make_pjit_update(mesh, scheme)`` — one jit program over the whole mesh.
+    - scheme="independent":     W replicated; each device sorts the full batch
+      for its estimator shard. Zero collectives, p-times duplicated sort FLOPs.
+    - scheme="coordinated_xla": W sharded; XLA's SPMD partitioner inserts the
+      collectives for the global sort/searches automatically.
+
+* ``make_coordinated_update(mesh)`` — the explicit shard_map scheme:
+    1. Arcs are **hash-partitioned by src** with one all_to_all: every arc of a
+       vertex lands on its owner device, so ranks computed locally *are* global
+       ranks (the sample-sort key-range partitioning of the PCO algorithm,
+       specialized to the (src, ·) composite keys the queries use).
+    2. The closing-edge index is hash-partitioned by canonical min-endpoint.
+    3. All estimator lookups (level-1 extract, Q1 rank/degree, Q2 naming-system
+       decode, Q3 closing) become **routed multisearches**: queries travel to
+       the owner shard via a capacity-padded all_to_all, are answered with
+       local searchsorted, and return by the inverse exchange. Estimator state
+       never moves — only 8/16-byte query records do.
+
+Capacity: like MoE dispatch, per-(sender,receiver) buffers are padded to
+``cap = ceil(volume/p * capacity_factor)``. Hot vertices can overflow a bucket;
+the update returns an ``overflow`` diagnostic that production monitors (and
+bumps the factor between batches — state is unaffected by a re-run). Tests
+assert zero overflow at the sizes exercised.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.bulk import bulk_update_all
+from repro.core.state import EstimatorState
+from repro.primitives.segscan import segment_starts, segmented_iota
+from repro.primitives.search import exact_multisearch
+from repro.primitives.sort import pack2, sort_by_key
+
+INF64 = jnp.int64(0x7FFFFFFFFFFFFFFF)
+_HASH_MULT = jnp.uint32(2654435761)
+
+
+# --------------------------------------------------------------------------
+# pjit paths
+# --------------------------------------------------------------------------
+def make_pjit_update(mesh, scheme: str = "coordinated_xla"):
+    """jit-compiled bulk update with mesh shardings (see module docstring)."""
+    axes = tuple(mesh.axis_names)
+    est = NamedSharding(mesh, P(axes))
+    est2 = NamedSharding(mesh, P(axes, None))
+    rep = NamedSharding(mesh, P())
+    w_sh = rep if scheme == "independent" else NamedSharding(mesh, P(axes, None))
+    state_sh = EstimatorState(f1=est2, chi=est, f2=est2, has_f3=est, m_seen=rep)
+    return jax.jit(
+        bulk_update_all,
+        in_shardings=(state_sh, w_sh, rep, rep),
+        out_shardings=state_sh,
+        donate_argnums=(0,),
+    )
+
+
+# --------------------------------------------------------------------------
+# explicit coordinated shard_map path
+# --------------------------------------------------------------------------
+def _bucket(x, p):
+    """Multiplicative hash bucket in [0, p) — owner device of vertex x."""
+    return ((x.astype(jnp.uint32) * _HASH_MULT) % jnp.uint32(p)).astype(jnp.int32)
+
+
+def _route_round_trip(payload, row_valid, dest, axes, p, cap, answer_fn, n_ans):
+    """Send (q, k) int32 payload rows to ``dest`` devices, answer, send back.
+
+    answer_fn(recv_payload (p*cap, k), recv_valid (p*cap,)) -> (p*cap, n_ans) i32.
+    Returns (ans (q, n_ans), overflow_count). Overflowed rows answer 0.
+    """
+    q, k = payload.shape
+    slot_key = dest.astype(jnp.int64) * (q + 1) + jnp.arange(q)
+    _, order = sort_by_key(slot_key, jnp.arange(q))
+    d_sorted = dest[order]
+    slot = segmented_iota(segment_starts(d_sorted.astype(jnp.int64)))
+    send_idx = d_sorted.astype(jnp.int64) * cap + slot
+    ok = (slot < cap) & row_valid[order]
+    overflow = jnp.sum((slot >= cap) & row_valid[order])
+    # not-ok rows are routed out of bounds; mode="drop" discards them
+    safe_idx = jnp.where(ok, send_idx, p * cap)
+
+    send_buf = jnp.zeros((p * cap, k), jnp.int32)
+    send_buf = send_buf.at[safe_idx].set(payload[order], mode="drop")
+    send_valid = (
+        jnp.zeros((p * cap,), jnp.int32)
+        .at[safe_idx]
+        .max(ok.astype(jnp.int32), mode="drop")
+    )
+
+    recv = jax.lax.all_to_all(send_buf, axes, 0, 0, tiled=True)
+    recv_valid = (
+        jax.lax.all_to_all(send_valid, axes, 0, 0, tiled=True).astype(bool)
+    )
+
+    ans = answer_fn(recv, recv_valid)  # (p*cap, n_ans)
+    back = jax.lax.all_to_all(ans, axes, 0, 0, tiled=True)
+
+    gather_idx = jnp.where(ok, send_idx, 0)
+    out_sorted = jnp.where(ok[:, None], back[gather_idx], 0)
+    out = jnp.zeros((q, n_ans), jnp.int32).at[order].set(out_sorted)
+    return out, overflow
+
+
+class _LocalStruct(NamedTuple):
+    """Per-device shard of the shared structure (arcs of owned vertices)."""
+
+    key_desc: jax.Array  # (n,) int64 pack2(src, S-1-pos)
+    key_rank: jax.Array  # (n,) int64 pack2(src, rank)
+    src: jax.Array
+    dst: jax.Array
+    pos: jax.Array
+    rank: jax.Array
+    ekey: jax.Array  # (ne,) int64 pack2(min,max) of owned closing-index edges
+    epos: jax.Array
+
+
+def _build_structures(W, pos_g, valid_e, axes, p, S, cap_a, cap_e):
+    """all_to_all arcs/edges to owner shards, then sort + rank locally."""
+    src = jnp.concatenate([W[:, 0], W[:, 1]])
+    dst = jnp.concatenate([W[:, 1], W[:, 0]])
+    pos = jnp.concatenate([pos_g, pos_g])
+    valid_a = jnp.concatenate([valid_e, valid_e])
+
+    arcs = jnp.stack([src, dst, pos], axis=1)
+    recv, ovf_a = _route_one_way(arcs, valid_a, _bucket(src, p), axes, p, cap_a)
+    a_src, a_dst, a_pos, a_valid = (
+        recv[:, 0],
+        recv[:, 1],
+        recv[:, 2],
+        recv[:, 3].astype(bool),
+    )
+    kd = jnp.where(a_valid, pack2(a_src, (S - 1) - a_pos), INF64)
+    # slim sort: src and pos are recoverable from the packed key, so the sort
+    # carries only (key, dst) — 12B/record instead of 20B (EXPERIMENTS §Perf-3)
+    kd_s, dst_s = sort_by_key(kd, a_dst)
+    src_s = (kd_s >> 32).astype(jnp.int32)
+    pos_s = (S - 1) - (kd_s & jnp.int64(0xFFFFFFFF)).astype(jnp.int32)
+    n_val = jnp.sum(a_valid)
+    rank_s = segmented_iota(segment_starts(src_s.astype(jnp.int64)))
+    kr = jnp.where(jnp.arange(kd_s.shape[0]) < n_val, pack2(src_s, rank_s), INF64)
+
+    emin = jnp.minimum(W[:, 0], W[:, 1])
+    emax = jnp.maximum(W[:, 0], W[:, 1])
+    edges = jnp.stack([emin, emax, pos_g], axis=1)
+    recv_e, ovf_e = _route_one_way(
+        edges, valid_e, _bucket(emin, p), axes, p, cap_e
+    )
+    e_valid = recv_e[:, 3].astype(bool)
+    ek = jnp.where(e_valid, pack2(recv_e[:, 0], recv_e[:, 1]), INF64)
+    ek_s, epos_s = sort_by_key(ek, recv_e[:, 2])
+
+    struct = _LocalStruct(
+        key_desc=kd_s,
+        key_rank=kr,
+        src=src_s,
+        dst=dst_s,
+        pos=pos_s,
+        rank=rank_s,
+        ekey=ek_s,
+        epos=epos_s,
+    )
+    return struct, ovf_a + ovf_e
+
+
+def _route_one_way(payload, row_valid, dest, axes, p, cap):
+    """Like _route_round_trip but the records stay at the destination."""
+    q, k = payload.shape
+    slot_key = dest.astype(jnp.int64) * (q + 1) + jnp.arange(q)
+    _, order = sort_by_key(slot_key, jnp.arange(q))
+    d_sorted = dest[order]
+    slot = segmented_iota(segment_starts(d_sorted.astype(jnp.int64)))
+    send_idx = d_sorted.astype(jnp.int64) * cap + slot
+    ok = (slot < cap) & row_valid[order]
+    overflow = jnp.sum((slot >= cap) & row_valid[order])
+    safe_idx = jnp.where(ok, send_idx, p * cap)  # drop not-ok rows
+    buf = jnp.zeros((p * cap, k + 1), jnp.int32)
+    rows = jnp.concatenate(
+        [payload[order], ok[:, None].astype(jnp.int32)], axis=1
+    )
+    buf = buf.at[safe_idx].set(rows, mode="drop")
+    recv = jax.lax.all_to_all(buf, axes, 0, 0, tiled=True)
+    return recv, overflow
+
+
+def make_coordinated_update(
+    mesh, r: int, s: int, capacity_factor: float = 2.0
+):
+    """Explicit coordinated bulk update over ``mesh`` (all axes flattened).
+
+    r: total estimators; s: total batch size. Both divisible by device count.
+    Returns jit(f)(state, W, n_valid, key) -> (state, overflow_count) with the
+    estimator/W shardings baked in.
+    """
+    axes = tuple(mesh.axis_names)
+    p = mesh.size
+    assert r % p == 0 and s % p == 0, (r, s, p)
+    s_local = s // p
+    cap_a = max(int(2 * s_local * capacity_factor / p), 8)
+    cap_e = max(int(s_local * capacity_factor / p), 8)
+    cap_q = max(int(2 * (r // p) * capacity_factor / p), 8)
+
+    def update(state: EstimatorState, W, n_valid, key):
+        me = jax.lax.axis_index(axes)
+        r_local = state.f1.shape[0]
+        pos_g = me.astype(jnp.int32) * s_local + jnp.arange(s_local, dtype=jnp.int32)
+        valid_e = pos_g < n_valid
+        dev_key = jax.random.fold_in(key, me)
+        k1, k2, k3 = jax.random.split(dev_key, 3)
+
+        struct, ovf_build = _build_structures(
+            W, pos_g, valid_e, axes, p, S=s, cap_a=cap_a, cap_e=cap_e
+        )
+
+        # ---- Step 1: level-1 reservoir; fetch W[idx] from owner shard ----
+        m = state.m_seen
+        total = m + n_valid.astype(jnp.int64)
+        t = jax.random.randint(
+            k1, (r_local,), jnp.int64(0), jnp.maximum(total, 1), dtype=jnp.int64
+        )
+        replace = (t >= m) & (total > 0)
+        idx = jnp.clip(
+            t - m, 0, jnp.maximum(n_valid.astype(jnp.int64) - 1, 0)
+        ).astype(jnp.int32)
+
+        def fetch_edge(recv, recv_valid):
+            local = recv[:, 0] - me.astype(jnp.int32) * s_local
+            local = jnp.clip(local, 0, s_local - 1)
+            return W[local]
+
+        edge_ans, ovf1 = _route_round_trip(
+            idx[:, None], replace, idx // s_local, axes, p, cap_q, fetch_edge, 2
+        )
+        f1 = jnp.where(replace[:, None], edge_ans, state.f1)
+        chi_minus = jnp.where(replace, 0, state.chi)
+        f2 = jnp.where(replace[:, None], jnp.int32(-1), state.f2)
+        has_f3 = state.has_f3 & ~replace
+        f1_bpos = jnp.where(replace, idx, -1)
+
+        # ---- Step 2: rank queries (u and v stacked into one routed batch) ----
+        u, v = f1[:, 0], f1[:, 1]
+        have_f1 = u >= 0
+        ep = jnp.concatenate([u, v])
+        bp = jnp.concatenate([f1_bpos, f1_bpos])
+        qvalid = jnp.concatenate([have_f1, have_f1])
+
+        def rank_answer(recv, recv_valid):
+            endp, bpos = recv[:, 0], recv[:, 1]
+            fresh = bpos >= 0
+            j, found = exact_multisearch(
+                struct.key_desc, pack2(endp, (s - 1) - bpos)
+            )
+            r_fresh = jnp.where(found, struct.rank[jnp.maximum(j, 0)], 0)
+            lo = jnp.searchsorted(
+                struct.key_desc, pack2(endp, jnp.zeros_like(bpos))
+            )
+            hi = jnp.searchsorted(
+                struct.key_desc, pack2(endp, jnp.full_like(bpos, s))
+            )
+            deg = (hi - lo).astype(jnp.int32)
+            return jnp.where(fresh, r_fresh, deg)[:, None]
+
+        payload = jnp.stack([ep, bp], axis=1)
+        rk, ovf2 = _route_round_trip(
+            payload, qvalid, _bucket(ep, p), axes, p, cap_q, rank_answer, 1
+        )
+        ld, rd = rk[:r_local, 0], rk[r_local:, 0]
+        chi_plus = ld + rd
+        chi = chi_minus + chi_plus
+
+        coin = jax.random.uniform(k2, (r_local,), dtype=jnp.float32)
+        p_new = chi_plus.astype(jnp.float32) / jnp.maximum(
+            chi.astype(jnp.float32), 1.0
+        )
+        take_new = have_f1 & (chi_plus > 0) & (coin < p_new)
+        phi = jax.random.randint(
+            k3, (r_local,), 0, jnp.maximum(chi_plus, 1), dtype=jnp.int32
+        )
+        t_src = jnp.where(phi < ld, u, v)
+        t_rank = jnp.where(phi < ld, phi, phi - ld)
+
+        def decode_answer(recv, recv_valid):
+            ts, tr = recv[:, 0], recv[:, 1]
+            j, found = exact_multisearch(struct.key_rank, pack2(ts, tr))
+            j = jnp.maximum(j, 0)
+            a, b = struct.src[j], struct.dst[j]
+            return jnp.stack(
+                [
+                    jnp.where(found, jnp.minimum(a, b), -1),
+                    jnp.where(found, jnp.maximum(a, b), -1),
+                    jnp.where(found, struct.pos[j], -1),
+                ],
+                axis=1,
+            )
+
+        dec, ovf3 = _route_round_trip(
+            jnp.stack([t_src, t_rank], axis=1),
+            take_new,
+            _bucket(t_src, p),
+            axes,
+            p,
+            cap_q,
+            decode_answer,
+            3,
+        )
+        found2 = dec[:, 0] >= 0
+        take_new = take_new & found2
+        f2 = jnp.where(take_new[:, None], dec[:, :2], f2)
+        f2_bpos = jnp.where(take_new, dec[:, 2], -1)
+        has_f3 = has_f3 & ~take_new
+
+        # ---- Step 3: closing-edge lookups ----
+        a, b = f2[:, 0], f2[:, 1]
+        have_wedge = have_f1 & (a >= 0)
+        u_sh = (u == a) | (u == b)
+        o1 = jnp.where(u_sh, v, u)
+        a_sh = (a == u) | (a == v)
+        o2 = jnp.where(a_sh, b, a)
+        cmin, cmax = jnp.minimum(o1, o2), jnp.maximum(o1, o2)
+
+        def close_answer(recv, recv_valid):
+            j, found = exact_multisearch(
+                struct.ekey, pack2(recv[:, 0], recv[:, 1])
+            )
+            return jnp.where(found, struct.epos[jnp.maximum(j, 0)], -1)[:, None]
+
+        cls, ovf4 = _route_round_trip(
+            jnp.stack([cmin, cmax], axis=1),
+            have_wedge,
+            _bucket(cmin, p),
+            axes,
+            p,
+            cap_q,
+            close_answer,
+            1,
+        )
+        p3 = cls[:, 0]
+        closed_now = have_wedge & (p3 >= 0) & (p3 > f2_bpos)
+        has_f3 = has_f3 | closed_now
+
+        new_state = EstimatorState(
+            f1=f1,
+            chi=chi,
+            f2=f2,
+            has_f3=has_f3,
+            m_seen=state.m_seen + n_valid.astype(jnp.int64),
+        )
+        overflow = ovf_build + ovf1 + ovf2 + ovf3 + ovf4
+        return new_state, jax.lax.psum(overflow, axes)
+
+    est = P(axes)
+    est2 = P(axes, None)
+    rep = P()
+    state_spec = EstimatorState(f1=est2, chi=est, f2=est2, has_f3=est, m_seen=rep)
+    shmapped = jax.shard_map(
+        update,
+        mesh=mesh,
+        in_specs=(state_spec, P(axes, None), rep, rep),
+        out_specs=(state_spec, rep),
+        check_vma=False,
+    )
+    return jax.jit(shmapped, donate_argnums=(0,))

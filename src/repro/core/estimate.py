@@ -1,0 +1,31 @@
+"""Turning NBSI tuples into a triangle-count estimate (paper Lemma 3.2, Thm 3.4).
+
+Per estimator: X = chi * m if the closing edge has been seen else 0; E[X] = tau.
+The sharp estimate is a median-of-means over g groups of r/g estimators each.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.state import EstimatorState
+
+
+def coarse_estimates(state: EstimatorState) -> jax.Array:
+    """(r,) float64 unbiased coarse estimates (Lemma 3.2)."""
+    x = state.chi.astype(jnp.float64) * state.m_seen.astype(jnp.float64)
+    return jnp.where(state.has_f3, x, 0.0)
+
+
+def estimate(state: EstimatorState, groups: int = 9) -> jax.Array:
+    """Median-of-means aggregate (Theorem 3.4). groups must divide r (or we trim)."""
+    x = coarse_estimates(state)
+    r = x.shape[0]
+    per = r // groups
+    if per == 0:
+        return jnp.mean(x)
+    x = x[: per * groups].reshape(groups, per)
+    return jnp.median(jnp.mean(x, axis=1))
+
+
+estimate_jit = jax.jit(estimate, static_argnums=(1,))

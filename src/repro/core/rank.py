@@ -1,0 +1,89 @@
+"""rankAll (paper Definition 4.2 / Lemma 4.3) and the batch closing-edge index.
+
+Given a batch W of s edges (last batch may be padded; ``n_valid`` marks the real
+prefix), build the shared structure every estimator queries against:
+
+  * 2s directed arcs {src, dst, pos}, sorted by (src asc, pos desc). In that
+    order, rank(src->dst) = offset within the src segment (segmented iota) —
+    exactly Lemma 4.3's sort + scan-with-reset.
+  * By the paper's observation after Fig. 2, the same order is also sorted by
+    (src asc, rank asc), so Q2 lookups ("src = u, rank = a") reuse the array.
+  * A (min,max)-sorted copy of W for closing-edge (Step 3) exact multisearch.
+
+All lookups are multisearches over packed int64 keys. Invalid (padding) arcs get
+key = +INF so they sort to the tail and are excluded by key inequality alone.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.primitives.segscan import segment_starts, segmented_iota
+from repro.primitives.sort import pack2, sort_by_key
+
+INF64 = jnp.int64(0x7FFFFFFFFFFFFFFF)
+
+
+class RankStructure(NamedTuple):
+    """Shared per-batch structure (paper Section 4.3). All arrays length 2s except
+    the edge index (length s)."""
+
+    # arcs sorted by (src asc, pos desc)  ==  (src asc, rank asc)
+    key_desc: jax.Array  # (2s,) int64: pack2(src, s-1-pos); INF for padding
+    key_rank: jax.Array  # (2s,) int64: pack2(src, rank);    INF for padding
+    src: jax.Array  # (2s,) int32
+    dst: jax.Array  # (2s,) int32
+    pos: jax.Array  # (2s,) int32
+    rank: jax.Array  # (2s,) int32
+    # batch edges sorted by canonical (min,max) key
+    ekey: jax.Array  # (s,) int64: pack2(min, max); INF for padding
+    epos: jax.Array  # (s,) int32
+
+    @property
+    def s(self) -> int:
+        return self.ekey.shape[0]
+
+
+def rank_all(W: jax.Array, n_valid: jax.Array) -> RankStructure:
+    """Build the RankStructure for batch ``W`` ((s,2) int32, first n_valid real)."""
+    s = W.shape[0]
+    pos1 = jnp.arange(s, dtype=jnp.int32)
+    valid_e = pos1 < n_valid
+
+    # --- directed arcs, both orientations (paper: map + concat) ---
+    src = jnp.concatenate([W[:, 0], W[:, 1]])
+    dst = jnp.concatenate([W[:, 1], W[:, 0]])
+    pos = jnp.concatenate([pos1, pos1])
+    valid_a = jnp.concatenate([valid_e, valid_e])
+
+    # sort by (src asc, pos desc): minor key = s-1-pos
+    kd = pack2(src, (s - 1) - pos)
+    kd = jnp.where(valid_a, kd, INF64)
+    kd_s, src_s, dst_s, pos_s = sort_by_key(kd, src, dst, pos)
+
+    # rank = offset within src segment (scan-with-reset over the sorted arcs)
+    starts = segment_starts(src_s.astype(jnp.int64))
+    rank_s = segmented_iota(starts)
+
+    kr = pack2(src_s, rank_s)
+    n_valid_a = 2 * n_valid
+    kr = jnp.where(jnp.arange(2 * s) < n_valid_a, kr, INF64)
+
+    # --- closing-edge index: canonical (min,max) sorted edges ---
+    emin = jnp.minimum(W[:, 0], W[:, 1])
+    emax = jnp.maximum(W[:, 0], W[:, 1])
+    ek = jnp.where(valid_e, pack2(emin, emax), INF64)
+    ek_s, epos_s = sort_by_key(ek, pos1)
+
+    return RankStructure(
+        key_desc=kd_s,
+        key_rank=kr,
+        src=src_s,
+        dst=dst_s,
+        pos=pos_s,
+        rank=rank_s,
+        ekey=ek_s,
+        epos=epos_s,
+    )

@@ -1,0 +1,73 @@
+"""The two strawman parallelization schemes from paper Section 1, as baselines.
+
+* naive_parallel: r independent estimators, each processing every edge —
+  O(r*m) work. Implemented as a lax.scan over edges of a vmapped single-edge
+  update; only usable at toy sizes (that is the paper's point).
+* independent_bulk: every device runs the full bulk algorithm on the whole
+  batch for its estimator shard — same code as bulk_update_all; the p-times
+  duplicated sort work appears at the *sharding* level (W replicated), so the
+  scheme lives in repro.core.distributed / launch.dryrun, not here.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.state import EstimatorState
+
+
+def _edge_update(state: EstimatorState, inputs):
+    """One stream arrival against all estimators (vectorized naive scheme)."""
+    (edge, key) = inputs
+    u, v = edge[0], edge[1]
+    r = state.r
+    m_new = state.m_seen + 1
+    k1, k2 = jax.random.split(key)
+
+    take1 = jax.random.uniform(k1, (r,)) < 1.0 / m_new.astype(jnp.float32)
+    f1 = jnp.where(take1[:, None], edge[None, :], state.f1)
+    chi = jnp.where(take1, 0, state.chi)
+    f2 = jnp.where(take1[:, None], jnp.int32(-1), state.f2)
+    has_f3 = state.has_f3 & ~take1
+
+    live = ~take1 & (f1[:, 0] >= 0)
+    adj = live & (
+        (f1[:, 0] == u) | (f1[:, 0] == v) | (f1[:, 1] == u) | (f1[:, 1] == v)
+    )
+    chi = chi + adj.astype(jnp.int32)
+    take2 = adj & (
+        jax.random.uniform(k2, (r,)) < 1.0 / jnp.maximum(chi, 1).astype(jnp.float32)
+    )
+    ce = jnp.stack([jnp.minimum(u, v), jnp.maximum(u, v)])
+    f2 = jnp.where(take2[:, None], ce[None, :], f2)
+    has_f3 = has_f3 & ~take2
+
+    chk = adj & ~take2 & (f2[:, 0] >= 0)
+    a, b = f2[:, 0], f2[:, 1]
+    u_sh = (f1[:, 0] == a) | (f1[:, 0] == b)
+    o1 = jnp.where(u_sh, f1[:, 1], f1[:, 0])
+    a_sh = (a == f1[:, 0]) | (a == f1[:, 1])
+    o2 = jnp.where(a_sh, b, a)
+    closes = (jnp.minimum(o1, o2) == ce[0]) & (jnp.maximum(o1, o2) == ce[1])
+    has_f3 = has_f3 | (chk & closes)
+
+    return EstimatorState(f1, chi, f2, has_f3, m_new), None
+
+
+def naive_parallel_update(state: EstimatorState, W, n_valid, key):
+    """Process a batch edge-at-a-time across all estimators (O(r*s) work)."""
+    s = W.shape[0]
+    keys = jax.random.split(key, s)
+
+    def body(st, inp):
+        edge, k, i = inp
+        new_st, _ = _edge_update(st, (edge, k))
+        skip = i >= n_valid
+        return jax.tree.map(lambda a, b: jnp.where(skip, a, b), st, new_st), None
+
+    idx = jnp.arange(s, dtype=jnp.int32)
+    state, _ = jax.lax.scan(body, state, (W, keys, idx))
+    return state
+
+
+naive_parallel_update_jit = jax.jit(naive_parallel_update, donate_argnums=(0,))

@@ -1,0 +1,37 @@
+"""Estimator state: r neighborhood-sampling estimators as a struct-of-arrays pytree.
+
+Per estimator (paper Invariant 3.1): level-1 edge f1, neighborhood size chi,
+level-2 edge f2, and whether the closing edge f3 has been seen. Edges are stored
+as (u, v) int32 pairs with -1 sentinel for "empty"; f2 is kept in canonical
+(min, max) order. m_seen is the global stream length so far (int64).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+EMPTY = jnp.int32(-1)
+
+
+class EstimatorState(NamedTuple):
+    f1: jax.Array  # (r, 2) int32, -1 if unset
+    chi: jax.Array  # (r,)  int32, |Gamma(f1)| so far
+    f2: jax.Array  # (r, 2) int32 canonical (min,max), -1 if unset
+    has_f3: jax.Array  # (r,)  bool
+    m_seen: jax.Array  # ()    int64, total edges seen
+
+    @property
+    def r(self) -> int:
+        return self.f1.shape[0]
+
+
+def init_state(r: int) -> EstimatorState:
+    return EstimatorState(
+        f1=jnp.full((r, 2), EMPTY, dtype=jnp.int32),
+        chi=jnp.zeros((r,), dtype=jnp.int32),
+        f2=jnp.full((r, 2), EMPTY, dtype=jnp.int32),
+        has_f3=jnp.zeros((r,), dtype=bool),
+        m_seen=jnp.int64(0),
+    )

@@ -1,0 +1,1 @@
+"""Data pipeline: streaming graph generators, neighbor samplers, token streams."""

@@ -1,0 +1,92 @@
+"""Synthetic streaming graphs with known (or computable) triangle counts.
+
+The paper evaluates on SNAP social graphs + a 167GB synthetic power-law stream;
+offline we generate Erdos-Renyi, Barabasi-Albert power-law, and planted-triangle
+streams, shuffled into arrival order, plus a batch iterator that pads the last
+batch (mirroring the bulk-arrival model).
+"""
+from __future__ import annotations
+
+from typing import Iterator
+
+import numpy as np
+
+
+def erdos_renyi_stream(n: int, m: int, seed: int = 0) -> np.ndarray:
+    """m distinct uniform edges on n vertices, in random arrival order."""
+    rng = np.random.default_rng(seed)
+    seen: set[tuple[int, int]] = set()
+    edges = []
+    while len(edges) < m:
+        u, v = rng.integers(0, n, size=2)
+        if u == v:
+            continue
+        e = (min(int(u), int(v)), max(int(u), int(v)))
+        if e not in seen:
+            seen.add(e)
+            edges.append(e)
+    return np.array(edges, dtype=np.int32)
+
+
+def barabasi_albert_stream(n: int, k: int, seed: int = 0) -> np.ndarray:
+    """BA preferential-attachment graph (power-law degrees), arrival-shuffled."""
+    rng = np.random.default_rng(seed)
+    targets = list(range(k))
+    repeated: list[int] = []
+    edges = []
+    for v in range(k, n):
+        chosen = set()
+        for t in targets:
+            chosen.add(t)
+        for u in chosen:
+            edges.append((min(u, v), max(u, v)))
+        repeated.extend(chosen)
+        repeated.extend([v] * len(chosen))
+        # next targets: preferential attachment sample
+        targets = [repeated[rng.integers(0, len(repeated))] for _ in range(k)]
+    e = np.array(sorted(set(map(tuple, edges))), dtype=np.int32)
+    rng.shuffle(e)
+    return e
+
+
+def planted_triangle_stream(
+    n_triangles: int, n_noise_edges: int, n_vertices: int, seed: int = 0
+) -> tuple[np.ndarray, int]:
+    """Disjoint planted triangles + bipartite noise edges (trianglefree noise).
+
+    Returns (edges, exact_tau). Noise edges connect {A} x {B} vertex classes
+    disjoint from the triangle vertices so tau == n_triangles exactly.
+    """
+    rng = np.random.default_rng(seed)
+    edges = []
+    v = 0
+    for _ in range(n_triangles):
+        a, b, c = v, v + 1, v + 2
+        v += 3
+        edges += [(a, b), (a, c), (b, c)]
+    base = v
+    half = max(n_vertices - base, 2) // 2
+    seen: set[tuple[int, int]] = set()
+    while len(seen) < n_noise_edges:
+        a = base + int(rng.integers(0, half))
+        b = base + half + int(rng.integers(0, half))
+        if (a, b) not in seen:
+            seen.add((a, b))
+    edges += sorted(seen)
+    e = np.array(edges, dtype=np.int32)
+    rng.shuffle(e)
+    return e, n_triangles
+
+
+def batches(
+    edges: np.ndarray, batch_size: int
+) -> Iterator[tuple[np.ndarray, int]]:
+    """Yield (W, n_valid) with W padded to batch_size (sentinel 0,0 rows)."""
+    m = len(edges)
+    for lo in range(0, m, batch_size):
+        chunk = edges[lo : lo + batch_size]
+        nv = len(chunk)
+        if nv < batch_size:
+            pad = np.zeros((batch_size - nv, 2), dtype=edges.dtype)
+            chunk = np.concatenate([chunk, pad], axis=0)
+        yield chunk, nv

@@ -1,0 +1,73 @@
+"""Straggler-tolerant host-side prefetching (DESIGN.md §7).
+
+A background thread keeps a bounded queue of ready batches. ``get`` takes the
+next batch; if the producer misses the deadline (slow disk / remote storage /
+straggling feature service), the consumer proceeds with the most recent
+*backup* batch instead of stalling the whole mesh — bounded staleness, counted
+and reported. This is the standard data-echo / backup-batch trick for keeping
+thousand-chip steps from being gated on one slow host.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator, Optional
+
+
+_DONE = object()  # sentinel distinct from any legitimate batch (even None)
+
+
+class PrefetchQueue:
+    def __init__(
+        self,
+        source: Iterator,
+        depth: int = 4,
+        deadline_s: Optional[float] = None,
+    ):
+        self.q: queue.Queue = queue.Queue(maxsize=depth)
+        self.deadline_s = deadline_s
+        self.backup = None
+        self.stale_steps = 0
+        self.done = False
+        self._thread = threading.Thread(
+            target=self._produce, args=(source,), daemon=True
+        )
+        self._thread.start()
+
+    def _produce(self, source):
+        try:
+            for item in source:
+                self.q.put(item)
+        finally:
+            self.done = True
+            self.q.put(_DONE)
+
+    def get(self):
+        """Next batch, or the backup batch on deadline miss (stale += 1)."""
+        try:
+            item = self.q.get(timeout=self.deadline_s)
+        except queue.Empty:
+            if self.backup is None:
+                item = self.q.get()  # first batch: nothing to fall back on
+            else:
+                self.stale_steps += 1
+                return self.backup, True
+        if item is _DONE:
+            raise StopIteration
+        self.backup = item
+        return item, False
+
+
+def work_stealing_shards(
+    shard_fns: list[Callable[[], Iterator]],
+) -> Iterator:
+    """Round-robin over per-file shard iterators, skipping exhausted/slow ones
+    (host-level work stealing over file shards)."""
+    iters = [fn() for fn in shard_fns]
+    live = list(range(len(iters)))
+    while live:
+        for i in list(live):
+            try:
+                yield next(iters[i])
+            except StopIteration:
+                live.remove(i)

@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: in-VMEM bitonic sort of (key, value) tiles.
+
+The leaf sorter of the mesh sample sort (DESIGN.md Section 5): tiles that fit
+VMEM are sorted with a compile-time-unrolled bitonic network — log^2(n)
+compare-exchange sweeps expressed as reshape + where (no gathers, no
+data-dependent control flow), which is the TPU-native analogue of the PCO
+sample sort's in-cache base case.
+
+Grid: one tile per step; each tile sorted independently (the merge of sorted
+tiles is done by the caller — sample sort buckets are disjoint in key range).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _compare_exchange(k, v, j, stage):
+    """One bitonic substage: partner distance d=2^j, direction from bit `stage`."""
+    n = k.shape[-1]
+    d = 1 << j
+    kr = k.reshape(n // (2 * d), 2, d)
+    vr = v.reshape(n // (2 * d), 2, d)
+    lo_k, hi_k = kr[:, 0, :], kr[:, 1, :]
+    lo_v, hi_v = vr[:, 0, :], vr[:, 1, :]
+    # ascending iff bit `stage+1` of the element index is 0
+    idx = jax.lax.broadcasted_iota(jnp.int32, (n // (2 * d), d), 0) * (2 * d)
+    asc = ((idx >> (stage + 1)) & 1) == 0
+    swap = jnp.where(asc, lo_k > hi_k, lo_k < hi_k)
+    new_lo_k = jnp.where(swap, hi_k, lo_k)
+    new_hi_k = jnp.where(swap, lo_k, hi_k)
+    new_lo_v = jnp.where(swap, hi_v, lo_v)
+    new_hi_v = jnp.where(swap, lo_v, hi_v)
+    k = jnp.stack([new_lo_k, new_hi_k], axis=1).reshape(n)
+    v = jnp.stack([new_lo_v, new_hi_v], axis=1).reshape(n)
+    return k, v
+
+
+def _bitonic_kernel(k_ref, v_ref, ko_ref, vo_ref, *, log_n: int):
+    k = k_ref[...]
+    v = v_ref[...]
+    for stage in range(log_n):
+        for j in range(stage, -1, -1):
+            k, v = _compare_exchange(k, v, j, stage)
+    ko_ref[...] = k
+    vo_ref[...] = v
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def bitonic_sort_tiles(keys, values, *, tile: int = 1024, interpret: bool = True):
+    """Sort each consecutive ``tile`` of (keys, values) independently.
+
+    keys: (n,) with n padded to a power-of-two tile; pad with +INF to keep real
+    entries in front. values: (n,) same length payload (e.g. packed positions).
+    """
+    assert tile & (tile - 1) == 0, "tile must be a power of two"
+    n = keys.shape[0]
+    n_pad = pl.cdiv(n, tile) * tile
+    maxval = jnp.array(jnp.iinfo(keys.dtype).max, keys.dtype)
+    k = jnp.pad(keys, (0, n_pad - n), constant_values=maxval)
+    v = jnp.pad(values, (0, n_pad - n))
+
+    grid = (n_pad // tile,)
+    log_n = tile.bit_length() - 1
+    ko, vo = pl.pallas_call(
+        functools.partial(_bitonic_kernel, log_n=log_n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad,), keys.dtype),
+            jax.ShapeDtypeStruct((n_pad,), values.dtype),
+        ],
+        interpret=interpret,
+    )(k, v)
+    return ko[:n], vo[:n]

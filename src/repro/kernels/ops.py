@@ -1,0 +1,54 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On TPU the kernels run compiled (interpret=False); everywhere else (this CPU
+container, unit tests) they run in interpret mode, which executes the same
+kernel body in Python — the BlockSpec tiling, grid sequencing, and SMEM carry
+logic are exercised identically.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import bitonic, multisearch, segment_sum, segscan
+from repro.kernels import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def segscan_op(values, flags, *, block: int = 1024):
+    """Segmented inclusive sum scan (kernel-backed)."""
+    return segscan.segscan(values, flags, block=block, interpret=not _on_tpu())
+
+
+def multisearch_counts_op(sorted_keys, queries, *, q_block=256, k_block=2048):
+    """(count_lt, count_le) insertion points (kernel-backed)."""
+    return multisearch.multisearch_counts(
+        sorted_keys,
+        queries,
+        q_block=q_block,
+        k_block=k_block,
+        interpret=not _on_tpu(),
+    )
+
+
+def bitonic_sort_tiles_op(keys, values, *, tile: int = 1024):
+    """Per-tile (key, value) sort (kernel-backed)."""
+    return bitonic.bitonic_sort_tiles(
+        keys, values, tile=tile, interpret=not _on_tpu()
+    )
+
+
+def segment_sum_op(values, segment_ids, num_segments, **kw):
+    """GNN scatter (kernel-backed one-hot MXU formulation)."""
+    return segment_sum.segment_sum_kernel(
+        values, segment_ids, num_segments, interpret=not _on_tpu(), **kw
+    )
+
+
+# re-export oracles so callers can assert against the contract
+segscan_ref = _ref.segscan_ref
+multisearch_counts_ref = _ref.multisearch_counts_ref
+bitonic_sort_tiles_ref = _ref.bitonic_sort_tiles_ref
+segment_sum_ref = _ref.segment_sum_ref

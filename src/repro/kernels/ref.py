@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts).
+
+Each function is the mathematical definition, written with stock jax.numpy so
+it runs anywhere; tests assert kernel-vs-ref equality over shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segscan_ref(values, flags):
+    """Inclusive segmented sum scan (scan-with-reset, paper Appendix B)."""
+    f = flags.astype(values.dtype)
+
+    def combine(a, b):
+        va, fa = a
+        vb, fb = b
+        return vb + (1 - fb) * va, jnp.maximum(fa, fb)
+
+    out, _ = jax.lax.associative_scan(combine, (values, f))
+    return out
+
+
+def multisearch_counts_ref(sorted_keys, queries):
+    """(count_lt, count_le) == searchsorted left/right insertion points."""
+    lt = jnp.searchsorted(sorted_keys, queries, side="left").astype(jnp.int32)
+    le = jnp.searchsorted(sorted_keys, queries, side="right").astype(jnp.int32)
+    return lt, le
+
+
+def bitonic_sort_tiles_ref(keys, values, tile):
+    """Sort each consecutive tile of (keys, values) independently by key."""
+    n = keys.shape[0]
+    n_pad = -(-n // tile) * tile
+    maxval = jnp.array(jnp.iinfo(keys.dtype).max, keys.dtype)
+    k = jnp.pad(keys, (0, n_pad - n), constant_values=maxval).reshape(-1, tile)
+    v = jnp.pad(values, (0, n_pad - n)).reshape(-1, tile)
+    order = jnp.argsort(k, axis=1)
+    ks = jnp.take_along_axis(k, order, axis=1).reshape(-1)[:n]
+    vs = jnp.take_along_axis(v, order, axis=1).reshape(-1)[:n]
+    return ks, vs
+
+
+def segment_sum_ref(values, segment_ids, num_segments):
+    """jax.ops.segment_sum with out-of-range ids dropped."""
+    return jax.ops.segment_sum(
+        values, segment_ids, num_segments, indices_are_sorted=False
+    )
+
+
+def moe_dispatch_ref(expert_idx, capacity, n_experts):
+    """(slot, keep): slot of each token within its expert's capacity buckets.
+
+    slot = rank of the token among same-expert tokens (arrival order); tokens
+    with slot >= capacity are dropped (keep = False). The dispatch matrix is
+    one_hot(expert)*one_hot(slot) — the standard capacity-factor MoE routing.
+    """
+    t = expert_idx.shape[0]
+    one_hot = jax.nn.one_hot(expert_idx, n_experts, dtype=jnp.int32)  # (t, E)
+    pos_in_expert = jnp.cumsum(one_hot, axis=0) - 1  # (t, E)
+    slot = jnp.take_along_axis(pos_in_expert, expert_idx[:, None], axis=1)[:, 0]
+    keep = slot < capacity
+    return slot.astype(jnp.int32), keep

@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: segmented inclusive scan (the paper's scan-with-reset).
+
+The hot inner op of rankAll (Lemma 4.3): after the arc sort, ranks are a
+segmented iota — a scan with reset at each src-segment boundary (Appendix B).
+
+TPU mapping: the grid is sequential on TPU, so the cross-block carry lives in
+an SMEM scratch cell that persists across grid steps. Within a VMEM block the
+scan is a log2(block)-step Hillis-Steele sweep over the segmented-sum monoid
+    (v1,f1) (+) (v2,f2) = (v2 + (1-f2)*v1, f1|f2)
+implemented with static pad/slice shifts (no gathers — TPU has no efficient
+random access inside VMEM, mirroring the paper's "avoid random access" rule).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANE = 128  # TPU lane width; blocks are multiples of this
+
+
+def _block_segscan(v, f):
+    """Inclusive segmented-sum scan of one block (fully vectorized)."""
+    n = v.shape[-1]
+    steps = max(n - 1, 1).bit_length()
+    for i in range(steps):
+        d = 1 << i
+        v_prev = jnp.pad(v, ((d, 0),))[:n]
+        f_prev = jnp.pad(f, ((d, 0),))[:n]
+        v = v + jnp.where(f == 0, v_prev, jnp.zeros_like(v_prev))
+        f = f | f_prev
+    return v, f
+
+
+def _segscan_kernel(v_ref, f_ref, out_ref, carry_v, carry_f):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        carry_v[0] = jnp.zeros((), v_ref.dtype)
+        carry_f[0] = jnp.zeros((), jnp.int32)
+
+    v = v_ref[...]
+    f = f_ref[...].astype(jnp.int32)
+    lv, lf = _block_segscan(v, f)
+    # fold the carry into every element before its first flag
+    cv = carry_v[0]
+    out = lv + jnp.where(lf == 0, cv, jnp.zeros_like(cv))
+    out_ref[...] = out
+    carry_v[0] = out[-1]
+    carry_f[0] = carry_f[0] | lf[-1]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def segscan(values, flags, *, block: int = 1024, interpret: bool = True):
+    """Inclusive segmented sum scan. flags: nonzero where a segment starts.
+
+    values: (n,) int32/float32; flags: (n,) bool/int32. n padded to block.
+    """
+    n = values.shape[0]
+    n_pad = pl.cdiv(n, block) * block
+    v = jnp.pad(values, (0, n_pad - n))
+    f = jnp.pad(flags.astype(jnp.int32), (0, n_pad - n), constant_values=1)
+
+    grid = (n_pad // block,)
+    out = pl.pallas_call(
+        _segscan_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), values.dtype),
+        scratch_shapes=[
+            pltpu.SMEM((1,), values.dtype),
+            pltpu.SMEM((1,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(v, f)
+    return out[:n]

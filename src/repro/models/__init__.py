@@ -1,0 +1,2 @@
+"""Model zoo: the 10 assigned architectures (LM transformers dense/MoE, GNNs,
+equivariant nets, recsys) built on shared layers and the primitives substrate."""

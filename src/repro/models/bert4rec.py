@@ -1,0 +1,97 @@
+"""BERT4Rec (Sun et al., arXiv:1904.06690): bidirectional transformer over item
+sequences with cloze (masked-item) training; serving scores candidate items.
+
+Reuses the transformer backbone (causal=False, learned positions, LayerNorm,
+GELU) and the embedding substrate. retrieval_cand scores one user state
+against 10^6 candidates as a single batched dot — no loops.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tr
+from repro.models.layers import softmax_xent
+
+
+@dataclasses.dataclass(frozen=True)
+class Bert4RecConfig:
+    name: str
+    n_items: int
+    embed_dim: int
+    n_blocks: int
+    n_heads: int
+    seq_len: int
+    mask_frac: float = 0.2
+    dtype: Any = jnp.float32
+
+    @property
+    def backbone(self) -> tr.TransformerConfig:
+        return tr.TransformerConfig(
+            name=self.name + "-backbone",
+            n_layers=self.n_blocks,
+            d_model=self.embed_dim,
+            n_heads=self.n_heads,
+            n_kv_heads=self.n_heads,
+            d_ff=4 * self.embed_dim,
+            vocab=self.n_items + 2,  # +PAD, +MASK
+            causal=False,
+            pos="learned",
+            norm="ln",
+            ffn="gelu",
+            max_len=self.seq_len,
+            dtype=self.dtype,
+            chunk_q=256,
+            chunk_k=256,
+        )
+
+    @property
+    def mask_id(self) -> int:
+        return self.n_items + 1
+
+
+def init_params(key, cfg: Bert4RecConfig):
+    return tr.init_params(key, cfg.backbone)
+
+
+def encode(params, cfg: Bert4RecConfig, item_seq):
+    """item_seq: (B, S) int32 -> hidden states (B, S, d)."""
+    h, _ = tr.forward(params, cfg.backbone, item_seq)
+    return h
+
+
+def cloze_loss(params, cfg: Bert4RecConfig, item_seq, key, n_neg: int = 1023):
+    """Mask a fraction of positions, predict the original items there.
+
+    Production-realistic sampled softmax: with ~10^6 items, full-softmax cloze
+    at batch 64k x seq 200 would cost ~1.7e18 FLOPs/step; instead each step
+    scores the true item against n_neg shared negatives (the standard
+    sampled-softmax recsys objective; DESIGN.md §6)."""
+    B, S = item_seq.shape
+    k_mask, k_neg = jax.random.split(key)
+    mask = jax.random.uniform(k_mask, (B, S), jnp.float32) < cfg.mask_frac
+    inp = jnp.where(mask, cfg.mask_id, item_seq)
+    h = encode(params, cfg, inp)  # (B, S, d)
+    negs = jax.random.randint(k_neg, (n_neg,), 1, cfg.n_items, dtype=jnp.int32)
+    emb_neg = params["embed"][negs]  # (n_neg, d)
+    pos_scores = jnp.sum(
+        h * params["embed"][item_seq].astype(h.dtype), axis=-1, dtype=jnp.float32
+    )  # (B, S)
+    neg_scores = jnp.einsum(
+        "bsd,nd->bsn", h, emb_neg, preferred_element_type=jnp.float32
+    )
+    logits = jnp.concatenate([pos_scores[..., None], neg_scores], axis=-1)
+    labels = jnp.zeros((B, S), jnp.int32)  # true item is slot 0
+    return softmax_xent(logits, labels, mask)
+
+
+def score_candidates(params, cfg: Bert4RecConfig, item_seq, candidates):
+    """candidates: (B, C) or (C,) item ids -> scores via last-position state."""
+    h = encode(params, cfg, item_seq)[:, -1]  # (B, d)
+    emb = params["embed"][candidates]  # (..., C, d)
+    if emb.ndim == 2:
+        return jnp.einsum("bd,cd->bc", h, emb)
+    return jnp.einsum("bd,bcd->bc", h, emb)

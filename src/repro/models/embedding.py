@@ -1,0 +1,53 @@
+"""Sparse embedding substrate: EmbeddingBag and hash-bucketed tables.
+
+JAX has no native EmbeddingBag or CSR sparse (BCOO only) — so this IS part of
+the system: ragged multi-hot lookups are (jnp.take over the table) followed by
+(jax.ops.segment_sum/max over bag ids), the exact gather/segment-reduce pattern
+the paper's rankAll uses for arcs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag(
+    table,  # (V, d)
+    indices,  # (nnz,) int32 — flattened multi-hot ids
+    segment_ids,  # (nnz,) int32 — which bag each id belongs to
+    num_bags: int,
+    *,
+    mode: str = "sum",
+    weights=None,  # optional (nnz,) per-sample weights
+    valid=None,  # optional (nnz,) bool — padding mask
+):
+    """torch.nn.EmbeddingBag equivalent: gather rows + segment-reduce per bag."""
+    v = table.shape[0]
+    idx = jnp.clip(indices, 0, v - 1)
+    rows = jnp.take(table, idx, axis=0)  # (nnz, d)
+    if weights is not None:
+        rows = rows * weights[:, None].astype(rows.dtype)
+    if valid is not None:
+        rows = jnp.where(valid[:, None], rows, 0)
+    if mode == "sum":
+        return jax.ops.segment_sum(rows, segment_ids, num_bags)
+    if mode == "mean":
+        s = jax.ops.segment_sum(rows, segment_ids, num_bags)
+        ones = jnp.ones((indices.shape[0],), jnp.float32)
+        if valid is not None:
+            ones = jnp.where(valid, ones, 0.0)
+        c = jax.ops.segment_sum(ones, segment_ids, num_bags)
+        return s / jnp.maximum(c[:, None], 1.0).astype(s.dtype)
+    if mode == "max":
+        neg = jnp.finfo(jnp.float32).min
+        r = rows if valid is None else jnp.where(rows == 0, neg, rows)
+        out = jax.ops.segment_max(r, segment_ids, num_bags)
+        return jnp.where(jnp.isfinite(out.astype(jnp.float32)), out, 0)
+    raise ValueError(mode)
+
+
+def hash_bucket_lookup(table, raw_ids):
+    """Quotient-remainder-free hashing for open-vocabulary ids (recsys)."""
+    v = table.shape[0]
+    h = (raw_ids.astype(jnp.uint32) * jnp.uint32(2654435761)) % jnp.uint32(v)
+    return jnp.take(table, h.astype(jnp.int32), axis=0)

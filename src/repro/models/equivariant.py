@@ -1,0 +1,191 @@
+"""E(n)/E(3)-equivariant GNNs: EGNN and MACE-lite.
+
+EGNN (Satorras et al., arXiv:2102.09844): scalar messages from invariant
+distances; coordinate updates along relative vectors — equivariance by
+construction, no spherical harmonics.
+
+MACE-lite (Batatia et al., arXiv:2206.07697): the l_max=2, correlation-order-3
+regime implemented with explicit real spherical harmonics and symmetric
+contractions. DESIGN.md notes the simplification vs full CG couplings: the
+equivariant message A_i = sum_j R(r_ij) * Y(r_hat_ij) (x) h_j is exact; the
+order-3 product basis uses the invariant contractions {A0^3, A0*|A1|^2,
+A0*|A2|^2, A1.(A2.A1)} per channel (a spanning subset of the B-basis for the
+scalar output head), which preserves E(3) invariance of the energy readout.
+Forces, if needed, come from jax.grad of the energy and are then exactly
+equivariant.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class EquivariantConfig:
+    name: str
+    kind: str  # "egnn" | "mace"
+    n_layers: int
+    d_hidden: int
+    n_rbf: int = 8
+    l_max: int = 2
+    correlation_order: int = 3
+    r_cut: float = 5.0
+    dtype: Any = jnp.float32
+
+
+def _mlp_init(key, dims, dt):
+    ks = jax.random.split(key, len(dims) - 1)
+    p = {}
+    for i in range(len(dims) - 1):
+        p[f"w{i}"] = dense_init(ks[i], dims[i], dims[i + 1], dt)
+        p[f"b{i}"] = jnp.zeros((dims[i + 1],), dt)
+    return p
+
+
+def _mlp(p, x, n, act=jax.nn.silu):
+    for i in range(n):
+        x = jnp.einsum("...d,df->...f", x, p[f"w{i}"]) + p[f"b{i}"]
+        if i < n - 1:
+            x = act(x.astype(jnp.float32)).astype(x.dtype)
+    return x
+
+
+# --------------------------------------------------------------------------
+# shared radial/angular bases
+# --------------------------------------------------------------------------
+def bessel_rbf(r, n_rbf, r_cut):
+    """sin(n pi r / rc) / r radial basis with smooth cosine cutoff."""
+    r = jnp.maximum(r, 1e-6)
+    n = jnp.arange(1, n_rbf + 1, dtype=jnp.float32)
+    basis = jnp.sqrt(jnp.float32(2.0 / r_cut)) * jnp.sin(
+        n * jnp.float32(jnp.pi) * r[..., None] / r_cut
+    ) / r[..., None]
+    env = 0.5 * (jnp.cos(jnp.float32(jnp.pi) * jnp.minimum(r / r_cut, 1.0)) + 1.0)
+    return basis * env[..., None]
+
+
+def real_sph_harm_l2(unit):
+    """Real spherical harmonics Y_lm for l = 0, 1, 2; unit: (..., 3) unit vecs.
+
+    Returns (..., 9): [Y00, Y1(-1,0,1), Y2(-2..2)] (constant factors folded
+    into the learned radial weights)."""
+    x, y, z = unit[..., 0], unit[..., 1], unit[..., 2]
+    one = jnp.ones_like(x)
+    return jnp.stack(
+        [
+            one,
+            y, z, x,
+            x * y, y * z, 3 * z * z - 1, x * z, x * x - y * y,
+        ],
+        axis=-1,
+    )
+
+
+# --------------------------------------------------------------------------
+# EGNN
+# --------------------------------------------------------------------------
+def init_egnn(key, cfg: EquivariantConfig):
+    d, dt = cfg.d_hidden, cfg.dtype
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    p: dict[str, Any] = {"embed": _mlp_init(keys[0], (cfg.d_hidden, d), dt)}
+    for i in range(cfg.n_layers):
+        k = keys[i + 1]
+        p[f"layer{i}"] = {
+            "edge": _mlp_init(jax.random.fold_in(k, 0), (2 * d + 1, d, d), dt),
+            "coord": _mlp_init(jax.random.fold_in(k, 1), (d, d, 1), dt),
+            "node": _mlp_init(jax.random.fold_in(k, 2), (2 * d, d, d), dt),
+        }
+    p["readout"] = _mlp_init(keys[-1], (d, d, 1), dt)
+    return p
+
+
+def egnn_forward(params, cfg, h, x, edge_index, edge_mask):
+    """h: (N, d) invariant feats; x: (N, 3) coordinates. Returns (energy, x')."""
+    n = h.shape[0]
+    src, dst = jnp.minimum(edge_index[0], n - 1), jnp.minimum(edge_index[1], n - 1)
+    h = _mlp(params["embed"], h.astype(cfg.dtype), 1)
+    for i in range(cfg.n_layers):
+        lp = params[f"layer{i}"]
+        rel = x[src] - x[dst]
+        d2 = jnp.sum(jnp.square(rel), axis=-1, keepdims=True)
+        m = _mlp(lp["edge"], jnp.concatenate([h[src], h[dst], d2], -1), 2)
+        m = jnp.where(edge_mask[:, None], m, 0)
+        w = _mlp(lp["coord"], m, 2)  # (E, 1)
+        upd = jax.ops.segment_sum(rel * w, dst, n)
+        cnt = jax.ops.segment_sum(edge_mask.astype(jnp.float32), dst, n)
+        x = x + upd / jnp.maximum(cnt[:, None], 1.0)
+        agg = jax.ops.segment_sum(m, dst, n)
+        h = h + _mlp(lp["node"], jnp.concatenate([h, agg], -1), 2)
+    energy = jnp.sum(_mlp(params["readout"], h, 2))
+    return energy, x
+
+
+# --------------------------------------------------------------------------
+# MACE-lite
+# --------------------------------------------------------------------------
+def init_mace(key, cfg: EquivariantConfig):
+    d, dt = cfg.d_hidden, cfg.dtype
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    p: dict[str, Any] = {"embed": _mlp_init(keys[0], (cfg.d_hidden, d), dt)}
+    for i in range(cfg.n_layers):
+        k = jax.random.fold_in(keys[1], i)
+        p[f"layer{i}"] = {
+            # radial MLP: rbf -> per-(l, channel) weights (9 lm components)
+            "radial": _mlp_init(jax.random.fold_in(k, 0), (cfg.n_rbf, d, 9 * d), dt),
+            # product-basis mixing: 4 invariant contractions -> d
+            "mix": dense_init(jax.random.fold_in(k, 1), 4 * d, d, dt),
+            "node": _mlp_init(jax.random.fold_in(k, 2), (2 * d, d, d), dt),
+        }
+    p["readout"] = _mlp_init(keys[-1], (d, d, 1), dt)
+    return p
+
+
+def mace_forward(params, cfg, h, x, edge_index, edge_mask):
+    """Higher-order equivariant message passing; returns total energy."""
+    n = h.shape[0]
+    src, dst = jnp.minimum(edge_index[0], n - 1), jnp.minimum(edge_index[1], n - 1)
+    h = _mlp(params["embed"], h.astype(cfg.dtype), 1)
+    d = cfg.d_hidden
+    for i in range(cfg.n_layers):
+        lp = params[f"layer{i}"]
+        rel = x[src] - x[dst]
+        r = jnp.sqrt(jnp.sum(jnp.square(rel), -1) + 1e-12)
+        unit = rel / r[:, None]
+        R = _mlp(lp["radial"], bessel_rbf(r, cfg.n_rbf, cfg.r_cut), 2)  # (E, 9d)
+        Y = real_sph_harm_l2(unit)  # (E, 9)
+        # A_i = sum_j R(r_ij) * Y_lm(r_ij) * h_j  -> (N, 9, d)
+        msg = R.reshape(-1, 9, d) * Y[:, :, None] * h[src][:, None, :]
+        msg = jnp.where(edge_mask[:, None, None], msg, 0)
+        A = jax.ops.segment_sum(msg, dst, n)  # (N, 9, d)
+        # order-3 invariant product basis per channel
+        a0 = A[:, 0, :]
+        a1 = A[:, 1:4, :]
+        a2 = A[:, 4:9, :]
+        n1 = jnp.sum(jnp.square(a1), axis=1)
+        n2 = jnp.sum(jnp.square(a2), axis=1)
+        b1 = a0 * a0 * a0
+        b2 = a0 * n1
+        b3 = a0 * n2
+        b4 = n1 * n2  # order-4 in A but invariant; stands in for A1.(A2 A1)
+        B = jnp.concatenate([b1, b2, b3, b4], axis=-1)  # (N, 4d)
+        h = h + jnp.einsum("nd,df->nf", B, lp["mix"]) + _mlp(
+            lp["node"], jnp.concatenate([h, a0], -1), 2
+        )
+    return jnp.sum(_mlp(params["readout"], h, 2))
+
+
+def init_params(key, cfg: EquivariantConfig):
+    return init_egnn(key, cfg) if cfg.kind == "egnn" else init_mace(key, cfg)
+
+
+def energy_loss(params, cfg: EquivariantConfig, h, x, edge_index, edge_mask, target):
+    if cfg.kind == "egnn":
+        e, _ = egnn_forward(params, cfg, h, x, edge_index, edge_mask)
+    else:
+        e = mace_forward(params, cfg, h, x, edge_index, edge_mask)
+    return jnp.mean(jnp.square(e.astype(jnp.float32) - target.astype(jnp.float32)))

@@ -1,0 +1,81 @@
+"""Shared NN layers (pure functions over explicit param pytrees).
+
+All params are explicit dicts; all dtypes explicit (x64 is enabled globally for
+the streaming core, so nothing here may rely on default dtypes).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def uniform_init(key, shape, scale, dtype):
+    return jax.random.uniform(key, shape, jnp.float32, -scale, scale).astype(dtype)
+
+
+def dense_init(key, d_in, d_out, dtype, scale=None):
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(d_in)).astype(jnp.float32)
+    return uniform_init(key, (d_in, d_out), scale, dtype)
+
+
+def rms_norm(x, w, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def layer_norm(x, w, b, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w + b
+
+
+def rope(x, positions, theta=10000.0):
+    """Rotary embedding. x: (..., S, H, dh); positions: (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (
+        theta ** (jnp.arange(0, half, dtype=jnp.float32) / half)
+    )
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [
+            x1 * cos.astype(x.dtype) - x2 * sin.astype(x.dtype),
+            x2 * cos.astype(x.dtype) + x1 * sin.astype(x.dtype),
+        ],
+        axis=-1,
+    )
+    return out
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+def segment_softmax(scores, segment_ids, num_segments):
+    """Softmax over entries sharing a segment id (GNN edge softmax)."""
+    scores = scores.astype(jnp.float32)
+    seg_max = jax.ops.segment_max(scores, segment_ids, num_segments)
+    seg_max = jnp.where(jnp.isfinite(seg_max), seg_max, 0.0)
+    e = jnp.exp(scores - seg_max[segment_ids])
+    seg_sum = jax.ops.segment_sum(e, segment_ids, num_segments)
+    return e / jnp.maximum(seg_sum[segment_ids], 1e-20)
+
+
+def softmax_xent(logits, labels, mask=None):
+    """Mean cross entropy in f32. labels: int ids; mask: optional weights."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - ll
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

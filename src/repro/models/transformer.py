@@ -1,0 +1,565 @@
+"""Decoder/encoder transformer LM family (smollm, qwen2/3, kimi-k2, granite,
+bert4rec backbone).
+
+Engineering choices that matter at scale:
+* Layer params are stacked (L, ...) and the stack is a single lax.scan —
+  compile time is O(1) in depth (61-layer MoE lowers in seconds, not minutes).
+* Attention is a two-level chunked online-softmax (flash-style) written in
+  jnp: memory O(chunk_q * chunk_k) per step instead of O(S^2); the same path
+  serves training (S x S causal) and decode (1 x cache).
+* MoE uses sort-based capacity dispatch built on the SAME segmented-iota
+  primitive as the paper's rankAll (sorting tokens by expert == sorting arcs
+  by src). Capacity factor bounds memory; dropped tokens pass through.
+* Optional remat wraps each layer body for activation recomputation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (
+    dense_init,
+    layer_norm,
+    rms_norm,
+    rope,
+    softmax_xent,
+    swiglu,
+)
+from repro.primitives.segscan import segment_starts, segmented_iota
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESettings:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 1
+    capacity_factor: float = 1.25
+    aux_loss_coef: float = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: Optional[int] = None
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    causal: bool = True
+    pos: str = "rope"  # "rope" | "learned"
+    norm: str = "rms"  # "rms" | "ln"
+    ffn: str = "swiglu"  # "swiglu" | "gelu"
+    rope_theta: float = 10000.0
+    max_len: int = 8192  # for learned positions only
+    moe: Optional[MoESettings] = None
+    dtype: Any = jnp.bfloat16
+    chunk_q: int = 512
+    chunk_k: int = 512
+    remat: bool = False
+    grad_accum: int = 1
+    tie_embeddings: bool = True
+    fsdp_params: bool = False  # shard params over 'data' too (ZeRO-3-style)
+    fsdp_layer_gather: bool = False  # force per-layer gather in scan (refuted: see §Perf)
+
+    @property
+    def dh(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        d, dh = self.d_model, self.dh
+        attn = d * (self.n_heads + 2 * self.n_kv_heads) * dh + self.n_heads * dh * d
+        if self.moe:
+            ff = (
+                d * self.moe.n_experts
+                + 3 * self.moe.n_experts * d * self.moe.d_ff_expert
+                + 3 * self.moe.n_shared * d * self.moe.d_ff_expert
+            )
+        else:
+            ff = 3 * d * self.d_ff if self.ffn == "swiglu" else 2 * d * self.d_ff
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * (attn + ff + 2 * d) + emb
+
+    def active_param_count(self) -> int:
+        if not self.moe:
+            return self.param_count()
+        d = self.d_model
+        dh = self.dh
+        attn = d * (self.n_heads + 2 * self.n_kv_heads) * dh + self.n_heads * dh * d
+        ff = (
+            d * self.moe.n_experts
+            + 3 * (self.moe.top_k + self.moe.n_shared) * d * self.moe.d_ff_expert
+        )
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * (attn + ff + 2 * d) + emb
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+def init_params(key, cfg: TransformerConfig):
+    d, dh, L = cfg.d_model, cfg.dh, cfg.n_layers
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    keys = jax.random.split(key, 24)
+    dt = cfg.dtype
+
+    def stack(fn, k):
+        return jax.vmap(lambda kk: fn(kk))(jax.random.split(k, L))
+
+    p: dict[str, Any] = {
+        "embed": dense_init(keys[0], cfg.vocab, d, dt, scale=0.02),
+        "ln_f": jnp.ones((d,), dt),
+        "ln1": jnp.ones((L, d), dt),
+        "ln2": jnp.ones((L, d), dt),
+        "wq": stack(lambda k: dense_init(k, d, hq * dh, dt), keys[1]),
+        "wk": stack(lambda k: dense_init(k, d, hkv * dh, dt), keys[2]),
+        "wv": stack(lambda k: dense_init(k, d, hkv * dh, dt), keys[3]),
+        "wo": stack(lambda k: dense_init(k, hq * dh, d, dt), keys[4]),
+    }
+    if cfg.norm == "ln":
+        p["ln1_b"] = jnp.zeros((L, d), dt)
+        p["ln2_b"] = jnp.zeros((L, d), dt)
+        p["ln_f_b"] = jnp.zeros((d,), dt)
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((L, hq * dh), dt)
+        p["bk"] = jnp.zeros((L, hkv * dh), dt)
+        p["bv"] = jnp.zeros((L, hkv * dh), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((L, dh), dt)
+        p["k_norm"] = jnp.ones((L, dh), dt)
+    if cfg.pos == "learned":
+        p["pos_embed"] = dense_init(keys[5], cfg.max_len, d, dt, scale=0.02)
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(keys[6], d, cfg.vocab, dt, scale=0.02)
+
+    if cfg.moe is None:
+        p["wg"] = stack(lambda k: dense_init(k, d, cfg.d_ff, dt), keys[7])
+        p["wu"] = stack(lambda k: dense_init(k, d, cfg.d_ff, dt), keys[8])
+        p["wd"] = stack(lambda k: dense_init(k, cfg.d_ff, d, dt), keys[9])
+    else:
+        mo = cfg.moe
+        E, ffe = mo.n_experts, mo.d_ff_expert
+
+        def estack(k):
+            return jax.vmap(
+                lambda kk: jax.vmap(lambda k3: dense_init(k3, d, ffe, dt))(
+                    jax.random.split(kk, E)
+                )
+            )(jax.random.split(k, L))
+
+        p["router"] = stack(lambda k: dense_init(k, d, E, jnp.float32), keys[10])
+        p["e_wg"] = estack(keys[11])
+        p["e_wu"] = estack(keys[12])
+        p["e_wd"] = jnp.swapaxes(estack(keys[13]), -1, -2) * (
+            jnp.asarray(jnp.sqrt(d / ffe), dt)
+        )
+        ffs = mo.n_shared * ffe
+        if mo.n_shared > 0:
+            p["s_wg"] = stack(lambda k: dense_init(k, d, ffs, dt), keys[14])
+            p["s_wu"] = stack(lambda k: dense_init(k, d, ffs, dt), keys[15])
+            p["s_wd"] = stack(lambda k: dense_init(k, ffs, d, dt), keys[16])
+    return p
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+def flash_attention(q, k, v, q_pos, k_pos, causal, chunk_q, chunk_k):
+    """Two-level chunked online-softmax attention.
+
+    q: (B, Sq, Hq, dh); k/v: (B, Sk, Hkv, dh); GQA via head grouping.
+    Mask: attend where k_pos <= q_pos (if causal) and k_pos >= 0 (valid).
+    """
+    B, Sq, Hq, dh = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    cq, ck = min(chunk_q, Sq), min(chunk_k, Sk)
+    nq, nk = -(-Sq // cq), -(-Sk // ck)
+    scale = jnp.float32(1.0) / jnp.float32(dh) ** jnp.float32(0.5)
+
+    # pad to multiples
+    def padq(x, n, axis):
+        padw = [(0, 0)] * x.ndim
+        padw[axis] = (0, n)
+        return jnp.pad(x, padw)
+
+    q = padq(q, nq * cq - Sq, 1)
+    q_pos = padq(q_pos, nq * cq - Sq, 1)
+    k = padq(k, nk * ck - Sk, 1)
+    v = padq(v, nk * ck - Sk, 1)
+    k_pos = jnp.pad(k_pos, [(0, 0), (0, nk * ck - Sk)], constant_values=-1)
+
+    qg = q.reshape(B, nq, cq, Hkv, G, dh)
+    kg = k.reshape(B, nk, ck, Hkv, dh)
+    vg = v.reshape(B, nk, ck, Hkv, dh)
+    qp = q_pos.reshape(B, nq, cq)
+    kp = k_pos.reshape(B, nk, ck)
+
+    def q_block(args):
+        qb, qpb = args  # (B, cq, Hkv, G, dh), (B, cq)
+
+        # flash-attention backward: probabilities are recomputed, never stored
+        # (without this, scan saves pexp for every (q-block, kv-step) pair —
+        # tens of GB at 4k x 4k; with it, residuals are one step's worth).
+        @jax.checkpoint
+        def kv_step(carry, inp):
+            acc, m, l = carry
+            kb, vb, kpb = inp  # (B, ck, Hkv, dh), (B, ck)
+            s = jnp.einsum(
+                "bqhgd,bkhd->bqhgk", qb, kb, preferred_element_type=jnp.float32
+            ) * scale
+            mask = kpb[:, None, None, None, :] >= 0
+            if causal:
+                mask = mask & (
+                    kpb[:, None, None, None, :] <= qpb[:, :, None, None, None]
+                )
+            s = jnp.where(mask, s, jnp.float32(-jnp.inf))
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, jnp.float32(0.0))
+            alpha = jnp.exp(jnp.minimum(m - m_safe, jnp.float32(0.0)))
+            alpha = jnp.where(jnp.isfinite(m), alpha, jnp.float32(0.0))
+            pexp = jnp.exp(s - m_safe[..., None])
+            pexp = jnp.where(mask, pexp, jnp.float32(0.0))
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bqhgk,bkhd->bqhgd",
+                pexp.astype(v.dtype),
+                vb,
+                preferred_element_type=jnp.float32,
+            )
+            l = l * alpha + jnp.sum(pexp, axis=-1)
+            return (acc, m_new, l), None
+
+        acc0 = jnp.zeros((B, cq, Hkv, G, dh), jnp.float32)
+        m0 = jnp.full((B, cq, Hkv, G), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, cq, Hkv, G), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            kv_step,
+            (acc0, m0, l0),
+            (
+                jnp.moveaxis(kg, 1, 0),
+                jnp.moveaxis(vg, 1, 0),
+                jnp.moveaxis(kp, 1, 0),
+            ),
+        )
+        return acc / jnp.maximum(l[..., None], 1e-20)
+
+    out = jax.lax.map(q_block, (jnp.moveaxis(qg, 1, 0), jnp.moveaxis(qp, 1, 0)))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, nq * cq, Hq, dh)[:, :Sq]
+    return out.astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# MoE
+# --------------------------------------------------------------------------
+def moe_ffn(x, lp, mo: MoESettings):
+    """Sort-based capacity dispatch (tokens sorted by expert — the same
+    primitive pattern as rankAll's arcs sorted by src). x: (T, d)."""
+    T, d = x.shape
+    E, k = mo.n_experts, mo.top_k
+    C = max(int(T * k * mo.capacity_factor / E), 4)
+
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), lp["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)  # (T, k)
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+
+    flat_e = top_e.reshape(T * k)
+    flat_w = top_w.reshape(T * k)
+    order = jnp.argsort(flat_e)
+    e_sorted = flat_e[order]
+    slot = segmented_iota(segment_starts(e_sorted.astype(jnp.int64)))
+    keep = slot < C
+    buf_idx = jnp.where(keep, e_sorted * C + slot, E * C)
+
+    xb = jnp.zeros((E * C, d), x.dtype).at[buf_idx].set(
+        x[order // k], mode="drop"
+    )
+    xb = xb.reshape(E, C, d)
+    g = jnp.einsum("ecd,edf->ecf", xb, lp["e_wg"])
+    u = jnp.einsum("ecd,edf->ecf", xb, lp["e_wu"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    yb = jnp.einsum("ecf,efd->ecd", h, lp["e_wd"]).reshape(E * C, d)
+
+    y_rows = jnp.where(keep[:, None], yb[jnp.minimum(buf_idx, E * C - 1)], 0)
+    y = (
+        jnp.zeros((T, d), x.dtype)
+        .at[order // k]
+        .add(y_rows * flat_w[order, None].astype(x.dtype))
+    )
+    if "s_wg" in lp:
+        y = y + swiglu(x, lp["s_wg"], lp["s_wu"], lp["s_wd"])
+
+    # Switch-style load-balance aux loss
+    frac = jnp.mean(
+        (jax.nn.one_hot(top_e, E, dtype=jnp.float32)).sum(1), axis=0
+    )
+    imp = jnp.mean(probs, axis=0)
+    aux = mo.aux_loss_coef * E * jnp.sum(frac * imp)
+    return y, aux
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+def _norm(x, w, b, kind):
+    return rms_norm(x, w) if kind == "rms" else layer_norm(x, w, b)
+
+
+_FSDP_LAYER_RULES = {
+    # per-layer specs with the 'data' (FSDP) axis dropped: inside the scan
+    # body each layer's weights are constrained to TP-only sharding, forcing
+    # XLA to all-gather ONE layer per iteration instead of the whole stack.
+    "wq": ("wq", (None, "model")), "wk": ("wk", (None, "model")),
+    "wv": ("wv", (None, "model")), "wo": ("wo", ("model", None)),
+    "wg": ("wg", (None, "model")), "wu": ("wu", (None, "model")),
+    "wd": ("wd", ("model", None)),
+    "router": ("router", (None, None)),
+    "e_wg": ("e_wg", ("model", None, None)),
+    "e_wu": ("e_wu", ("model", None, None)),
+    "e_wd": ("e_wd", ("model", None, None)),
+    "s_wg": ("s_wg", (None, "model")), "s_wu": ("s_wu", (None, "model")),
+    "s_wd": ("s_wd", ("model", None)),
+}
+
+
+def _fsdp_layer_constraint(lp):
+    """Apply per-layer TP-only sharding constraints (needs an ambient mesh)."""
+    from jax.sharding import PartitionSpec as P
+
+    out = dict(lp)
+    for k, (_, spec) in _FSDP_LAYER_RULES.items():
+        if k in out:
+            out[k] = jax.lax.with_sharding_constraint(out[k], P(*spec))
+    return out
+
+
+def _layer(cfg: TransformerConfig, h, lp, q_pos, k_pos, k_ext=None, v_ext=None):
+    """One transformer block. If k_ext/v_ext given (decode), attend to them."""
+    if cfg.fsdp_params and cfg.fsdp_layer_gather:
+        lp = _fsdp_layer_constraint(lp)
+    B, S, d = h.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.dh
+
+    hn = _norm(h, lp["ln1"], lp.get("ln1_b"), cfg.norm)
+    q = jnp.einsum("bsd,dh->bsh", hn, lp["wq"])
+    kk = jnp.einsum("bsd,dh->bsh", hn, lp["wk"])
+    vv = jnp.einsum("bsd,dh->bsh", hn, lp["wv"])
+    if cfg.qkv_bias:
+        q, kk, vv = q + lp["bq"], kk + lp["bk"], vv + lp["bv"]
+    q = q.reshape(B, S, hq, dh)
+    kk = kk.reshape(B, S, hkv, dh)
+    vv = vv.reshape(B, S, hkv, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, lp["q_norm"])
+        kk = rms_norm(kk, lp["k_norm"])
+    if cfg.pos == "rope":
+        q = rope(q, q_pos, cfg.rope_theta)
+        kk = rope(kk, q_pos, cfg.rope_theta)
+
+    if k_ext is not None:  # decode: new kv appended by caller into cache
+        k_all, v_all = k_ext, v_ext
+    else:
+        k_all, v_all = kk, vv
+        k_pos = q_pos
+
+    attn = flash_attention(
+        q, k_all, v_all, q_pos, k_pos, cfg.causal, cfg.chunk_q, cfg.chunk_k
+    )
+    h = h + jnp.einsum(
+        "bshd,hdz->bsz",
+        attn.reshape(B, S, hq, dh),
+        lp["wo"].reshape(hq, dh, d),
+    )
+
+    hn2 = _norm(h, lp["ln2"], lp.get("ln2_b"), cfg.norm)
+    if cfg.moe is None:
+        ff = swiglu(hn2, lp["wg"], lp["wu"], lp["wd"]) if cfg.ffn == "swiglu" else (
+            jnp.einsum(
+                "bsf,fd->bsd",
+                jax.nn.gelu(
+                    jnp.einsum("bsd,df->bsf", hn2, lp["wg"]).astype(jnp.float32)
+                ).astype(h.dtype),
+                lp["wd"],
+            )
+        )
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        ffv, aux = moe_ffn(hn2.reshape(B * S, d), lp, cfg.moe)
+        ff = ffv.reshape(B, S, d)
+    return h + ff, (kk, vv, aux)
+
+
+def _layer_params(p, cfg):
+    """Split stacked params into the per-layer pytree used under scan."""
+    keys = [
+        k
+        for k in p.keys()
+        if k
+        not in ("embed", "unembed", "pos_embed", "ln_f", "ln_f_b")
+    ]
+    return {k: p[k] for k in keys}
+
+
+def forward(params, cfg: TransformerConfig, tokens, positions=None):
+    """tokens: (B, S) int32 -> final hidden states (B, S, d), aux loss."""
+    B, S = tokens.shape
+    h = params["embed"][tokens]
+    if cfg.pos == "learned":
+        h = h + params["pos_embed"][jnp.arange(S) % cfg.max_len][None]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    lp_stack = _layer_params(params, cfg)
+
+    def body(carry, lp):
+        h, aux = carry
+        fn = _layer
+        if cfg.remat:
+            fn = jax.checkpoint(
+                lambda hh, ll: _layer(cfg, hh, ll, positions, positions),
+                policy=jax.checkpoint_policies.nothing_saveable,
+            )
+            h2, (_, _, a) = fn(h, lp)
+        else:
+            h2, (_, _, a) = _layer(cfg, h, lp, positions, positions)
+        return (h2, aux + a), None
+
+    (h, aux), _ = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)), lp_stack)
+    h = _norm(h, params["ln_f"], params.get("ln_f_b"), cfg.norm)
+    return h, aux
+
+
+def logits_fn(params, cfg, h):
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    return jnp.einsum("bsd,dv->bsv", h, w)
+
+
+def lm_loss(params, cfg, tokens, labels, loss_chunk: int = 2048):
+    """Causal LM loss with a vocab-chunked cross entropy: logits for the full
+    (tokens x vocab) matrix are never materialized — each scan step computes
+    one token-chunk's logits (chunk x V, bf16) and its f32 logsumexp, and the
+    checkpoint makes the backward recompute them. Peak memory drops from
+    O(T * V * 4B) (13GB/device for the 4k-train cells) to O(chunk * V * 2B).
+    """
+    B, S = tokens.shape
+    h, aux = forward(params, cfg, tokens)
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    d = h.shape[-1]
+    T = B * S
+    C = min(loss_chunk, T)
+    n_chunk = -(-T // C)
+    hf = jnp.pad(h.reshape(T, d), ((0, n_chunk * C - T), (0, 0)))
+    lf = jnp.pad(labels.reshape(T), (0, n_chunk * C - T))
+    mf = jnp.pad(jnp.ones((T,), jnp.float32), (0, n_chunk * C - T))
+
+    @jax.checkpoint
+    def chunk_nll(hc, lc, mc):
+        logits = jnp.einsum("td,dv->tv", hc, w).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lc[:, None], axis=-1)[:, 0]
+        return jnp.sum((logz - ll) * mc)
+
+    def body(acc, xs):
+        hc, lc, mc = xs
+        return acc + chunk_nll(hc, lc, mc), None
+
+    total, _ = jax.lax.scan(
+        body,
+        jnp.zeros((), jnp.float32),
+        (
+            hf.reshape(n_chunk, C, d),
+            lf.reshape(n_chunk, C),
+            mf.reshape(n_chunk, C),
+        ),
+    )
+    return total / jnp.float32(T) + aux
+
+
+# --------------------------------------------------------------------------
+# decode (serving)
+# --------------------------------------------------------------------------
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int):
+    return {
+        "k": jnp.zeros(
+            (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.dh), cfg.dtype
+        ),
+        "v": jnp.zeros(
+            (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.dh), cfg.dtype
+        ),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(params, cfg: TransformerConfig, cache, tokens):
+    """One decode step: tokens (B, 1) given a filled cache -> (logits, cache)."""
+    B = tokens.shape[0]
+    S_max = cache["k"].shape[2]
+    pos = cache["pos"]
+    h = params["embed"][tokens]
+    if cfg.pos == "learned":
+        h = h + params["pos_embed"][pos % cfg.max_len][None, None]
+    q_pos = jnp.full((B, 1), pos, jnp.int32)
+    k_pos = jnp.broadcast_to(jnp.arange(S_max, dtype=jnp.int32)[None], (B, S_max))
+    k_pos = jnp.where(k_pos <= pos, k_pos, -1)  # only filled slots
+
+    lp_stack = _layer_params(params, cfg)
+
+    def body(h, inp):
+        lp, kc, vc = inp
+        hn = _norm(h, lp["ln1"], lp.get("ln1_b"), cfg.norm)
+        q = jnp.einsum("bsd,dh->bsh", hn, lp["wq"])
+        kk = jnp.einsum("bsd,dh->bsh", hn, lp["wk"])
+        vv = jnp.einsum("bsd,dh->bsh", hn, lp["wv"])
+        if cfg.qkv_bias:
+            q, kk, vv = q + lp["bq"], kk + lp["bk"], vv + lp["bv"]
+        q = q.reshape(B, 1, cfg.n_heads, cfg.dh)
+        kk = kk.reshape(B, 1, cfg.n_kv_heads, cfg.dh)
+        vv = vv.reshape(B, 1, cfg.n_kv_heads, cfg.dh)
+        if cfg.qk_norm:
+            q = rms_norm(q, lp["q_norm"])
+            kk = rms_norm(kk, lp["k_norm"])
+        if cfg.pos == "rope":
+            q = rope(q, q_pos, cfg.rope_theta)
+            kk = rope(kk, q_pos, cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, kk, pos, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, vv, pos, axis=1)
+        attn = flash_attention(
+            q, kc, vc, q_pos, k_pos, False, cfg.chunk_q, max(cfg.chunk_k, 2048)
+        )
+        h = h + jnp.einsum(
+            "bshd,hdz->bsz",
+            attn.reshape(B, 1, cfg.n_heads, cfg.dh),
+            lp["wo"].reshape(cfg.n_heads, cfg.dh, cfg.d_model),
+        )
+        hn2 = _norm(h, lp["ln2"], lp.get("ln2_b"), cfg.norm)
+        if cfg.moe is None:
+            if cfg.ffn == "swiglu":
+                ff = swiglu(hn2, lp["wg"], lp["wu"], lp["wd"])
+            else:
+                ff = jnp.einsum(
+                    "bsf,fd->bsd",
+                    jax.nn.gelu(
+                        jnp.einsum("bsd,df->bsf", hn2, lp["wg"]).astype(
+                            jnp.float32
+                        )
+                    ).astype(h.dtype),
+                    lp["wd"],
+                )
+        else:
+            ffv, _ = moe_ffn(hn2.reshape(B, cfg.d_model), lp, cfg.moe)
+            ff = ffv.reshape(B, 1, cfg.d_model)
+        return h + ff, (kc, vc)
+
+    h, (new_k, new_v) = jax.lax.scan(
+        body, h, (lp_stack, cache["k"], cache["v"])
+    )
+    h = _norm(h, params["ln_f"], params.get("ln_f_b"), cfg.norm)
+    logits = logits_fn(params, cfg, h)
+    return logits, {"k": new_k, "v": new_v, "pos": pos + 1}

@@ -1,0 +1,31 @@
+"""PCO-primitive layer: sort / scan / merge / multisearch building blocks.
+
+The paper (Section 3.2) expresses the whole algorithm in terms of primitives with
+cache-optimal parallel implementations (sort, merge, scan, map, extract, combine,
+multisearch). Here each primitive is a pure-JAX function that XLA partitions/fuses;
+the Pallas kernels in repro.kernels provide TPU VMEM-tiled implementations of the
+perf-critical ones (segmented scan, multisearch, in-tile sort).
+"""
+from repro.primitives.sort import pack2, sort_by_key, composite_key
+from repro.primitives.segscan import (
+    segment_starts,
+    segmented_iota,
+    segmented_sum_scan,
+)
+from repro.primitives.search import (
+    exact_multisearch,
+    count_eq,
+    predecessor_multisearch,
+)
+
+__all__ = [
+    "pack2",
+    "sort_by_key",
+    "composite_key",
+    "segment_starts",
+    "segmented_iota",
+    "segmented_sum_scan",
+    "exact_multisearch",
+    "count_eq",
+    "predecessor_multisearch",
+]

@@ -1,0 +1,40 @@
+"""Multisearch primitives (paper Lemma 3.5).
+
+The paper's cache-oblivious merge-based multisearch answers m lookups against a
+sorted sequence of n key-value pairs in O(sort(n)+sort(m)) misses. With both
+sides presorted it degrades to O(scan(n+m)). On TPU we express each lookup set
+as a vectorized binary search (``jnp.searchsorted``) over presorted int64 keys;
+the Pallas kernel in repro.kernels.multisearch provides the VMEM-chunked,
+gather-free variant used on hardware.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def exact_multisearch(sorted_keys, queries, valid_n=None):
+    """For each query key, the index of a matching entry in sorted_keys, or -1.
+
+    ``valid_n``: optional scalar — only the first ``valid_n`` entries are real
+    (the tail is sentinel padding); matches beyond it are rejected.
+    """
+    n = sorted_keys.shape[0]
+    i = jnp.searchsorted(sorted_keys, queries, side="left")
+    i_c = jnp.minimum(i, n - 1)
+    found = (i < n) & (sorted_keys[i_c] == queries)
+    if valid_n is not None:
+        found = found & (i < valid_n)
+    return jnp.where(found, i_c, -1), found
+
+
+def count_eq(sorted_keys, queries):
+    """Number of entries equal to each query key (degree queries)."""
+    lo = jnp.searchsorted(sorted_keys, queries, side="left")
+    hi = jnp.searchsorted(sorted_keys, queries, side="right")
+    return (hi - lo).astype(jnp.int32)
+
+
+def predecessor_multisearch(sorted_keys, queries):
+    """Index of the entry with the largest key <= query, or -1 (predEQMultiSearch)."""
+    i = jnp.searchsorted(sorted_keys, queries, side="right") - 1
+    return i  # -1 when every key > query

@@ -1,0 +1,53 @@
+"""Segmented scans (the paper's "scan with resets", Appendix B).
+
+``segmented_iota`` is the workhorse of rankAll: after sorting arcs by
+(src, -pos), the rank of an arc is its offset within its src-segment.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_starts(sorted_keys, valid=None):
+    """Boolean array: True where a new segment of equal keys begins.
+
+    ``sorted_keys`` must be sorted. Invalid tail entries (``valid`` False) are
+    treated as one trailing segment (their flags are irrelevant downstream).
+    """
+    n = sorted_keys.shape[0]
+    prev = jnp.concatenate([sorted_keys[:1], sorted_keys[:-1]])
+    starts = sorted_keys != prev
+    starts = starts.at[0].set(True) if n > 0 else starts
+    if valid is not None:
+        starts = starts | ~valid  # each invalid entry isolated; harmless
+    return starts
+
+
+def segmented_iota(starts):
+    """Offset of each element within its segment (0,1,2,... restarting at starts).
+
+    Implemented with a single inclusive cummax over start indices — O(n) work,
+    O(log n) depth (paper Appendix B's scan-with-reset, with max instead of +).
+    """
+    n = starts.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int64)
+    anchor = jnp.where(starts, idx, jnp.int64(0))
+    seg_start = jax.lax.cummax(anchor)
+    return (idx - seg_start).astype(jnp.int32)
+
+
+def segmented_sum_scan(values, starts):
+    """Inclusive segmented sum scan via associative_scan (paper Appendix B).
+
+    combine((v1,f1),(v2,f2)) = (v2 + (1-f2)*v1, f1|f2).
+    """
+    flags = starts.astype(values.dtype)
+
+    def combine(a, b):
+        va, fa = a
+        vb, fb = b
+        return vb + (1 - fb) * va, jnp.maximum(fa, fb)
+
+    out, _ = jax.lax.associative_scan(combine, (values, flags))
+    return out

@@ -1,0 +1,40 @@
+"""Composite-key sorting primitives.
+
+Sorting records by multi-field keys (the paper sorts arcs by (src, -pos) and
+edges by (min, max)) is done by packing the fields into a single int64 key and
+sorting once: one cache-optimal sort instead of a stable multi-pass, and on TPU
+a single variadic sort HLO.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pack2(hi, lo):
+    """Pack two non-negative int32 fields into one int64 key: (hi << 32) | lo."""
+    return (hi.astype(jnp.int64) << 32) | lo.astype(jnp.int64)
+
+
+def unpack2(key):
+    """Inverse of pack2."""
+    hi = (key >> 32).astype(jnp.int32)
+    lo = (key & jnp.int64(0xFFFFFFFF)).astype(jnp.int32)
+    return hi, lo
+
+
+def composite_key(major, minor, minor_bound):
+    """major * minor_bound + minor, as int64. Requires 0 <= minor < minor_bound."""
+    return major.astype(jnp.int64) * jnp.int64(minor_bound) + minor.astype(jnp.int64)
+
+
+def sort_by_key(keys, *values):
+    """Sort ``keys`` ascending; apply the same permutation to each of ``values``.
+
+    Returns ``(sorted_keys, sorted_values...)``. Uses a single argsort so the
+    permutation is materialized once (one gather per payload array).
+    """
+    perm = jnp.argsort(keys)
+    out = [keys[perm]]
+    for v in values:
+        out.append(v[perm])
+    return tuple(out)

@@ -1,0 +1,1 @@
+"""Roofline analysis: HLO collective parsing + three-term model (DESIGN.md §9)."""

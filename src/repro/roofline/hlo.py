@@ -1,0 +1,86 @@
+"""Parse compiled (partitioned) HLO text for collective traffic.
+
+cost_analysis() reports per-device FLOPs and HBM bytes but not collective
+traffic, so we parse the partitioned module: every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute op, its result shape, and its
+replica-group size. Wire bytes per chip use ring-algorithm effective volumes:
+
+    all-gather       : out_bytes * (g-1)/g          (out = gathered buffer)
+    reduce-scatter   : in_bytes  * (g-1)/g ~= out_bytes * (g-1)
+    all-reduce       : 2 * bytes * (g-1)/g          (RS + AG)
+    all-to-all       : bytes * (g-1)/g
+    collective-permute: bytes
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b(pred|[suf]\d+|bf16|c64|c128)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|tuple\([^)]*\)|\S+)?\s*"
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_EXPLICIT_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-collective-type result bytes and effective wire bytes per chip."""
+    out_bytes = defaultdict(int)
+    wire = defaultdict(float)
+    counts = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m or "-done(" in line:
+            continue
+        op = m.group(1)
+        lhs = line.split("=", 1)[0] + "=" + line.split("=", 1)[1].split(m.group(1))[0]
+        b = _shape_bytes(lhs)
+        g = _group_size(line)
+        counts[op] += 1
+        out_bytes[op] += b
+        if op == "all-gather":
+            wire[op] += b * (g - 1) / g
+        elif op == "reduce-scatter":
+            wire[op] += b * (g - 1)
+        elif op == "all-reduce":
+            wire[op] += 2 * b * (g - 1) / g
+        elif op == "all-to-all":
+            wire[op] += b * (g - 1) / g
+        else:  # collective-permute
+            wire[op] += b
+    return {
+        "counts": dict(counts),
+        "out_bytes": dict(out_bytes),
+        "wire_bytes": dict(wire),
+        "wire_bytes_total": float(sum(wire.values())),
+    }

@@ -1,0 +1,38 @@
+"""Three-term roofline from a dry-run record (TPU v5e targets)."""
+from __future__ import annotations
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link (effective per-chip collective bandwidth)
+
+
+def roofline_terms(record: dict) -> dict:
+    """record: one dry-run json (per-device flops/bytes, wire bytes, chips)."""
+    flops = record["cost"].get("flops", 0.0)
+    mem_bytes = record["cost"].get("bytes_accessed", 0.0)
+    wire = record["collectives"]["wire_bytes_total"]
+    chips = record["chips"]
+    compute_s = flops / PEAK_FLOPS
+    memory_s = mem_bytes / HBM_BW
+    collective_s = wire / ICI_BW
+    bound = max(
+        ("compute", compute_s), ("memory", memory_s), ("collective", collective_s),
+        key=lambda kv: kv[1],
+    )[0]
+    step_s = max(compute_s, memory_s, collective_s)
+    model_flops = record.get("model_flops", 0.0)
+    hlo_total = flops * chips
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "bound": bound,
+        "step_s_lower_bound": step_s,
+        "model_flops": model_flops,
+        "hlo_flops_total": hlo_total,
+        "useful_flop_ratio": (model_flops / hlo_total) if hlo_total else 0.0,
+        # fraction of roofline: useful work per second vs peak if compute-bound
+        "roofline_fraction": (
+            (model_flops / chips / PEAK_FLOPS) / step_s if step_s > 0 else 0.0
+        ),
+    }

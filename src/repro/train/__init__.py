@@ -1,0 +1,1 @@
+"""Training substrate: optimizers, step builders, checkpointing, fault tolerance."""

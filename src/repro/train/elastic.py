@@ -1,0 +1,56 @@
+"""Elastic scaling: re-shard state when the device count changes.
+
+The streaming estimator state is embarrassingly re-shardable (r independent
+rows, counter-based RNG independent of device count) — a restart on a
+different mesh simply re-partitions the same global arrays. LM state re-shards
+by gathering to host (via the checkpoint path) and re-placing with the new
+mesh's NamedShardings.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def reshard(tree, mesh, spec_tree):
+    """Place (host or device) arrays onto ``mesh`` with the given specs."""
+    is_p = lambda x: isinstance(x, P)
+    shardings = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree, is_leaf=is_p
+    )
+    return jax.tree.map(
+        lambda x, sh: jax.device_put(np.asarray(x), sh), tree, shardings
+    )
+
+
+def shrink_or_grow_estimators(state, new_r: int):
+    """Elastically change the estimator count (accuracy <-> cost dial).
+
+    Shrinking keeps a prefix (each estimator is i.i.d. — a prefix is an
+    unbiased subsample). Growing appends fresh estimators that warm up on
+    future batches only; their chi/f2 start empty, which keeps NBSI valid for
+    the suffix stream (documented bias: new estimators see a shorter stream,
+    so production grows at stream boundaries / uses the prefix for estimates).
+    """
+    import jax.numpy as jnp
+
+    from repro.core.state import EstimatorState
+
+    r_old = state.f1.shape[0]
+    if new_r <= r_old:
+        return EstimatorState(
+            f1=state.f1[:new_r],
+            chi=state.chi[:new_r],
+            f2=state.f2[:new_r],
+            has_f3=state.has_f3[:new_r],
+            m_seen=state.m_seen,
+        )
+    pad = new_r - r_old
+    return EstimatorState(
+        f1=jnp.concatenate([state.f1, jnp.full((pad, 2), -1, jnp.int32)]),
+        chi=jnp.concatenate([state.chi, jnp.zeros((pad,), jnp.int32)]),
+        f2=jnp.concatenate([state.f2, jnp.full((pad, 2), -1, jnp.int32)]),
+        has_f3=jnp.concatenate([state.has_f3, jnp.zeros((pad,), bool)]),
+        m_seen=state.m_seen,
+    )

@@ -1,0 +1,138 @@
+"""Optimizers as pure pytree transforms (init / update), optax-style but
+self-contained (everything the framework depends on is built here).
+
+* adamw     — moments in f32 regardless of param dtype (mixed-precision safe).
+* adafactor — factored second moments for >=2D params (row/col statistics).
+  Required for the 1T-param MoE config: full Adam moments would not fit
+  512 x 16GB HBM (see DESIGN.md Section 5).
+* sgd       — momentum SGD, the cheap baseline.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params) -> (new_params, new_state)
+
+
+def _cast_like(x, target):
+    return x.astype(target.dtype)
+
+
+def adamw(lr=1e-3, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        c = state["count"] + 1
+        cf = c.astype(jnp.float32)
+        m = jax.tree.map(
+            lambda mo, g: b1 * mo + (1 - b1) * g.astype(jnp.float32),
+            state["m"],
+            grads,
+        )
+        v = jax.tree.map(
+            lambda vo, g: b2 * vo + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"],
+            grads,
+        )
+        def step(p, mo, vo):
+            mh = mo / (1 - b1**cf)
+            vh = vo / (1 - b2**cf)
+            upd = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+
+        new_params = jax.tree.map(step, params, m, v)
+        return new_params, {"m": m, "v": v, "count": c}
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr=1e-2, decay=0.8, eps=1e-30, clip_threshold=1.0) -> Optimizer:
+    """Adafactor w/o momentum (Shazeer & Stern): O(n+m) state for (n,m) params."""
+
+    def init(params):
+        def fac(p):
+            if p.ndim >= 2:
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"f": jax.tree.map(fac, params, is_leaf=lambda x: hasattr(x, "ndim")),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        c = state["count"] + 1
+        beta = 1.0 - (c.astype(jnp.float32)) ** (-decay)
+
+        def step(p, g, f):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if p.ndim >= 2:
+                vr = beta * f["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * f["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.sqrt(
+                    vr[..., None]
+                    * vc[..., None, :]
+                    / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)[
+                        ..., None
+                    ]
+                )
+                u = g / jnp.maximum(denom, eps)
+                nf = {"vr": vr, "vc": vc}
+            else:
+                v = beta * f["v"] + (1 - beta) * g2
+                u = g / jnp.sqrt(v)
+                nf = {"v": v}
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), nf
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_f = tdef.flatten_up_to(state["f"])
+        out = [step(p, g, f) for p, g, f in zip(flat_p, flat_g, flat_f)]
+        new_params = tdef.unflatten([o[0] for o in out])
+        new_f = tdef.unflatten([o[1] for o in out])
+        return new_params, {"f": new_f, "count": c}
+
+    return Optimizer(init, update)
+
+
+def sgd(lr=1e-2, momentum=0.9) -> Optimizer:
+    def init(params):
+        return {"mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params):
+        mu = jax.tree.map(
+            lambda m, g: momentum * m + g.astype(jnp.float32), state["mu"], grads
+        )
+        new_params = jax.tree.map(
+            lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype), params, mu
+        )
+        return new_params, {"mu": mu}
+
+    return Optimizer(init, update)
+
+
+def get_optimizer(name: str, lr: float) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr=lr)
+    if name == "adafactor":
+        return adafactor(lr=lr)
+    if name == "sgd":
+        return sgd(lr=lr)
+    raise ValueError(f"unknown optimizer {name}")

@@ -1,0 +1,105 @@
+"""Sharding rules: param/batch PartitionSpecs per architecture family.
+
+Baseline policy (the hillclimb in EXPERIMENTS.md §Perf iterates on this):
+  * batch dims over ("pod", "data"); tensor-parallel over "model".
+  * LM: attention QKV/O sharded on the flattened head dim (divisible by 16 for
+    every assigned arch); FFN on d_ff; MoE experts over "model" (EP); vocab
+    over "model" when divisible, else the embedding's d dim.
+  * optimizer state mirrors its param's spec (adafactor's factored vectors
+    drop the corresponding axis).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.transformer import TransformerConfig
+
+
+def batch_axes(axes) -> tuple:
+    return tuple(a for a in axes if a in ("pod", "data"))
+
+
+def lm_param_specs(cfg: TransformerConfig, axes, fsdp: bool = False):
+    """PartitionSpec tree matching init_params(cfg). fsdp additionally shards
+    the largest dims over 'data' (ZeRO-3-style fully sharded params)."""
+    tp = "model"
+    dp = "data" if fsdp else None
+    v_ok = cfg.vocab % 16 == 0
+    specs = {
+        "embed": P(tp, dp) if v_ok else P(dp, tp),
+        "ln_f": P(None),
+        "ln1": P(None, None),
+        "ln2": P(None, None),
+        "wq": P(None, dp, tp),
+        "wk": P(None, dp, tp),
+        "wv": P(None, dp, tp),
+        "wo": P(None, tp, dp),
+    }
+    if cfg.norm == "ln":
+        specs |= {"ln1_b": P(None, None), "ln2_b": P(None, None), "ln_f_b": P(None)}
+    if cfg.qkv_bias:
+        specs |= {"bq": P(None, tp), "bk": P(None, tp), "bv": P(None, tp)}
+    if cfg.qk_norm:
+        specs |= {"q_norm": P(None, None), "k_norm": P(None, None)}
+    if cfg.pos == "learned":
+        specs |= {"pos_embed": P(None, None)}
+    if not cfg.tie_embeddings:
+        specs |= {"unembed": P(dp, tp) if v_ok else P(tp, dp)}
+    if cfg.moe is None:
+        specs |= {
+            "wg": P(None, dp, tp),
+            "wu": P(None, dp, tp),
+            "wd": P(None, tp, dp),
+        }
+    else:
+        e_ok = cfg.moe.n_experts % 16 == 0
+        ep = tp if e_ok else None
+        specs |= {
+            "router": P(None, None, ep),
+            "e_wg": P(None, ep, dp, None),
+            "e_wu": P(None, ep, dp, None),
+            "e_wd": P(None, ep, None, dp),
+            "s_wg": P(None, dp, tp),
+            "s_wu": P(None, dp, tp),
+            "s_wd": P(None, tp, dp),
+        }
+        if cfg.moe.n_shared == 0:
+            for k in ("s_wg", "s_wu", "s_wd"):
+                specs.pop(k)
+    return specs
+
+
+def opt_state_specs(opt_name: str, param_specs):
+    """Mirror param specs onto optimizer state."""
+    if opt_name in ("adamw",):
+        return {
+            "m": param_specs,
+            "v": param_specs,
+            "count": P(),
+        }
+    if opt_name == "sgd":
+        return {"mu": param_specs}
+    if opt_name == "adafactor":
+
+        def fac_spec(spec):
+            parts = tuple(spec)
+            if len(parts) >= 2:
+                return {
+                    "vr": P(*parts[:-1]),
+                    "vc": P(*(parts[:-2] + parts[-1:])),
+                }
+            return {"v": spec}
+
+        return {
+            "f": jax.tree.map(
+                fac_spec, param_specs, is_leaf=lambda s: isinstance(s, P)
+            ),
+            "count": P(),
+        }
+    raise ValueError(opt_name)
+
+
+def replicated_like(tree):
+    return jax.tree.map(lambda _: P(), tree, is_leaf=lambda s: isinstance(s, P))

@@ -1,0 +1,123 @@
+"""Step builders: pure (params, opt_state, batch, key) -> (params', opt', metrics)
+train steps and serve steps per architecture family. One jit per (config,
+shape); all shapes static."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import bert4rec as b4r
+from repro.models import equivariant as eqv
+from repro.models import gnn
+from repro.models import transformer as tr
+from repro.train.optimizer import Optimizer
+
+
+def _accum_grads(loss_fn, params, batches, accum: int):
+    """Microbatched gradient accumulation via lax.scan (memory = 1 microbatch)."""
+    if accum <= 1:
+        loss, grads = jax.value_and_grad(loss_fn)(params, batches)
+        return loss, grads
+
+    split = jax.tree.map(
+        lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]), batches
+    )
+
+    def micro(carry, mb):
+        g_acc, l_acc = carry
+        loss, g = jax.value_and_grad(loss_fn)(params, mb)
+        g_acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), g_acc, g)
+        return (g_acc, l_acc + loss), None
+
+    g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (g, l), _ = jax.lax.scan(micro, (g0, jnp.zeros((), jnp.float32)), split)
+    inv = jnp.float32(1.0 / accum)
+    return l * inv, jax.tree.map(lambda x: x * inv, g)
+
+
+def make_lm_train_step(cfg: tr.TransformerConfig, opt: Optimizer):
+    def loss_fn(params, batch):
+        return tr.lm_loss(params, cfg, batch["tokens"], batch["labels"])
+
+    def step(params, opt_state, batch, key):
+        loss, grads = _accum_grads(loss_fn, params, batch, cfg.grad_accum)
+        new_params, new_opt = opt.update(grads, opt_state, params)
+        return new_params, new_opt, {"loss": loss}
+
+    return step
+
+
+def make_lm_prefill_step(cfg: tr.TransformerConfig):
+    def step(params, batch):
+        h, _ = tr.forward(params, cfg, batch["tokens"])
+        return tr.logits_fn(params, cfg, h[:, -1:, :])
+
+    return step
+
+
+def make_lm_decode_step(cfg: tr.TransformerConfig):
+    def step(params, cache, batch):
+        return tr.decode_step(params, cfg, cache, batch["tokens"])
+
+    return step
+
+
+def make_gnn_train_step(cfg: gnn.GNNConfig, opt: Optimizer):
+    def loss_fn(params, batch):
+        if "targets" in batch:  # regression (graphcast rollout)
+            return gnn.regression_loss(
+                params, cfg, batch["node_feats"], batch["edge_index"], batch["targets"]
+            )
+        return gnn.node_classification_loss(
+            params,
+            cfg,
+            batch["node_feats"],
+            batch["edge_index"],
+            batch["labels"],
+            batch["label_mask"],
+        )
+
+    def step(params, opt_state, batch, key):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        new_params, new_opt = opt.update(grads, opt_state, params)
+        return new_params, new_opt, {"loss": loss}
+
+    return step
+
+
+def make_equivariant_train_step(cfg: eqv.EquivariantConfig, opt: Optimizer):
+    def loss_fn(params, batch):
+        return eqv.energy_loss(
+            params,
+            cfg,
+            batch["node_feats"],
+            batch["coords"],
+            batch["edge_index"],
+            batch["edge_mask"],
+            batch["energy"],
+        )
+
+    def step(params, opt_state, batch, key):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        new_params, new_opt = opt.update(grads, opt_state, params)
+        return new_params, new_opt, {"loss": loss}
+
+    return step
+
+
+def make_recsys_train_step(cfg: b4r.Bert4RecConfig, opt: Optimizer):
+    def step(params, opt_state, batch, key):
+        loss, grads = jax.value_and_grad(
+            lambda p: b4r.cloze_loss(p, cfg, batch["items"], key)
+        )(params)
+        new_params, new_opt = opt.update(grads, opt_state, params)
+        return new_params, new_opt, {"loss": loss}
+
+    return step
+
+
+def make_recsys_score_step(cfg: b4r.Bert4RecConfig):
+    def step(params, batch):
+        return b4r.score_candidates(params, cfg, batch["items"], batch["candidates"])
+
+    return step

@@ -1,0 +1,93 @@
+"""Fault-tolerant training loop.
+
+Wraps a jitted step with: checkpoint/restart (auto-resume from the newest
+complete manifest), straggler-tolerant prefetch, failure retry with state
+restore, and step/throughput accounting. Works for both the LM trainer and
+the streaming triangle counter (any (state, batch) -> state step).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterator, Optional
+
+import jax
+
+from repro.data.prefetch import PrefetchQueue
+from repro.train.checkpoint import CheckpointManager, config_hash
+
+
+@dataclass
+class TrainerConfig:
+    ckpt_dir: str
+    ckpt_every: int = 100
+    keep: int = 3
+    async_save: bool = True
+    max_retries: int = 3
+    prefetch_depth: int = 4
+    deadline_s: Optional[float] = None
+    log_every: int = 10
+
+
+@dataclass
+class TrainLog:
+    steps: list = field(default_factory=list)
+    losses: list = field(default_factory=list)
+    restarts: int = 0
+    stale_steps: int = 0
+
+
+def run_loop(
+    step_fn: Callable,  # (state, batch, step_idx) -> (state, metrics)
+    init_state: Any,
+    batches: Iterator,
+    n_steps: int,
+    tcfg: TrainerConfig,
+    meta: Optional[dict] = None,
+) -> tuple[Any, TrainLog]:
+    ckpt = CheckpointManager(
+        tcfg.ckpt_dir, keep=tcfg.keep, async_save=tcfg.async_save
+    )
+    log = TrainLog()
+    state = init_state
+    start = 0
+    restored, manifest = ckpt.restore(init_state)
+    if restored is not None:
+        state = jax.tree.map(jax.numpy.asarray, restored)
+        start = manifest["step"] + 1
+        log.restarts += 1
+
+    pf = PrefetchQueue(batches, depth=tcfg.prefetch_depth, deadline_s=tcfg.deadline_s)
+    step = start
+    retries = 0
+    t0 = time.time()
+    while step < n_steps:
+        try:
+            batch, stale = pf.get()
+        except StopIteration:
+            break
+        log.stale_steps += int(stale)
+        try:
+            state, metrics = step_fn(state, batch, step)
+        except Exception:
+            # node failure path: restore last complete checkpoint and retry
+            retries += 1
+            log.restarts += 1
+            if retries > tcfg.max_retries:
+                raise
+            restored, manifest = ckpt.restore(init_state)
+            if restored is not None:
+                state = jax.tree.map(jax.numpy.asarray, restored)
+                step = manifest["step"] + 1
+            continue
+        if metrics and "loss" in metrics and step % tcfg.log_every == 0:
+            log.steps.append(step)
+            log.losses.append(float(metrics["loss"]))
+        if tcfg.ckpt_every and step % tcfg.ckpt_every == 0 and step > start:
+            ckpt.save(step, state, {"config_hash": config_hash(meta), **(meta or {})})
+        step += 1
+    ckpt.wait()
+    ckpt.save(step - 1, state, {"config_hash": config_hash(meta), **(meta or {})})
+    ckpt.wait()
+    log.seconds = time.time() - t0  # type: ignore[attr-defined]
+    return state, log

@@ -1,0 +1,101 @@
+"""Subprocess driver for distributed tests (needs XLA host-device count set
+before jax initializes — so it runs in its own process; see test_distributed)."""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro  # noqa: F401  (x64)
+from repro.core import init_state
+from repro.core.distributed import make_coordinated_update, make_pjit_update
+from repro.core.sequential import count_triangles, gamma_after
+from repro.data.graph_stream import batches, erdos_renyi_stream
+from repro.launch.mesh import make_test_mesh
+
+
+def check_invariants(st, edges):
+    elist = [tuple(sorted(map(int, e))) for e in edges]
+    eindex = {e: i for i, e in enumerate(elist)}
+    for i in range(st.f1.shape[0]):
+        f1 = tuple(sorted(map(int, st.f1[i])))
+        assert f1 in eindex, f"f1 {f1} not a stream edge"
+        p1 = eindex[f1]
+        assert int(st.chi[i]) == gamma_after(edges, p1), (
+            i,
+            int(st.chi[i]),
+            gamma_after(edges, p1),
+        )
+        f2 = tuple(sorted(map(int, st.f2[i])))
+        if f2[0] >= 0:
+            p2 = eindex[f2]
+            assert p2 > p1
+            shared = set(f1) & set(f2)
+            assert len(shared) == 1
+            o = tuple(sorted((set(f1) | set(f2)) - shared))
+            closing = eindex.get(o)
+            assert bool(st.has_f3[i]) == (closing is not None and closing > p2)
+
+
+def main():
+    assert jax.device_count() == 8, jax.device_count()
+    mesh = make_test_mesh((2, 4), ("data", "model"))
+    edges = erdos_renyi_stream(20, 96, seed=5)
+    tau = count_triangles(edges)
+    r, s = 512, 32
+
+    # --- explicit coordinated shard_map path ---
+    upd = make_coordinated_update(mesh, r=r, s=s, capacity_factor=4.0)
+    state = init_state(r)
+    key = jax.random.PRNGKey(0)
+    total_ovf = 0
+    for i, (W, nv) in enumerate(batches(edges, s)):
+        state, ovf = upd(
+            state, jnp.asarray(W), jnp.int32(nv), jax.random.fold_in(key, i)
+        )
+        total_ovf += int(ovf)
+    assert total_ovf == 0, f"capacity overflow: {total_ovf}"
+    st = jax.tree.map(np.asarray, state)
+    assert int(st.m_seen) == len(edges)
+    check_invariants(st, edges)
+    print("coordinated shard_map invariants OK, tau =", tau)
+
+    # --- pjit paths (xla-partitioned) ---
+    for scheme in ("independent", "coordinated_xla"):
+        upd2 = make_pjit_update(mesh, scheme)
+        state = init_state(r)
+        for i, (W, nv) in enumerate(batches(edges, s)):
+            state = upd2(
+                state, jnp.asarray(W), jnp.int32(nv), jax.random.fold_in(key, i)
+            )
+        st = jax.tree.map(np.asarray, state)
+        check_invariants(st, edges)
+        print(f"pjit[{scheme}] invariants OK")
+
+    # statistical sanity: estimates near tau with many estimators
+    upd = make_coordinated_update(mesh, r=32768, s=s, capacity_factor=4.0)
+    state = init_state(32768)
+    for i, (W, nv) in enumerate(batches(edges, s)):
+        state, ovf = upd(
+            state, jnp.asarray(W), jnp.int32(nv), jax.random.fold_in(key, 1000 + i)
+        )
+        assert int(ovf) == 0
+    x = np.asarray(
+        jnp.where(
+            state.has_f3,
+            state.chi.astype(jnp.float64) * state.m_seen.astype(jnp.float64),
+            0.0,
+        )
+    )
+    se = x.std() / np.sqrt(len(x))
+    assert abs(x.mean() - tau) < 5 * se + 0.05 * tau, (x.mean(), tau, se)
+    print("coordinated estimate OK:", x.mean(), "tau:", tau)
+    print("ALL-DIST-OK")
+
+
+if __name__ == "__main__":
+    main()

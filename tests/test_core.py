@@ -1,0 +1,200 @@
+"""Core algorithm tests: rankAll, NBSI invariants, unbiasedness, batch invariance."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    bulk_update_all_jit,
+    coarse_estimates,
+    estimate,
+    init_state,
+    rank_all,
+)
+from repro.core.sequential import SequentialNS, count_triangles, gamma_after
+from repro.data.graph_stream import (
+    barabasi_albert_stream,
+    batches,
+    erdos_renyi_stream,
+    planted_triangle_stream,
+)
+
+
+def brute_rank(W: np.ndarray, x: int, y: int) -> int:
+    """Paper Definition 4.2, brute force."""
+    pos = None
+    for i, (a, b) in enumerate(W):
+        if {int(a), int(b)} == {x, y}:
+            pos = i
+            break
+    if pos is not None:
+        return sum(
+            1 for j in range(pos + 1, len(W)) if x in (int(W[j, 0]), int(W[j, 1]))
+        )
+    return sum(1 for a, b in W if x in (int(a), int(b)))
+
+
+def run_stream(edges, r, batch_size, seed=0):
+    state = init_state(r)
+    key = jax.random.PRNGKey(seed)
+    for i, (W, nv) in enumerate(batches(edges, batch_size)):
+        state = bulk_update_all_jit(
+            state, jnp.asarray(W), jnp.int32(nv), jax.random.fold_in(key, i)
+        )
+    return jax.tree.map(np.asarray, state)
+
+
+class TestRankAll:
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    @pytest.mark.parametrize("s,pad", [(16, 0), (13, 3), (40, 8)])
+    def test_matches_bruteforce(self, seed, s, pad):
+        rng = np.random.default_rng(seed)
+        # distinct edges over few vertices -> many shared endpoints
+        seen, edges = set(), []
+        while len(edges) < s:
+            u, v = sorted(rng.integers(0, 12, size=2).tolist())
+            if u != v and (u, v) not in seen:
+                seen.add((u, v))
+                edges.append((u, v))
+        W = np.array(edges, dtype=np.int32)
+        Wp = np.concatenate([W, np.zeros((pad, 2), np.int32)])
+        R = jax.tree.map(np.asarray, rank_all(jnp.asarray(Wp), jnp.int32(s)))
+        # every valid arc present once with the brute-force rank
+        got = {}
+        for i in range(2 * s):
+            if R.key_desc[i] < np.iinfo(np.int64).max:
+                got[(int(R.src[i]), int(R.dst[i]))] = (
+                    int(R.rank[i]),
+                    int(R.pos[i]),
+                )
+        assert len(got) == 2 * s
+        for u, v in W:
+            u, v = int(u), int(v)
+            for x, y in ((u, v), (v, u)):
+                rk, _p = got[(x, y)]
+                assert rk == brute_rank(W, x, y), (x, y)
+        # (src, rank) ordering is ascending (paper observation after Fig. 2)
+        kr = R.key_rank[: 2 * s]
+        assert np.all(np.diff(kr) > 0) or np.all(np.diff(kr.astype(object)) >= 0)
+
+    def test_paper_figure2_example(self):
+        # Fig 1/2: batch of 5 edges BC, CD, EF, BD, DF (pos 1..5 -> 0..4)
+        W = np.array(
+            [[1, 2], [2, 3], [4, 5], [1, 3], [3, 5]], dtype=np.int32
+        )  # B=1,C=2,D=3,E=4,F=5
+        expect = {  # from paper Figure 2 (pos is 1-based there)
+            (1, 3): 0, (1, 2): 1, (2, 3): 0, (2, 1): 1, (3, 5): 0,
+            (3, 1): 1, (3, 2): 2, (4, 5): 0, (5, 3): 0, (5, 4): 1,
+        }
+        R = jax.tree.map(np.asarray, rank_all(jnp.asarray(W), jnp.int32(5)))
+        got = {
+            (int(R.src[i]), int(R.dst[i])): int(R.rank[i]) for i in range(10)
+        }
+        assert got == expect
+
+
+class TestNBSIInvariants:
+    """Deterministic invariants that must hold for *every* realization."""
+
+    @pytest.mark.parametrize("batch_size", [1, 4, 7, 64])
+    @pytest.mark.parametrize("seed", [0, 3])
+    def test_invariants(self, batch_size, seed):
+        edges = erdos_renyi_stream(24, 120, seed=seed)
+        st = run_stream(edges, r=256, batch_size=batch_size, seed=seed)
+        assert int(st.m_seen) == len(edges)
+
+        elist = [tuple(sorted(map(int, e))) for e in edges]
+        eindex = {e: i for i, e in enumerate(elist)}
+
+        for i in range(256):
+            f1 = tuple(sorted(map(int, st.f1[i])))
+            assert f1 in eindex, "f1 must be a stream edge"
+            p1 = eindex[f1]
+            # chi == |Gamma(f1)| exactly (NBSI item 2)
+            assert int(st.chi[i]) == gamma_after(edges, p1)
+            f2 = tuple(sorted(map(int, st.f2[i])))
+            if f2[0] >= 0:
+                assert f2 in eindex, "f2 must be a stream edge"
+                p2 = eindex[f2]
+                assert p2 > p1, "f2 arrives after f1"
+                shared = set(f1) & set(f2)
+                assert len(shared) == 1, "f2 adjacent to f1"
+                # has_f3 <=> closing edge exists and arrived after f2 (items 3-4)
+                o = tuple(sorted((set(f1) | set(f2)) - shared))
+                closing = eindex.get(o)
+                expect_f3 = closing is not None and closing > p2
+                assert bool(st.has_f3[i]) == expect_f3
+            else:
+                assert int(st.chi[i]) == 0 or not st.has_f3[i]
+                # empty neighborhood <=> chi == 0
+                assert (int(st.chi[i]) == 0) == (f2[0] < 0)
+
+    def test_f1_uniformity(self):
+        """f1 is a uniform reservoir sample (statistical, chi^2-ish bound)."""
+        edges = erdos_renyi_stream(30, 40, seed=1)
+        st = run_stream(edges, r=40_000, batch_size=16, seed=7)
+        elist = [tuple(sorted(map(int, e))) for e in edges]
+        eindex = {e: i for i, e in enumerate(elist)}
+        counts = np.zeros(len(edges))
+        for i in range(st.f1.shape[0]):
+            counts[eindex[tuple(sorted(map(int, st.f1[i])))] ] += 1
+        expected = st.f1.shape[0] / len(edges)  # 1000 per edge
+        chi2 = float(np.sum((counts - expected) ** 2 / expected))
+        # dof=39; mean 39, sd ~8.8 -> 39+5*8.8 ~ 83 as a loose bound
+        assert chi2 < 85.0, chi2
+
+
+class TestUnbiasedness:
+    def test_mean_matches_tau_planted(self):
+        edges, tau = planted_triangle_stream(30, 300, 500, seed=2)
+        st = run_stream(edges, r=60_000, batch_size=64, seed=11)
+        from repro.core.state import EstimatorState
+
+        x = np.where(st.has_f3, st.chi.astype(np.float64) * int(st.m_seen), 0.0)
+        mean = x.mean()
+        se = x.std() / np.sqrt(len(x))
+        assert abs(mean - tau) < 5 * se + 0.02 * tau, (mean, tau, se)
+
+    def test_estimate_accuracy_ba(self):
+        edges = barabasi_albert_stream(150, 5, seed=3)
+        tau = count_triangles(edges)
+        assert tau > 0
+        st = run_stream(edges, r=90_000, batch_size=128, seed=5)
+        from repro.core.state import EstimatorState
+
+        est = float(
+            estimate(
+                __import__("repro.core.state", fromlist=["EstimatorState"]).EstimatorState(
+                    *[jnp.asarray(v) for v in st]
+                ),
+                groups=9,
+            )
+        )
+        assert abs(est - tau) / tau < 0.25, (est, tau)
+
+    def test_sequential_oracle_agrees(self):
+        """Bulk and sequential oracles estimate the same quantity."""
+        edges, tau = planted_triangle_stream(20, 150, 300, seed=4)
+        seq = SequentialNS(r=40_000, seed=9)
+        seq.process(edges)
+        xs = seq.coarse()
+        assert abs(xs.mean() - tau) < 5 * xs.std() / np.sqrt(len(xs)) + 0.02 * tau
+        st = run_stream(edges, r=40_000, batch_size=32, seed=13)
+        xb = np.where(st.has_f3, st.chi.astype(np.float64) * int(st.m_seen), 0.0)
+        # same expectation
+        pooled_se = np.sqrt(xs.var() / len(xs) + xb.var() / len(xb))
+        assert abs(xs.mean() - xb.mean()) < 5 * pooled_se + 0.02 * tau
+
+
+class TestBatchInvariance:
+    def test_invariants_hold_any_batching(self):
+        edges = erdos_renyi_stream(20, 60, seed=8)
+        tau = count_triangles(edges)
+        means = []
+        for bs in (1, 5, 60):
+            st = run_stream(edges, r=30_000, batch_size=bs, seed=17)
+            x = np.where(st.has_f3, st.chi.astype(np.float64) * int(st.m_seen), 0.0)
+            means.append(x.mean())
+        # all batchings estimate the same tau
+        for mu in means:
+            assert abs(mu - tau) < 0.15 * max(tau, 1.0) + 3.0, (means, tau)

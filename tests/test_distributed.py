@@ -1,0 +1,27 @@
+"""Distributed-path tests. The coordinated scheme needs >1 device, so the
+actual checks run in a subprocess with XLA_FLAGS=--xla_force_host_platform_
+device_count=8 (set *only* there, per the dry-run isolation rule)."""
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+@pytest.mark.slow
+def test_distributed_paths():
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tests" / "_dist_driver.py")],
+        capture_output=True,
+        text=True,
+        timeout=900,
+        env={
+            "PYTHONPATH": str(ROOT / "src"),
+            "PATH": "/usr/bin:/bin:/usr/local/bin",
+            "JAX_PLATFORMS": "cpu",
+        },
+    )
+    assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
+    assert "ALL-DIST-OK" in proc.stdout
