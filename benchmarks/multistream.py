@@ -1,0 +1,57 @@
+"""Multi-tenant engine throughput: N concurrent streams vs N sequential runs.
+
+The acceptance bar for the engine: a bank of T tenant streams under one
+vmapped jit program must sustain at least the single-stream edges/s on the
+same synthetic BA stream — i.e. multi-tenancy amortizes dispatch/sort
+overhead instead of multiplying it. Reports, per T in {1, 2, 4}:
+
+  * aggregate edges/s (T x m edges through one shared program), and
+  * the time T back-to-back single-stream engine runs would take.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import csv_row
+from repro.data.graph_stream import barabasi_albert_stream, batches
+from repro.engine import EngineConfig, TriangleCountEngine
+
+
+def _run(T: int, r: int, edges, bs: int) -> tuple[float, float]:
+    """Returns (seconds, aggregate edges/s) for a T-tenant engine pass."""
+    eng = TriangleCountEngine(
+        EngineConfig(r=r, batch_size=bs, n_tenants=T,
+                     seeds=tuple(range(T)))
+    )
+    it = list(batches(edges, bs))
+    eng.ingest(*it[0])  # compile on first batch shape
+    eng.estimate()
+    t0 = time.perf_counter()
+    for W, nv in it[1:]:
+        eng.ingest(W, nv)
+    eng.estimate()  # forces completion of the queue
+    dt = time.perf_counter() - t0
+    m = sum(nv for _, nv in it[1:])
+    return dt, T * m / dt
+
+
+def main(r: int = 100_000, bs: int = 4096) -> list[str]:
+    edges = barabasi_albert_stream(20_000, 8, seed=0)
+    m = len(edges)
+    rows = []
+    dt1, eps1 = _run(1, r, edges, bs)
+    rows.append(csv_row("multistream/T1", dt1 * 1e6,
+                        f"edges_per_s={eps1:.0f};r={r};m={m}"))
+    print(rows[-1], flush=True)
+    for T in (2, 4):
+        dt, eps = _run(T, r, edges, bs)
+        rows.append(csv_row(
+            f"multistream/T{T}", dt * 1e6,
+            f"edges_per_s={eps:.0f};vs_sequential={T*dt1/dt:.2f}x;"
+            f"vs_single_stream={eps/eps1:.2f}x;r={r};m={m}"))
+        print(rows[-1], flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -19,7 +19,14 @@ def main() -> None:
     args = ap.parse_args()
     only = set(filter(None, args.only.split(",")))
 
-    from benchmarks import accuracy, breakdown, kernels, schemes, throughput
+    from benchmarks import (
+        accuracy,
+        breakdown,
+        kernels,
+        multistream,
+        schemes,
+        throughput,
+    )
 
     benches = {
         "accuracy": accuracy.main,      # paper Table 2
@@ -27,6 +34,7 @@ def main() -> None:
         "schemes": schemes.main,        # paper Table 3 / Section 1
         "breakdown": breakdown.main,    # paper Figure 5
         "kernels": kernels.main,        # kernel contracts + bytes
+        "multistream": multistream.main,  # engine multi-tenant bank
     }
     print("name,us_per_call,derived")
     all_rows = []

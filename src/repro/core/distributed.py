@@ -31,6 +31,7 @@ assert zero overflow at the sizes exercised.
 from __future__ import annotations
 
 import functools
+import inspect
 from typing import NamedTuple
 
 import jax
@@ -45,6 +46,26 @@ from repro.primitives.sort import pack2, sort_by_key
 
 INF64 = jnp.int64(0x7FFFFFFFFFFFFFFF)
 _HASH_MULT = jnp.uint32(2654435761)
+
+if hasattr(jax, "shard_map"):
+    _sm_impl = jax.shard_map
+else:  # pragma: no cover - old jax only exports the experimental spelling
+    from jax.experimental.shard_map import shard_map as _sm_impl
+
+# the top-level export and the check_rep->check_vma rename landed in
+# different jax releases, so key the kwarg on the actual signature
+_sm_check_kw = (
+    "check_vma"
+    if "check_vma" in inspect.signature(_sm_impl).parameters
+    else "check_rep"
+)
+
+
+def _shard_map(f, mesh, *, in_specs, out_specs):
+    return _sm_impl(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        **{_sm_check_kw: False},
+    )
 
 
 # --------------------------------------------------------------------------
@@ -363,11 +384,10 @@ def make_coordinated_update(
     est2 = P(axes, None)
     rep = P()
     state_spec = EstimatorState(f1=est2, chi=est, f2=est2, has_f3=est, m_seen=rep)
-    shmapped = jax.shard_map(
+    shmapped = _shard_map(
         update,
-        mesh=mesh,
+        mesh,
         in_specs=(state_spec, P(axes, None), rep, rep),
         out_specs=(state_spec, rep),
-        check_vma=False,
     )
     return jax.jit(shmapped, donate_argnums=(0,))

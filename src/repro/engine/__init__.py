@@ -1,0 +1,26 @@
+"""Engine: the long-lived multi-stream triangle-count service layer.
+
+Sits between ``repro.core`` (the pure batch-update math) and ``repro.launch``
+(CLIs): owns estimator state for N tenant streams, ingests edge batches
+incrementally, answers rolling estimates, and snapshots/restores itself.
+"""
+from repro.engine.backends import BACKENDS, BackendPlan, select_backend
+from repro.engine.engine import (
+    EngineConfig,
+    EngineDiagnostics,
+    SnapshotMismatch,
+    TriangleCountEngine,
+)
+from repro.engine.service import StreamReport, run_stream
+
+__all__ = [
+    "BACKENDS",
+    "BackendPlan",
+    "EngineConfig",
+    "EngineDiagnostics",
+    "SnapshotMismatch",
+    "StreamReport",
+    "TriangleCountEngine",
+    "run_stream",
+    "select_backend",
+]

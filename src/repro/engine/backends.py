@@ -1,0 +1,117 @@
+"""Backend selection for TriangleCountEngine.
+
+One engine API, four execution plans over the same ``bulk_update_all``
+semantics (and therefore the same estimate distribution — counter-based RNG
+makes the paths interchangeable mid-stream):
+
+  single            jit(vmap(bulk_update_all)) over the tenant axis. The
+                    default on one device and the only plan that runs a
+                    multi-tenant bank today; N streams share one program.
+  pjit_independent  paper Section 5's "independent bulk parallel": W
+                    replicated, each device sorts the whole batch for its
+                    estimator shard. Zero collectives, p-times duplicated
+                    sort work.
+  pjit_coordinated  W sharded; XLA's SPMD partitioner inserts the collectives
+                    for the global sorts/searches.
+  shardmap          the explicit coordinated scheme (hash-partitioned arcs +
+                    routed multisearches, repro.core.distributed). Reports a
+                    bucket-overflow diagnostic the engine watches.
+
+``select_backend`` implements the "auto" policy: no mesh (or a 1-device mesh)
+-> single; a real mesh with divisible shapes -> shardmap (the paper's
+recommended coordinated scheme); otherwise pjit_coordinated as the safe
+fallback. Multi-tenant banks currently force the single plan — sharding the
+tenant axis itself is the next scaling step (see ROADMAP).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+
+from repro.core.bulk import bulk_update_all
+
+BACKENDS = ("single", "pjit_independent", "pjit_coordinated", "shardmap")
+
+
+@dataclass(frozen=True)
+class BackendPlan:
+    """How the engine executes ingest: a name plus a builder returning the
+    jitted update callable for a given config/mesh."""
+
+    name: str
+    banked: bool  # state carries a leading (n_tenants,) axis
+    reports_overflow: bool  # update returns (state, overflow)
+    build: Callable[..., Callable]
+
+
+def _build_single(config, mesh) -> Callable:
+    return jax.jit(jax.vmap(bulk_update_all), donate_argnums=(0,))
+
+
+def _build_pjit(scheme: str):
+    def build(config, mesh) -> Callable:
+        from repro.core.distributed import make_pjit_update
+
+        return make_pjit_update(mesh, scheme=scheme)
+
+    return build
+
+
+def _build_shardmap(config, mesh) -> Callable:
+    from repro.core.distributed import make_coordinated_update
+
+    return make_coordinated_update(
+        mesh,
+        r=config.r,
+        s=config.batch_size,
+        capacity_factor=config.capacity_factor,
+    )
+
+
+_PLANS = {
+    "single": BackendPlan("single", True, False, _build_single),
+    "pjit_independent": BackendPlan(
+        "pjit_independent", False, False, _build_pjit("independent")
+    ),
+    "pjit_coordinated": BackendPlan(
+        "pjit_coordinated", False, False, _build_pjit("coordinated_xla")
+    ),
+    "shardmap": BackendPlan("shardmap", False, True, _build_shardmap),
+}
+
+
+def _mesh_size(mesh: Any) -> int:
+    return int(mesh.size) if mesh is not None else 1
+
+
+def select_backend(config, mesh: Optional[Any] = None) -> BackendPlan:
+    """Resolve config.backend (possibly "auto") to a concrete BackendPlan."""
+    name = config.backend
+    p = _mesh_size(mesh)
+    if name == "auto":
+        if p <= 1 or config.n_tenants > 1:
+            name = "single"
+        elif config.r % p == 0 and config.batch_size % p == 0:
+            name = "shardmap"
+        else:
+            name = "pjit_coordinated"
+    if name not in _PLANS:
+        raise ValueError(f"unknown backend {name!r}; choose from {BACKENDS}")
+    plan = _PLANS[name]
+    if not plan.banked and config.n_tenants > 1:
+        raise ValueError(
+            f"backend {name!r} is single-tenant; multi-tenant banks need "
+            "backend='single' (or 'auto')"
+        )
+    if plan.name != "single" and mesh is None:
+        raise ValueError(f"backend {name!r} requires a mesh")
+    if plan.name == "shardmap" and (
+        config.r % p != 0 or config.batch_size % p != 0
+    ):
+        raise ValueError(
+            f"shardmap needs r ({config.r}) and batch_size "
+            f"({config.batch_size}) divisible by mesh size {p}"
+        )
+    return plan

@@ -1,0 +1,310 @@
+"""TriangleCountEngine: a long-lived, multi-tenant streaming triangle counter.
+
+The paper's algorithm is a *continuously running* estimator over an unbounded
+edge stream; this module packages it as a service-grade object instead of a
+one-shot script:
+
+  * ``ingest(W)`` incorporates one batch of edges (fixed batch shape -> one
+    compiled program for the whole stream, however long it runs).
+  * ``estimate()`` answers a rolling median-of-means query at any point
+    mid-stream without disturbing ingestion state.
+  * ``snapshot()`` / ``restore()`` round-trip the complete engine state
+    (estimators + RNG cursor) through host memory or a CheckpointManager, so
+    a killed process resumes bit-for-bit.
+
+Multi-tenancy: the engine owns a *bank* of ``n_tenants`` independent estimator
+sets stored as one pytree with a leading tenant axis, updated by a single
+``jax.vmap``-ed ``bulk_update_all`` under one ``jax.jit``. N concurrent streams
+(or N accuracy tiers of one stream at different ``r``-per-group seeds) share
+one compiled program and one device mesh — no per-stream recompilation, no
+per-stream dispatch overhead. Because randomness is counter-based
+(``jax.random.fold_in`` of a per-tenant root key with the batch index), tenant
+``t`` of the bank is **bit-for-bit identical** to a standalone single-stream
+run seeded the same way; tests assert this exactly.
+
+Backend selection (see ``repro.engine.backends``): on a single device the
+vmapped sequential ``bulk_update_all`` runs; on a mesh the engine picks the
+pjit or explicit-collective coordinated path from ``repro.core.distributed``
+and watches its overflow diagnostic, escalating the routing capacity factor
+(one recompile) when hot vertices overflow a bucket.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Any, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.estimate import estimate as _estimate_one
+from repro.core.state import EstimatorState, init_state
+from repro.engine.backends import BackendPlan, select_backend
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """Static configuration; every field participates in program shape, so a
+    snapshot can only be restored into an engine with an equal config."""
+
+    r: int  # estimators per tenant
+    batch_size: int  # s: fixed ingest width (shorter batches are padded)
+    n_tenants: int = 1
+    groups: int = 9  # median-of-means groups for estimate()
+    seeds: Optional[tuple[int, ...]] = None  # per-tenant RNG seeds
+    backend: str = "auto"  # auto | single | pjit_independent | pjit_coordinated | shardmap
+    capacity_factor: float = 2.0  # shardmap routing capacity (see distributed.py)
+
+    def tenant_seeds(self) -> tuple[int, ...]:
+        if self.seeds is not None:
+            if len(self.seeds) != self.n_tenants:
+                raise ValueError(
+                    f"seeds has {len(self.seeds)} entries for "
+                    f"{self.n_tenants} tenants"
+                )
+            return tuple(self.seeds)
+        return tuple(range(self.n_tenants))
+
+
+@dataclass
+class EngineDiagnostics:
+    """Rolling operational counters (host-side, not part of the snapshot)."""
+
+    batches_ingested: int = 0
+    edges_ingested: int = 0
+    overflow_batches: int = 0  # shardmap batches that reported bucket overflow
+    capacity_escalations: int = 0  # recompiles triggered by overflow
+    backend: str = ""
+
+
+class SnapshotMismatch(ValueError):
+    """Snapshot config does not match the engine it is being restored into."""
+
+
+def _snapshot_config(snap: dict) -> tuple:
+    return tuple(int(x) for x in np.asarray(snap["config"]).tolist())
+
+
+class TriangleCountEngine:
+    """Long-lived multi-stream triangle-count service (see module docstring)."""
+
+    def __init__(self, config: EngineConfig, mesh: Any = None):
+        if config.r <= 0 or config.batch_size <= 0 or config.n_tenants <= 0:
+            raise ValueError(f"bad config: {config}")
+        self.config = config
+        self.mesh = mesh
+        self.plan: BackendPlan = select_backend(config, mesh)
+        self._update = self.plan.build(config, mesh)
+        self.diag = EngineDiagnostics(backend=self.plan.name)
+        self._step = 0  # batches ingested so far (the RNG fold_in counter)
+        self._pending_overflow: list = []  # device scalars, drained lazily
+        self._root_keys = jnp.stack(
+            [jax.random.PRNGKey(s) for s in config.tenant_seeds()]
+        )
+        self._state = self._init_bank()
+        # per-tenant estimate under one jit; groups is static
+        self._estimate = jax.jit(
+            jax.vmap(lambda st: _estimate_one(st, groups=config.groups))
+        )
+
+    # -- construction -------------------------------------------------------
+    def _init_bank(self) -> EstimatorState:
+        one = init_state(self.config.r)
+        if self.plan.banked:
+            return jax.tree.map(
+                lambda x: jnp.broadcast_to(
+                    x[None], (self.config.n_tenants,) + x.shape
+                ),
+                one,
+            )
+        return one
+
+    @property
+    def n_tenants(self) -> int:
+        return self.config.n_tenants
+
+    @property
+    def step(self) -> int:
+        """Number of batches ingested (also the RNG fold_in cursor)."""
+        return self._step
+
+    def edges_seen(self) -> np.ndarray:
+        """(n_tenants,) int64: stream length ingested per tenant."""
+        m = np.asarray(self._state.m_seen)
+        return m if m.ndim else np.broadcast_to(m, (self.n_tenants,)).copy()
+
+    # -- ingestion ----------------------------------------------------------
+    def _pad(self, W: np.ndarray) -> tuple[np.ndarray, int]:
+        s = self.config.batch_size
+        n = W.shape[0]
+        if n > s:
+            raise ValueError(
+                f"batch of {n} edges exceeds batch_size={s}; split it first "
+                "(repro.data.graph_stream.batches)"
+            )
+        if n < s:
+            W = np.concatenate(
+                [W, np.zeros((s - n, 2), dtype=np.int32)], axis=0
+            )
+        return np.ascontiguousarray(W, dtype=np.int32), n
+
+    def ingest(
+        self,
+        W: np.ndarray,
+        n_valid: Optional[Any] = None,
+    ) -> None:
+        """Incorporate one batch of edges into every tenant.
+
+        W is either ``(<=s, 2)`` — the same edges broadcast to all tenants
+        (accuracy-tier mode: tenants differ only by RNG seed) — or
+        ``(n_tenants, <=s, 2)`` per-tenant batches. ``n_valid`` overrides the
+        inferred count (scalar or per-tenant) when W is pre-padded.
+        """
+        W = np.asarray(W)
+        T = self.n_tenants
+        if W.ndim == 2:
+            Wp, n = self._pad(W)
+            nv = np.full((T,), n if n_valid is None else int(n_valid), np.int32)
+            Wb = np.broadcast_to(Wp[None], (T,) + Wp.shape)
+        elif W.ndim == 3:
+            if W.shape[0] != T:
+                raise ValueError(f"got {W.shape[0]} tenant batches for {T} tenants")
+            padded = [self._pad(W[t]) for t in range(T)]
+            Wb = np.stack([p[0] for p in padded])
+            if n_valid is None:
+                nv = np.array([p[1] for p in padded], np.int32)
+            else:
+                nv = np.broadcast_to(np.asarray(n_valid, np.int32), (T,)).copy()
+        else:
+            raise ValueError(f"W must be (s,2) or (T,s,2), got {W.shape}")
+
+        keys = jax.vmap(jax.random.fold_in, in_axes=(0, None))(
+            self._root_keys, self._step
+        )
+        if not self.plan.banked:  # distributed single-tenant backends
+            Wb, nv, keys = Wb[0], jnp.int32(int(nv[0])), keys[0]
+        out = self._update(self._state, jnp.asarray(Wb), jnp.asarray(nv), keys)
+        if self.plan.reports_overflow:
+            # don't int() the overflow here: that would sync the host to the
+            # device every batch and kill prefetch overlap. Drain every few
+            # batches (and at every query/snapshot) instead — escalation lands
+            # a few batches late, which is fine: state stays a valid NBSI
+            # realization either way.
+            self._state, overflow = out
+            self._pending_overflow.append(overflow)
+            if len(self._pending_overflow) >= 8:
+                self._drain_overflow()
+        else:
+            self._state = out
+        self._step += 1
+        self.diag.batches_ingested += 1
+        self.diag.edges_ingested += int(np.max(nv))
+
+    def _drain_overflow(self) -> None:
+        if not self._pending_overflow:
+            return
+        pending, self._pending_overflow = self._pending_overflow, []
+        total = sum(int(o) for o in pending)
+        if total > 0:
+            self._escalate_capacity(total)
+
+    def _escalate_capacity(self, overflow: int) -> None:
+        """Hot vertices overflowed a routing bucket: the affected queries were
+        answered conservatively (state stays a valid NBSI realization but loses
+        those samples' contribution), so widen the buckets for future batches.
+        One recompile per escalation; estimator state is untouched."""
+        self.diag.overflow_batches += 1
+        self.diag.capacity_escalations += 1
+        self.config = replace(
+            self.config, capacity_factor=self.config.capacity_factor * 2.0
+        )
+        self._update = self.plan.build(self.config, self.mesh)
+
+    def ingest_stream(
+        self, batch_iter: Iterable[tuple[np.ndarray, int]]
+    ) -> int:
+        """Drain a ``(W, n_valid)`` iterator (e.g. graph_stream.batches)."""
+        n = 0
+        for W, nv in batch_iter:
+            self.ingest(W, nv)
+            n += 1
+        return n
+
+    def sync(self) -> None:
+        """Block until all dispatched ingest work has completed on device."""
+        self._drain_overflow()
+        jax.block_until_ready(self._state)
+
+    # -- queries ------------------------------------------------------------
+    def estimate(self) -> np.ndarray:
+        """(n_tenants,) rolling median-of-means estimates (paper Thm 3.4)."""
+        self._drain_overflow()
+        st = self._state
+        if not self.plan.banked:
+            st = jax.tree.map(lambda x: x[None], st)
+        return np.asarray(self._estimate(st))
+
+    def estimate_tenant(self, tenant: int = 0) -> float:
+        return float(self.estimate()[tenant])
+
+    # -- snapshot / restore -------------------------------------------------
+    def snapshot(self) -> dict:
+        """Complete engine state as a flat dict of host numpy arrays.
+
+        The dict is a plain pytree, so it round-trips through
+        ``repro.train.checkpoint.CheckpointManager`` unchanged.
+        """
+        self._drain_overflow()
+        st = self._state
+        if not self.plan.banked:
+            st = jax.tree.map(lambda x: x[None], st)
+        snap = {f: np.asarray(getattr(st, f)) for f in st._fields}
+        snap["root_keys"] = np.asarray(self._root_keys)
+        snap["step"] = np.int64(self._step)
+        snap["config"] = np.array(
+            [self.config.r, self.config.batch_size, self.config.n_tenants],
+            np.int64,
+        )
+        return snap
+
+    def restore(self, snap: dict) -> None:
+        """Restore from a snapshot() dict (shape-checked against config).
+
+        ``r`` and ``n_tenants`` must match; ``batch_size`` may differ (the
+        estimator state is batch-size independent — Theorem 4.1's batch
+        invariance — so a restored stream can legally re-batch).
+        """
+        got = _snapshot_config(snap)
+        want = (self.config.r, self.config.batch_size, self.config.n_tenants)
+        if (got[0], got[2]) != (want[0], want[2]):
+            raise SnapshotMismatch(
+                f"snapshot (r, batch_size, n_tenants)={got} != engine {want}"
+            )
+        bank = EstimatorState(
+            **{f: jnp.asarray(snap[f]) for f in EstimatorState._fields}
+        )
+        if not self.plan.banked:
+            bank = jax.tree.map(lambda x: x[0], bank)
+        self._state = bank
+        self._root_keys = jnp.asarray(snap["root_keys"])
+        self._step = int(snap["step"])
+
+    @classmethod
+    def from_snapshot(
+        cls,
+        snap: dict,
+        *,
+        batch_size: Optional[int] = None,
+        mesh: Any = None,
+        **config_kwargs,
+    ) -> "TriangleCountEngine":
+        r, s, t = _snapshot_config(snap)
+        cfg = EngineConfig(
+            r=r,
+            batch_size=batch_size if batch_size is not None else s,
+            n_tenants=t,
+            **config_kwargs,
+        )
+        eng = cls(cfg, mesh=mesh)
+        eng.restore(snap)
+        return eng

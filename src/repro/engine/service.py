@@ -1,0 +1,135 @@
+"""Stream service loop: engine + prefetch + checkpoints + rolling queries.
+
+``run_stream`` is the production ingestion loop every driver shares:
+
+  * batches flow through ``repro.data.prefetch.PrefetchQueue`` so host-side
+    generation/IO overlaps device compute (with the backup-batch straggler
+    fallback disabled by default — estimator streams must not replay edges,
+    so no deadline is set unless the caller opts in);
+  * the engine snapshot is checkpointed every ``ckpt_every`` batches through
+    ``repro.train.checkpoint.CheckpointManager`` (atomic manifest, keep-k,
+    async), and the loop auto-resumes from the newest complete manifest —
+    a killed run continues bit-for-bit thanks to the counter-based RNG;
+  * ``report_every`` invokes a query callback mid-stream with the rolling
+    per-tenant estimates — the "serve" path answers queries from the same
+    loop without stalling ingestion more than one estimate() dispatch.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Iterable, Optional
+
+import numpy as np
+
+from repro.data.prefetch import PrefetchQueue
+from repro.engine.engine import SnapshotMismatch, TriangleCountEngine
+from repro.train.checkpoint import CheckpointManager, config_hash
+
+
+@dataclass
+class StreamReport:
+    """What one run_stream() call did (host-side accounting)."""
+
+    batches: int = 0  # batches ingested by THIS call (excludes resumed ones)
+    edges: int = 0  # max over tenants of edges ingested by this call
+    seconds: float = 0.0
+    resumed_from: int = 0  # engine step restored from a checkpoint, 0 if fresh
+    stale_batches: int = 0
+
+    @property
+    def edges_per_s(self) -> float:
+        return self.edges / self.seconds if self.seconds > 0 else 0.0
+
+
+QueryCallback = Callable[[int, np.ndarray, np.ndarray], None]
+# (engine_step, per-tenant estimates, per-tenant edges_seen) -> None
+
+
+def run_stream(
+    engine: TriangleCountEngine,
+    batch_iter: Iterable,
+    *,
+    ckpt_dir: Optional[str] = None,
+    ckpt_every: int = 0,
+    report_every: int = 0,
+    on_report: Optional[QueryCallback] = None,
+    prefetch_depth: int = 4,
+    deadline_s: Optional[float] = None,
+) -> StreamReport:
+    """Drain ``batch_iter`` ((W, n_valid) pairs) into ``engine``.
+
+    If ``ckpt_dir`` is given the engine first restores from the newest
+    complete checkpoint there and *skips* the already-ingested prefix of the
+    iterator, then saves every ``ckpt_every`` batches plus once at the end.
+    """
+    rep = StreamReport()
+    ckpt = None
+    if ckpt_dir is not None:
+        ckpt = CheckpointManager(ckpt_dir, async_save=True)
+        try:
+            restored, manifest = ckpt.restore(engine.snapshot())
+        except (AssertionError, KeyError) as e:
+            raise SnapshotMismatch(
+                f"checkpoint in {ckpt_dir!r} does not fit this engine "
+                f"(r={engine.config.r}, tenants={engine.config.n_tenants}); "
+                "point --ckpt-dir at a fresh directory or match the saved "
+                f"config. Underlying error: {e}"
+            ) from e
+        if restored is not None:
+            # the skip below counts BATCHES, so resuming under a different
+            # batch_size would mis-position the stream (skip the wrong edges)
+            ckpt_bs = int(np.asarray(restored["config"])[1])
+            if ckpt_bs != engine.config.batch_size:
+                raise SnapshotMismatch(
+                    f"checkpoint in {ckpt_dir!r} was written with "
+                    f"batch_size={ckpt_bs}, engine has "
+                    f"{engine.config.batch_size}; run_stream resumes by "
+                    "skipping whole batches, so the sizes must match "
+                    "(re-batching needs manual engine.restore + stream "
+                    "positioning)"
+                )
+            engine.restore(restored)
+            rep.resumed_from = engine.step
+
+    pf = PrefetchQueue(iter(batch_iter), depth=prefetch_depth, deadline_s=deadline_s)
+    meta = {
+        "r": engine.config.r,
+        "batch": engine.config.batch_size,
+        "tenants": engine.config.n_tenants,
+    }
+    skip = engine.step  # batches already folded into the restored state
+    seen = 0
+    t0 = time.time()
+    while True:
+        try:
+            batch, stale = pf.get()
+        except StopIteration:
+            break
+        rep.stale_batches += int(stale)
+        seen += 1
+        if seen <= skip:
+            continue
+        W, nv = batch
+        engine.ingest(W, nv)
+        rep.batches += 1
+        rep.edges += int(np.asarray(nv).max())
+        if report_every and engine.step % report_every == 0 and on_report:
+            on_report(engine.step, engine.estimate(), engine.edges_seen())
+        if ckpt and ckpt_every and rep.batches % ckpt_every == 0:
+            ckpt.save(
+                engine.step,
+                engine.snapshot(),
+                {"config_hash": config_hash(meta), **meta},
+            )
+    engine.sync()  # async dispatches must land before the throughput clock stops
+    rep.seconds = time.time() - t0
+    if ckpt:
+        ckpt.wait()
+        ckpt.save(
+            engine.step,
+            engine.snapshot(),
+            {"config_hash": config_hash(meta), **meta},
+        )
+        ckpt.wait()
+    return rep

@@ -1,24 +1,21 @@
-"""Streaming triangle-count driver (the paper's workload, end to end).
+"""Streaming triangle-count driver: a thin CLI over TriangleCountEngine.
 
-Reads/generates an edge stream, processes it in batches with the chosen
-scheme, reports the estimate, throughput, and accuracy when the true count is
-known. Fault tolerant: estimator state checkpoints via the trainer loop, so a
-killed run resumes mid-stream without re-reading earlier batches.
+Reads/generates an edge stream and drains it through the engine service loop
+(prefetched ingestion, periodic snapshots, auto-resume), then reports the
+estimate, throughput, and accuracy when the true count is known. With
+``--tenants N`` the same stream is counted by N independent estimator banks
+(accuracy tiers / seed replicas) in one shared jit program; tenant 0 always
+reproduces the single-tenant run bit-for-bit.
 
   PYTHONPATH=src python -m repro.launch.stream --graph ba --nodes 2000 \
-      --estimators 100000 --batch 4096 --scheme single
+      --estimators 100000 --batch 4096
+  PYTHONPATH=src python -m repro.launch.stream --graph ba --tenants 4
 """
 from __future__ import annotations
 
 import argparse
-import time
-
-import jax
-import jax.numpy as jnp
-import numpy as np
 
 import repro  # noqa: F401
-from repro.core import bulk_update_all_jit, estimate, init_state
 from repro.core.sequential import count_triangles
 from repro.data.graph_stream import (
     barabasi_albert_stream,
@@ -26,7 +23,7 @@ from repro.data.graph_stream import (
     erdos_renyi_stream,
     planted_triangle_stream,
 )
-from repro.train.trainer import TrainerConfig, run_loop
+from repro.engine import EngineConfig, TriangleCountEngine, run_stream
 
 
 def make_stream(args):
@@ -43,6 +40,19 @@ def make_stream(args):
     return edges, tau
 
 
+def build_engine(args) -> TriangleCountEngine:
+    return TriangleCountEngine(
+        EngineConfig(
+            r=args.estimators,
+            batch_size=args.batch,
+            n_tenants=args.tenants,
+            groups=args.groups,
+            seeds=tuple(args.seed + t for t in range(args.tenants)),
+            backend=args.backend,
+        )
+    )
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--graph", choices=("ba", "er", "planted"), default="ba")
@@ -54,42 +64,35 @@ def main():
     ap.add_argument("--batch", type=int, default=4096)
     ap.add_argument("--groups", type=int, default=9)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--tenants", type=int, default=1,
+                    help="independent estimator banks over the same stream")
+    ap.add_argument("--backend", default="auto",
+                    help="auto|single|pjit_independent|pjit_coordinated|shardmap")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_stream_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=0, help="0 = off")
     args = ap.parse_args()
 
     edges, tau = make_stream(args)
     print(f"stream: m={len(edges)} tau={tau}")
-    key = jax.random.PRNGKey(args.seed)
 
-    def step_fn(state, batch, i):
-        W, nv = batch
-        state = bulk_update_all_jit(
-            state, jnp.asarray(W), jnp.int32(nv), jax.random.fold_in(key, i)
-        )
-        return state, {}
-
-    n_batches = -(-len(edges) // args.batch)
-    t0 = time.time()
-    state, log = run_loop(
-        step_fn,
-        init_state(args.estimators),
-        iter(batches(edges, args.batch)),
-        n_batches,
-        TrainerConfig(
-            ckpt_dir=args.ckpt_dir,
-            ckpt_every=args.ckpt_every,
-            async_save=True,
-        ),
-        meta={"r": args.estimators, "batch": args.batch},
+    engine = build_engine(args)
+    rep = run_stream(
+        engine,
+        batches(edges, args.batch),
+        ckpt_dir=args.ckpt_dir if args.ckpt_every else None,
+        ckpt_every=args.ckpt_every,
     )
-    jax.block_until_ready(state.chi)
-    dt = time.time() - t0
-    est = float(estimate(state, groups=args.groups))
+    dt = max(rep.seconds, 1e-9)
     print(f"processed {len(edges)} edges in {dt:.2f}s "
           f"({len(edges)/dt/1e6:.2f}M edges/s, r={args.estimators})")
+    ests = engine.estimate()
+    est = float(ests[0])
     print(f"estimate: {est:.1f}" + (
         f"  true: {tau}  rel.err: {abs(est-tau)/max(tau,1):.3%}" if tau else ""))
+    for t in range(1, args.tenants):
+        e = float(ests[t])
+        print(f"estimate[tenant {t}]: {e:.1f}" + (
+            f"  rel.err: {abs(e-tau)/max(tau,1):.3%}" if tau else ""))
 
 
 if __name__ == "__main__":

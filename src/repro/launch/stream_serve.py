@@ -1,0 +1,122 @@
+"""Serving driver for the streaming counter: ingest forever, answer queries.
+
+Runs a TriangleCountEngine over a (possibly unbounded) edge stream and
+answers rolling triangle-count queries *mid-stream* — the service shape the
+paper's unbounded-stream setting implies, rather than a one-shot batch run.
+
+Two query surfaces:
+  * ``--report-every K``: every K batches, print the per-tenant rolling
+    estimates (machine-parseable ``query step=.. tenant=.. ..`` lines).
+  * ``--interactive``: additionally read queries from stdin while ingesting —
+    a tenant id (``0``), ``all``, or ``quit``; each answers from the live
+    state between batches.
+
+  PYTHONPATH=src python -m repro.launch.stream_serve --graph ba --nodes 5000 \
+      --tenants 4 --estimators 32768 --batch 4096 --report-every 4
+"""
+from __future__ import annotations
+
+import argparse
+import queue
+import sys
+import threading
+
+import repro  # noqa: F401
+from repro.data.graph_stream import batches
+from repro.engine import run_stream
+from repro.launch.stream import build_engine, make_stream
+
+
+def _print_rolling(step, ests, edges_seen, tau=None):
+    for t, e in enumerate(ests):
+        line = (f"query step={step} tenant={t} m={int(edges_seen[t])} "
+                f"estimate={float(e):.1f}")
+        if tau:
+            line += f" rel.err={abs(float(e)-tau)/max(tau,1):.3%}"
+        print(line, flush=True)
+
+
+def _stdin_queries(q: queue.Queue):
+    for line in sys.stdin:
+        q.put(line.strip())
+        if line.strip() == "quit":
+            return
+    q.put("quit")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--graph", choices=("ba", "er", "planted"), default="ba")
+    ap.add_argument("--nodes", type=int, default=5000)
+    ap.add_argument("--edges", type=int, default=20000)
+    ap.add_argument("--degree", type=int, default=8)
+    ap.add_argument("--triangles", type=int, default=100)
+    ap.add_argument("--estimators", type=int, default=32768)
+    ap.add_argument("--batch", type=int, default=4096)
+    ap.add_argument("--groups", type=int, default=9)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--tenants", type=int, default=2)
+    ap.add_argument("--backend", default="auto")
+    ap.add_argument("--report-every", type=int, default=4)
+    ap.add_argument("--repeat", type=int, default=1,
+                    help="replay the generated stream this many times "
+                         "(simulates a longer-lived service)")
+    ap.add_argument("--interactive", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    args = ap.parse_args()
+
+    edges, tau = make_stream(args)
+    print(f"stream: m={len(edges)} tau={tau} tenants={args.tenants}", flush=True)
+    engine = build_engine(args)
+
+    qq: queue.Queue = queue.Queue()
+    if args.interactive:
+        threading.Thread(target=_stdin_queries, args=(qq,), daemon=True).start()
+
+    stop = False
+
+    def on_report(step, ests, seen):
+        nonlocal stop
+        _print_rolling(step, ests, seen, tau)
+        while not qq.empty():
+            cmd = qq.get_nowait()
+            if cmd == "quit":
+                stop = True
+            elif cmd == "all" or cmd == "":
+                _print_rolling(step, engine.estimate(), engine.edges_seen(), tau)
+            else:
+                try:
+                    t = int(cmd)
+                    e = engine.estimate_tenant(t)
+                    print(f"answer tenant={t} estimate={e:.1f}", flush=True)
+                except (ValueError, IndexError):
+                    print(f"answer error=bad query {cmd!r}", flush=True)
+        if stop:
+            raise KeyboardInterrupt
+
+    def feed():
+        for _ in range(args.repeat):
+            yield from batches(edges, args.batch)
+
+    try:
+        rep = run_stream(
+            engine,
+            feed(),
+            ckpt_dir=args.ckpt_dir,
+            ckpt_every=args.ckpt_every,
+            report_every=max(args.report_every, 1),
+            on_report=on_report,
+        )
+    except KeyboardInterrupt:
+        rep = None
+        print("serve: stopped by query loop", flush=True)
+    _print_rolling(engine.step, engine.estimate(), engine.edges_seen(), tau)
+    if rep is not None:
+        print(f"served {rep.edges} edges in {rep.seconds:.2f}s "
+              f"({rep.edges_per_s/1e6:.2f}M edges/s x {args.tenants} tenants)",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

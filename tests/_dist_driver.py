@@ -62,6 +62,7 @@ def main():
     st = jax.tree.map(np.asarray, state)
     assert int(st.m_seen) == len(edges)
     check_invariants(st, edges)
+    coord_st = st
     print("coordinated shard_map invariants OK, tau =", tau)
 
     # --- pjit paths (xla-partitioned) ---
@@ -75,6 +76,30 @@ def main():
         st = jax.tree.map(np.asarray, state)
         check_invariants(st, edges)
         print(f"pjit[{scheme}] invariants OK")
+
+    # --- engine on the mesh: auto-selects shardmap, same invariants ---
+    from repro.core.state import EstimatorState
+    from repro.engine import EngineConfig, TriangleCountEngine
+
+    eng = TriangleCountEngine(
+        EngineConfig(r=r, batch_size=s, seeds=(0,), capacity_factor=4.0),
+        mesh=mesh,
+    )
+    assert eng.plan.name == "shardmap", eng.plan.name
+    for W, nv in batches(edges, s):
+        eng.ingest(W, nv)
+    assert eng.diag.overflow_batches == 0, eng.diag
+    snap = eng.snapshot()
+    st = EstimatorState(
+        *[np.asarray(snap[f][0]) for f in EstimatorState._fields]
+    )
+    assert int(st.m_seen) == len(edges)
+    check_invariants(st, edges)
+    # bit-parity with the raw coordinated update it wraps (same keys)
+    np.testing.assert_array_equal(st.f1, coord_st.f1)
+    np.testing.assert_array_equal(st.chi, coord_st.chi)
+    np.testing.assert_array_equal(st.has_f3, coord_st.has_f3)
+    print("engine shardmap backend OK")
 
     # statistical sanity: estimates near tau with many estimators
     upd = make_coordinated_update(mesh, r=32768, s=s, capacity_factor=4.0)

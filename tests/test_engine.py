@@ -1,0 +1,199 @@
+"""Engine tests: multi-tenant bit-exactness vs independent runs, snapshot /
+restore round-trips (in-memory and through CheckpointManager), padding,
+backend selection, and CLI-equivalence with the seed driver loop."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bulk_update_all_jit, estimate, init_state
+from repro.data.graph_stream import batches, erdos_renyi_stream
+from repro.engine import (
+    EngineConfig,
+    SnapshotMismatch,
+    TriangleCountEngine,
+    run_stream,
+    select_backend,
+)
+from repro.train.checkpoint import CheckpointManager
+
+R, BS = 512, 32
+
+
+def seed_driver_state(edges, r, bs, seed):
+    """The seed launch/stream.py loop, verbatim: the CLI-equivalence oracle."""
+    state = init_state(r)
+    key = jax.random.PRNGKey(seed)
+    for i, (W, nv) in enumerate(batches(edges, bs)):
+        state = bulk_update_all_jit(
+            state, jnp.asarray(W), jnp.int32(nv), jax.random.fold_in(key, i)
+        )
+    return jax.tree.map(np.asarray, state)
+
+
+def assert_tenant_equals(engine, tenant, ref_state):
+    snap = engine.snapshot()
+    for f in ref_state._fields:
+        np.testing.assert_array_equal(
+            snap[f][tenant], getattr(ref_state, f), err_msg=f
+        )
+
+
+class TestMultiTenant:
+    def test_bank_matches_independent_runs_bitforbit(self):
+        """T tenants over distinct streams == T standalone runs, exactly."""
+        T = 3
+        streams = [erdos_renyi_stream(30, 200, seed=s) for s in range(T)]
+        eng = TriangleCountEngine(
+            EngineConfig(r=R, batch_size=BS, n_tenants=T,
+                         seeds=(100, 101, 102))
+        )
+        its = [list(batches(st, BS)) for st in streams]
+        for i in range(len(its[0])):
+            W = np.stack([its[t][i][0] for t in range(T)])
+            nv = np.array([its[t][i][1] for t in range(T)])
+            eng.ingest(W, nv)
+        ests = eng.estimate()
+        for t in range(T):
+            ref = seed_driver_state(streams[t], R, BS, seed=100 + t)
+            assert_tenant_equals(eng, t, ref)
+            assert float(ests[t]) == float(estimate(
+                jax.tree.map(jnp.asarray, ref), groups=9))
+
+    def test_broadcast_stream_accuracy_tiers(self):
+        """One (s,2) batch fans out to all tenants; seeds differ, m agrees."""
+        edges = erdos_renyi_stream(25, 150, seed=4)
+        eng = TriangleCountEngine(
+            EngineConfig(r=R, batch_size=BS, n_tenants=3)
+        )
+        for W, nv in batches(edges, BS):
+            eng.ingest(W, nv)
+        assert (eng.edges_seen() == len(edges)).all()
+        snap = eng.snapshot()
+        # different seeds -> different realizations of the same stream
+        assert not np.array_equal(snap["f1"][0], snap["f1"][1])
+
+    def test_single_tenant_matches_seed_driver(self):
+        """The rewritten CLI path (engine, T=1) reproduces the seed loop."""
+        edges = erdos_renyi_stream(30, 240, seed=9)
+        eng = TriangleCountEngine(
+            EngineConfig(r=R, batch_size=BS, n_tenants=1, seeds=(7,))
+        )
+        run_stream(eng, batches(edges, BS))
+        ref = seed_driver_state(edges, R, BS, seed=7)
+        assert_tenant_equals(eng, 0, ref)
+        assert float(eng.estimate()[0]) == float(
+            estimate(jax.tree.map(jnp.asarray, ref), groups=9)
+        )
+
+
+class TestSnapshotRestore:
+    def test_midstream_roundtrip_bitforbit(self):
+        edges = erdos_renyi_stream(30, 200, seed=2)
+        its = list(batches(edges, BS))
+        half = len(its) // 2
+        cfg = EngineConfig(r=R, batch_size=BS, n_tenants=2, seeds=(1, 2))
+
+        a = TriangleCountEngine(cfg)
+        for W, nv in its[:half]:
+            a.ingest(W, nv)
+        snap = a.snapshot()
+        for W, nv in its[half:]:
+            a.ingest(W, nv)
+
+        b = TriangleCountEngine(cfg)
+        b.restore(snap)
+        assert b.step == half
+        for W, nv in its[half:]:
+            b.ingest(W, nv)
+
+        sa, sb = a.snapshot(), b.snapshot()
+        for f in ("f1", "chi", "f2", "has_f3", "m_seen", "step"):
+            np.testing.assert_array_equal(sa[f], sb[f], err_msg=f)
+        np.testing.assert_array_equal(a.estimate(), b.estimate())
+
+    def test_from_snapshot_and_mismatch(self):
+        eng = TriangleCountEngine(EngineConfig(r=R, batch_size=BS))
+        eng.ingest(np.array([[0, 1], [1, 2]], np.int32))
+        snap = eng.snapshot()
+        c = TriangleCountEngine.from_snapshot(snap)
+        assert c.config.r == R and c.step == 1
+        wrong = TriangleCountEngine(EngineConfig(r=R * 2, batch_size=BS))
+        with pytest.raises(SnapshotMismatch):
+            wrong.restore(snap)
+
+    def test_checkpoint_manager_roundtrip(self, tmp_path):
+        """Snapshots survive the atomic npz checkpoint path used by drivers."""
+        edges = erdos_renyi_stream(20, 100, seed=3)
+        cfg = EngineConfig(r=R, batch_size=BS, n_tenants=2)
+        eng = TriangleCountEngine(cfg)
+        rep = run_stream(eng, batches(edges, BS),
+                         ckpt_dir=str(tmp_path), ckpt_every=2)
+        assert rep.resumed_from == 0 and rep.batches == len(list(batches(edges, BS)))
+
+        eng2 = TriangleCountEngine(cfg)
+        rep2 = run_stream(eng2, batches(edges, BS),
+                          ckpt_dir=str(tmp_path), ckpt_every=2)
+        assert rep2.resumed_from == eng.step and rep2.batches == 0
+        np.testing.assert_array_equal(eng.estimate(), eng2.estimate())
+
+        # resuming under a different batch size would skip the wrong edges
+        rebatched = TriangleCountEngine(
+            EngineConfig(r=R, batch_size=BS * 2, n_tenants=2)
+        )
+        with pytest.raises(SnapshotMismatch):
+            run_stream(rebatched, batches(edges, BS * 2),
+                       ckpt_dir=str(tmp_path), ckpt_every=2)
+
+        # r mismatch gets the clear SnapshotMismatch, not a raw AssertionError
+        with pytest.raises(SnapshotMismatch):
+            run_stream(
+                TriangleCountEngine(
+                    EngineConfig(r=R * 2, batch_size=BS, n_tenants=2)
+                ),
+                batches(edges, BS), ckpt_dir=str(tmp_path), ckpt_every=2,
+            )
+
+
+class TestIngestShapes:
+    def test_ragged_tail_is_padded(self):
+        eng = TriangleCountEngine(EngineConfig(r=64, batch_size=16))
+        eng.ingest(np.array([[0, 1], [1, 2], [0, 2]], np.int32))
+        assert eng.edges_seen()[0] == 3
+        with pytest.raises(ValueError):
+            eng.ingest(np.zeros((17, 2), np.int32))
+
+    def test_bad_tenant_axis(self):
+        eng = TriangleCountEngine(EngineConfig(r=64, batch_size=16, n_tenants=2))
+        with pytest.raises(ValueError):
+            eng.ingest(np.zeros((3, 8, 2), np.int32))
+
+
+class TestBackendSelection:
+    def test_auto_without_mesh_is_single(self):
+        cfg = EngineConfig(r=64, batch_size=16)
+        assert select_backend(cfg, None).name == "single"
+        assert select_backend(
+            EngineConfig(r=64, batch_size=16, n_tenants=4), None
+        ).name == "single"
+
+    def test_distributed_backends_validated(self):
+        cfg = EngineConfig(r=64, batch_size=16, backend="shardmap")
+        with pytest.raises(ValueError):  # no mesh
+            select_backend(cfg, None)
+        with pytest.raises(ValueError):  # unknown name
+            select_backend(
+                EngineConfig(r=64, batch_size=16, backend="nope"), None
+            )
+        with pytest.raises(ValueError):  # multi-tenant on a 1-tenant plan
+            select_backend(
+                EngineConfig(r=64, batch_size=16, n_tenants=2,
+                             backend="pjit_coordinated"), None
+            )
+
+    def test_auto_on_mesh_prefers_shardmap(self):
+        mesh = jax.make_mesh((1,), ("data",))
+        # 1-device mesh: single still wins
+        assert select_backend(
+            EngineConfig(r=64, batch_size=16), mesh
+        ).name == "single"
