@@ -1,23 +1,72 @@
 """Benchmark harness: one module per paper table/figure.
 
   PYTHONPATH=src python -m benchmarks.run [--only accuracy,throughput,...]
+  PYTHONPATH=src python -m benchmarks.run --json BENCH_streaming.json [--smoke]
 
 Prints ``name,us_per_call,derived`` CSV rows (plus a header). Scaled to finish
 on a single CPU core; the dry-run + roofline (EXPERIMENTS.md) carry the
 at-scale numbers.
+
+``--json PATH`` runs the streaming-ingest grid instead (edges/s per
+(r, batch, chunk) configuration, chunk=1 being the per-batch baseline) and
+writes the machine-readable trajectory record CI uploads as an artifact;
+``--smoke`` shrinks it to CI scale.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 import time
+
+
+def write_json(path: str, smoke: bool) -> None:
+    import jax
+
+    from benchmarks import throughput
+
+    results = throughput.bench_grid(smoke=smoke)
+    payload = {
+        "schema": "repro/streaming-throughput/v1",
+        "smoke": smoke,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "results": results,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    best = max(
+        (r for r in results if r["chunk"] > 1),
+        key=lambda r: r.get("speedup_vs_per_batch") or 0.0,
+        default=None,
+    )
+    if best:
+        print(
+            f"# wrote {path}; best chunked speedup "
+            f"{best['speedup_vs_per_batch']}x at r={best['r']} "
+            f"batch={best['batch']} chunk={best['chunk']}",
+            file=sys.stderr,
+        )
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="", help="comma list of bench names")
+    ap.add_argument("--json", default="",
+                    help="write the streaming edges/s grid to this path "
+                         "(skips the CSV benches)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid for CI smoke runs")
     args = ap.parse_args()
     only = set(filter(None, args.only.split(",")))
+
+    if args.json:
+        write_json(args.json, args.smoke)
+        return
 
     from benchmarks import (
         accuracy,

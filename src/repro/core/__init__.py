@@ -1,7 +1,12 @@
 """Core: the paper's coordinated bulk-parallel streaming triangle counter."""
 from repro.core.state import EstimatorState, init_state
 from repro.core.rank import rank_all, RankStructure
-from repro.core.bulk import bulk_update_all, bulk_update_all_jit
+from repro.core.bulk import (
+    bulk_update_all,
+    bulk_update_all_jit,
+    bulk_update_chunk,
+    bulk_update_chunk_jit,
+)
 from repro.core.estimate import coarse_estimates, estimate, estimate_jit
 
 __all__ = [
@@ -11,6 +16,8 @@ __all__ = [
     "RankStructure",
     "bulk_update_all",
     "bulk_update_all_jit",
+    "bulk_update_chunk",
+    "bulk_update_chunk_jit",
     "coarse_estimates",
     "estimate",
     "estimate_jit",

@@ -10,8 +10,20 @@ steps map 1:1 onto the paper:
   Step 3  exact multisearch of the wedge complement against the (min,max)
           sorted batch, with the pos > pos(f2) arrival check
 
-Randomness is counter-based (jax.random.fold_in) so the result distribution is
-identical regardless of device count or batch sharding — required for elastic
+All lookups against a given sorted structure are fused: the Q1 rank and degree
+queries for both f1 endpoints are one concatenated query vector answered by a
+single multisearch over ``R.key_desc``, the Q2 decode is one multisearch over
+``R.key_rank``, and the closing-edge check is one multisearch over ``R.ekey`` —
+three multisearch passes per batch (down from six-plus independent
+searchsorted calls), matching Theorem 4.1's O(sort(r) + sort(s)) memory-access
+accounting. ``repro.primitives.search.multisearch_bounds`` routes each pass to
+the Pallas counting kernel on TPU.
+
+``bulk_update_chunk`` scans K stacked batches inside one jit dispatch; because
+randomness is counter-based (jax.random.fold_in of the stream key with the
+batch index), the result is bit-for-bit identical to K sequential
+``bulk_update_all`` calls — the result distribution is also identical
+regardless of device count or batch sharding, as required for elastic
 re-scaling and for the coordinated/independent paths to be interchangeable.
 """
 from __future__ import annotations
@@ -21,7 +33,7 @@ import jax.numpy as jnp
 
 from repro.core.rank import RankStructure, rank_all
 from repro.core.state import EstimatorState
-from repro.primitives.search import exact_multisearch
+from repro.primitives.search import multisearch_bounds
 from repro.primitives.sort import pack2
 
 
@@ -49,39 +61,54 @@ def _step1_level1(state: EstimatorState, W, n_valid, key):
     return f1, chi, f2, has_f3, f1_bpos
 
 
-def _rank_queries(R: RankStructure, endpoint, other, f1_bpos):
-    """rank(endpoint -> other) for every estimator (paper Observation 4.4).
+def _rank_queries(R: RankStructure, u, v, f1_bpos):
+    """rank(endpoint -> other) for both f1 endpoints (paper Observation 4.4),
+    fused into ONE multisearch over ``R.key_desc``.
 
-    Fresh f1 (in W at pos p): the arc (endpoint, pos=p) exists in the structure;
-    its stored rank *is* #arcs on endpoint after p — one exact Q1 multisearch.
-    Old f1: rank = deg_W(endpoint) — realized as the same Q1 search with p = -1
-    (paper footnote 5): key (endpoint, s-1-(-1)) ... = first entry past the
-    segment, so we instead count via two searchsorted bounds on pack2(src, ·).
-    Both paths are computed vectorized and selected per estimator.
+    In the (src asc, pos desc) order the stored rank of an arc is its offset
+    within the src segment (Lemma 4.3), so both Q1 variants reduce to a
+    subtraction of two insertion points:
+
+      fresh f1 (in W at pos p): its own arc has key pack2(endpoint, s-1-p);
+        rank = idx(own arc) - seg_start(endpoint).
+      old f1 (p = -1, paper footnote 5): the same key expression degenerates
+        to pack2(endpoint, s) — one past the segment — so the subtraction
+        yields the segment width = deg_W(endpoint).
+
+    Four query roles (own-arc/segment-end for u and v, segment starts for u
+    and v) ride in one concatenated query vector: one pass over the structure
+    answers everything.
     """
     s = R.s
-    fresh = f1_bpos >= 0
-    # fresh path: exact search for our own arc in (src, s-1-pos) order
-    qk = pack2(endpoint, (s - 1) - f1_bpos)
-    j, found = exact_multisearch(R.key_desc, qk)
-    rank_fresh = jnp.where(found, R.rank[jnp.maximum(j, 0)], 0)
-    # old path: degree of endpoint in W = width of its src segment.
-    lo = jnp.searchsorted(R.key_desc, pack2(endpoint, jnp.zeros_like(f1_bpos)))
-    hi = jnp.searchsorted(
-        R.key_desc, pack2(endpoint, jnp.full_like(f1_bpos, s))
+    zero = jnp.zeros_like(f1_bpos)
+    q = jnp.concatenate(
+        [
+            pack2(u, (s - 1) - f1_bpos),  # fresh: own arc; old: segment end
+            pack2(v, (s - 1) - f1_bpos),
+            pack2(u, zero),  # segment starts
+            pack2(v, zero),
+        ]
     )
-    deg = (hi - lo).astype(jnp.int32)
-    return jnp.where(fresh, rank_fresh, deg)
+    lt, le = multisearch_bounds(R.key_desc, q)
+    r = u.shape[0]
+    hi_u, hi_v, lo_u, lo_v = lt[:r], lt[r : 2 * r], lt[2 * r : 3 * r], lt[3 * r :]
+    w_u = (hi_u - lo_u).astype(jnp.int32)
+    w_v = (hi_v - lo_v).astype(jnp.int32)
+    # a fresh f1's own arc is guaranteed present; mask anyway (belt + braces)
+    fresh = f1_bpos >= 0
+    miss_u = fresh & ~(le[:r] > hi_u)
+    miss_v = fresh & ~(le[r : 2 * r] > hi_v)
+    return jnp.where(miss_u, 0, w_u), jnp.where(miss_v, 0, w_v)
 
 
 def _step2_level2(f1, chi_minus, f2, has_f3, f1_bpos, R: RankStructure, key):
     """Update level-2 edges and chi (paper Section 4.3)."""
-    s = R.s
     u, v = f1[:, 0], f1[:, 1]
     have_f1 = u >= 0
 
-    ld = jnp.where(have_f1, _rank_queries(R, u, v, f1_bpos), 0)
-    rd = jnp.where(have_f1, _rank_queries(R, v, u, f1_bpos), 0)
+    ld, rd = _rank_queries(R, u, v, f1_bpos)
+    ld = jnp.where(have_f1, ld, 0)
+    rd = jnp.where(have_f1, rd, 0)
     chi_plus = ld + rd
     chi_new = chi_minus + chi_plus
 
@@ -92,14 +119,16 @@ def _step2_level2(f1, chi_minus, f2, has_f3, f1_bpos, R: RankStructure, key):
     )
     take_new = have_f1 & (chi_plus > 0) & (coin < p_new)
 
-    # draw phi in [0, chi+) and decode via the (src, rank) naming system
+    # draw phi in [0, chi+) and decode via the (src, rank) naming system:
+    # one Q2 multisearch over key_rank
     phi = jax.random.randint(
         k_phi, (f1.shape[0],), 0, jnp.maximum(chi_plus, 1), dtype=jnp.int32
     )
     t_src = jnp.where(phi < ld, u, v)
     t_rank = jnp.where(phi < ld, phi, phi - ld)
-    j, found = exact_multisearch(R.key_rank, pack2(t_src, t_rank))
-    j = jnp.maximum(j, 0)
+    lt, le = multisearch_bounds(R.key_rank, pack2(t_src, t_rank))
+    found = le > lt
+    j = jnp.minimum(lt, R.key_rank.shape[0] - 1)
     cand_a, cand_b = R.src[j], R.dst[j]
     cand = jnp.stack(
         [jnp.minimum(cand_a, cand_b), jnp.maximum(cand_a, cand_b)], axis=-1
@@ -118,7 +147,8 @@ def _step3_closing(f1, f2, has_f3, f2_bpos, R: RankStructure):
 
     The closing edge of the wedge (f1, f2) joins the two non-shared endpoints.
     It must appear after f2: for f2 sampled from this batch at pos p2, require
-    batch pos > p2; for older f2 any batch pos qualifies (f2_bpos = -1).
+    batch pos > p2; for older f2 any batch pos qualifies (f2_bpos = -1). One
+    multisearch over the (min,max)-sorted batch answers every estimator.
     """
     u, v = f1[:, 0], f1[:, 1]
     a, b = f2[:, 0], f2[:, 1]
@@ -131,8 +161,12 @@ def _step3_closing(f1, f2, has_f3, f2_bpos, R: RankStructure):
     cmin = jnp.minimum(o1, o2)
     cmax = jnp.maximum(o1, o2)
 
-    j, found = exact_multisearch(R.ekey, pack2(cmin, cmax))
-    p3 = R.epos[jnp.maximum(j, 0)]
+    lt, le = multisearch_bounds(R.ekey, pack2(cmin, cmax))
+    found = le > lt
+    # the arrival rule is existential — ANY copy after f2 closes the wedge —
+    # so on duplicate-edge (multigraph) batches take the LAST copy's pos: the
+    # sort is stable, so the duplicate run [lt, le) is pos-ascending
+    p3 = R.epos[jnp.maximum(le - 1, 0)]
     closed_now = have_wedge & found & (p3 > f2_bpos)
     return has_f3 | closed_now
 
@@ -144,7 +178,8 @@ def bulk_update_all(
 
     W: (s, 2) int32; first n_valid rows are real edges (tail is padding).
     Cost: O(sort(r) + sort(s)) memory accesses, O(log^2(r+s)) depth — sorts and
-    multisearches only, no per-estimator scalar work.
+    multisearches only (one fused multisearch per sorted structure), no
+    per-estimator scalar work.
     """
     n_valid = jnp.asarray(n_valid, dtype=jnp.int32)
     k1, k2 = jax.random.split(key)
@@ -166,3 +201,43 @@ def bulk_update_all(
 
 
 bulk_update_all_jit = jax.jit(bulk_update_all, donate_argnums=(0,))
+
+
+def bulk_update_chunk(
+    state: EstimatorState,
+    Ws: jax.Array,
+    n_valids: jax.Array,
+    key: jax.Array,
+    step0=0,
+) -> EstimatorState:
+    """Fold a stack of K batches into the state under ONE dispatch.
+
+    Ws: (K, s, 2) int32 stacked batches; n_valids: (K,) their valid prefixes.
+    ``key`` is the *stream* key (not pre-folded); scan step i derives its batch
+    key as ``fold_in(key, step0 + i)`` — the identical counter-based stream the
+    per-batch path uses — so the result is bit-for-bit equal to
+
+        for i in range(K):
+            state = bulk_update_all(state, Ws[i], n_valids[i],
+                                    jax.random.fold_in(key, step0 + i))
+
+    (asserted exactly by tests/test_core.py::TestChunkedUpdate). One
+    ``lax.scan`` inside one jit with a donated carry amortizes Python and
+    dispatch overhead over K batches, so the per-batch cost approaches the
+    paper's sort/search bound instead of being dispatch-bound. ``step0`` is a
+    traced scalar: resuming a stream at any batch cursor reuses the compiled
+    program.
+    """
+    steps = jnp.asarray(step0, jnp.int64) + jnp.arange(
+        Ws.shape[0], dtype=jnp.int64
+    )
+
+    def step(st, xs):
+        W, nv, i = xs
+        return bulk_update_all(st, W, nv, jax.random.fold_in(key, i)), None
+
+    state, _ = jax.lax.scan(step, state, (Ws, n_valids, steps))
+    return state
+
+
+bulk_update_chunk_jit = jax.jit(bulk_update_chunk, donate_argnums=(0,))

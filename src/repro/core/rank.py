@@ -12,6 +12,12 @@ prefix), build the shared structure every estimator queries against:
 
 All lookups are multisearches over packed int64 keys. Invalid (padding) arcs get
 key = +INF so they sort to the tail and are excluded by key inequality alone.
+
+Because rank is the segment offset, any stored rank is recoverable from two
+insertion points alone: rank(arc at index j) = j - searchsorted(key_desc,
+pack2(src, 0)). The fused Q1 path in core/bulk.py leans on this identity to
+answer rank AND degree queries gather-free from one multisearch — key_desc is
+therefore the only structure the Q1 roles ever touch.
 """
 from __future__ import annotations
 

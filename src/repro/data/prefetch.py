@@ -6,12 +6,21 @@ straggling feature service), the consumer proceeds with the most recent
 *backup* batch instead of stalling the whole mesh — bounded staleness, counted
 and reported. This is the standard data-echo / backup-batch trick for keeping
 thousand-chip steps from being gated on one slow host.
+
+For the fused multi-batch ingest pipeline, ``superbatches``/``stack_batches``
+assemble K ``(W, n_valid)`` batches into the superbatch unit
+``TriangleCountEngine.ingest_chunk`` consumes in a single dispatch; the
+double buffering itself (stage chunk k+1 while chunk k computes) lives in the
+consumers (``engine.service.run_stream``, ``engine.ingest_stream``) via
+``TriangleCountEngine.stage_chunk``.
 """
 from __future__ import annotations
 
 import queue
 import threading
-from typing import Callable, Iterator, Optional
+from typing import Callable, Iterable, Iterator, Optional
+
+import numpy as np
 
 
 _DONE = object()  # sentinel distinct from any legitimate batch (even None)
@@ -56,6 +65,50 @@ class PrefetchQueue:
             raise StopIteration
         self.backup = item
         return item, False
+
+
+def stack_batches(
+    buf: list, batch_size: Optional[int] = None
+) -> tuple[np.ndarray, np.ndarray]:
+    """Stack K ``(W, n_valid)`` batches into one superbatch ``(Ws, n_valids)``.
+
+    Single-stream ``(s, 2)`` batches stack to ``(K, s, 2)`` / ``(K,)``;
+    per-tenant ``(T, s, 2)`` batches stack to ``(T, K, s, 2)`` / ``(T, K)``.
+    ``batch_size`` zero-pads short batches up to ``s`` first (the ``n_valid``
+    mask already excludes the padding rows from the update).
+    """
+    Ws, nvs = [], []
+    for W, nv in buf:
+        W = np.asarray(W, dtype=np.int32)
+        if batch_size is not None and W.shape[-2] < batch_size:
+            pad = [(0, 0)] * (W.ndim - 2) + [
+                (0, batch_size - W.shape[-2]),
+                (0, 0),
+            ]
+            W = np.pad(W, pad)
+        Ws.append(W)
+        nvs.append(np.asarray(nv, dtype=np.int32))
+    # axis=-3 lands the new K axis after any leading tenant axis
+    return np.stack(Ws, axis=-3), np.stack(nvs, axis=-1)
+
+
+def superbatches(
+    batch_iter: Iterable, k: int, batch_size: Optional[int] = None
+) -> Iterator:
+    """Group a ``(W, n_valid)`` iterator into K-stacked superbatches.
+
+    Yields ``("chunk", (Ws, n_valids))`` for each full group of ``k`` and
+    ``("batch", (W, n_valid))`` for the ragged tail — the two unit types
+    ``ingest_chunk`` / ``ingest`` consume.
+    """
+    buf: list = []
+    for item in batch_iter:
+        buf.append(item)
+        if len(buf) == k:
+            yield "chunk", stack_batches(buf, batch_size)
+            buf = []
+    for item in buf:
+        yield "batch", item
 
 
 def work_stealing_shards(

@@ -9,6 +9,7 @@ from repro.engine.engine import (
     EngineConfig,
     EngineDiagnostics,
     SnapshotMismatch,
+    StagedChunk,
     TriangleCountEngine,
 )
 from repro.engine.service import StreamReport, run_stream
@@ -19,6 +20,7 @@ __all__ = [
     "EngineConfig",
     "EngineDiagnostics",
     "SnapshotMismatch",
+    "StagedChunk",
     "StreamReport",
     "TriangleCountEngine",
     "run_stream",

@@ -30,7 +30,7 @@ from typing import Any, Callable, Optional
 
 import jax
 
-from repro.core.bulk import bulk_update_all
+from repro.core.bulk import bulk_update_all, bulk_update_chunk
 
 BACKENDS = ("single", "pjit_independent", "pjit_coordinated", "shardmap")
 
@@ -44,10 +44,22 @@ class BackendPlan:
     banked: bool  # state carries a leading (n_tenants,) axis
     reports_overflow: bool  # update returns (state, overflow)
     build: Callable[..., Callable]
+    # builder for the K-batch fused ingest (state, Ws, n_valids, keys, step0);
+    # None = the plan cannot chunk (chunk_size must stay 1)
+    build_chunk: Optional[Callable] = None
 
 
 def _build_single(config, mesh) -> Callable:
     return jax.jit(jax.vmap(bulk_update_all), donate_argnums=(0,))
+
+
+def _build_single_chunk(config, mesh) -> Callable:
+    # scan over the K axis inside the jit; the stream key and batch cursor
+    # ride in unvmapped/traced so one compiled program serves the whole stream
+    return jax.jit(
+        jax.vmap(bulk_update_chunk, in_axes=(0, 0, 0, 0, None)),
+        donate_argnums=(0,),
+    )
 
 
 def _build_pjit(scheme: str):
@@ -71,7 +83,9 @@ def _build_shardmap(config, mesh) -> Callable:
 
 
 _PLANS = {
-    "single": BackendPlan("single", True, False, _build_single),
+    "single": BackendPlan(
+        "single", True, False, _build_single, _build_single_chunk
+    ),
     "pjit_independent": BackendPlan(
         "pjit_independent", False, False, _build_pjit("independent")
     ),
@@ -113,5 +127,10 @@ def select_backend(config, mesh: Optional[Any] = None) -> BackendPlan:
         raise ValueError(
             f"shardmap needs r ({config.r}) and batch_size "
             f"({config.batch_size}) divisible by mesh size {p}"
+        )
+    if getattr(config, "chunk_size", 1) > 1 and plan.build_chunk is None:
+        raise ValueError(
+            f"backend {name!r} does not support chunked ingest; "
+            "chunk_size > 1 needs backend='single' (or 'auto' without a mesh)"
         )
     return plan

@@ -54,6 +54,10 @@ class EngineConfig:
     seeds: Optional[tuple[int, ...]] = None  # per-tenant RNG seeds
     backend: str = "auto"  # auto | single | pjit_independent | pjit_coordinated | shardmap
     capacity_factor: float = 2.0  # shardmap routing capacity (see distributed.py)
+    # K: batches fused per dispatch (lax.scan inside one jit). Pure dispatch
+    # granularity — state and RNG stream are identical for any K, so snapshots
+    # restore across engines with different chunk_size.
+    chunk_size: int = 1
 
     def tenant_seeds(self) -> tuple[int, ...]:
         if self.seeds is not None:
@@ -81,6 +85,18 @@ class SnapshotMismatch(ValueError):
     """Snapshot config does not match the engine it is being restored into."""
 
 
+@dataclass(frozen=True)
+class StagedChunk:
+    """A K-batch superbatch already broadcast to the tenant axis and resident
+    on device (``TriangleCountEngine.stage_chunk``). Staging the next chunk
+    while the current one computes double-buffers the host→device upload out
+    of the ingest critical path."""
+
+    Wb: Any  # (n_tenants, K, s, 2) int32 device array
+    nv: Any  # (n_tenants, K) int32 device array
+    edges: int  # host-side max-over-tenants total valid edges (for diag)
+
+
 def _snapshot_config(snap: dict) -> tuple:
     return tuple(int(x) for x in np.asarray(snap["config"]).tolist())
 
@@ -91,10 +107,15 @@ class TriangleCountEngine:
     def __init__(self, config: EngineConfig, mesh: Any = None):
         if config.r <= 0 or config.batch_size <= 0 or config.n_tenants <= 0:
             raise ValueError(f"bad config: {config}")
+        if config.chunk_size <= 0:
+            raise ValueError(f"chunk_size must be >= 1, got {config.chunk_size}")
         self.config = config
         self.mesh = mesh
         self.plan: BackendPlan = select_backend(config, mesh)
         self._update = self.plan.build(config, mesh)
+        self._update_chunk = (
+            self.plan.build_chunk(config, mesh) if config.chunk_size > 1 else None
+        )
         self.diag = EngineDiagnostics(backend=self.plan.name)
         self._step = 0  # batches ingested so far (the RNG fold_in counter)
         self._pending_overflow: list = []  # device scalars, drained lazily
@@ -220,14 +241,102 @@ class TriangleCountEngine:
         )
         self._update = self.plan.build(self.config, self.mesh)
 
+    # -- chunked (fused multi-batch) ingestion ------------------------------
+    def stage_chunk(self, Ws, n_valids=None) -> StagedChunk:
+        """Broadcast + device_put a K-batch superbatch ahead of ingest_chunk.
+
+        Ws: (K, s, 2) — broadcast to all tenants — or (n_tenants, K, s, 2)
+        per-tenant; every batch must already be padded to batch_size (use
+        ``repro.data.prefetch.stack_batches`` on a ``graph_stream.batches``
+        run). ``n_valids``: (K,) or (n_tenants, K); None means all-full.
+
+        Staging is separated from ingestion so callers (run_stream) can upload
+        chunk k+1 while chunk k computes — double buffering the transfer.
+        """
+        K, s, T = self.config.chunk_size, self.config.batch_size, self.n_tenants
+        if self._update_chunk is None:
+            raise ValueError(
+                "chunked ingest needs EngineConfig(chunk_size > 1) on the "
+                "'single' backend"
+            )
+        Ws = jnp.asarray(Ws, dtype=jnp.int32)
+        if Ws.ndim == 3:
+            if Ws.shape != (K, s, 2):
+                raise ValueError(f"chunk must be ({K}, {s}, 2), got {Ws.shape}")
+            Wb = jnp.broadcast_to(Ws[None], (T, K, s, 2))
+        elif Ws.ndim == 4:
+            if Ws.shape != (T, K, s, 2):
+                raise ValueError(
+                    f"chunk must be ({T}, {K}, {s}, 2), got {Ws.shape}"
+                )
+            Wb = Ws
+        else:
+            raise ValueError(f"chunk must be (K,s,2) or (T,K,s,2), got {Ws.shape}")
+        if n_valids is None:
+            nv_host = np.full((T, K), s, np.int64)
+        else:
+            nv_host = np.broadcast_to(
+                np.asarray(n_valids, np.int64), (T, K)
+            )
+        # max over tenants per batch, summed over K — matches what K
+        # sequential ingest() calls would accumulate into diag.edges_ingested
+        edges = int(nv_host.max(axis=0).sum())
+        nv = jnp.asarray(nv_host, dtype=jnp.int32)
+        return StagedChunk(Wb=Wb, nv=nv, edges=edges)
+
+    def ingest_chunk(self, Ws, n_valids=None) -> None:
+        """Incorporate ``chunk_size`` batches in ONE device dispatch.
+
+        Accepts the same shapes as ``stage_chunk`` (or an already-staged
+        ``StagedChunk``). Bit-for-bit identical to ``chunk_size`` sequential
+        ``ingest`` calls: the scan folds the same per-batch counter into the
+        same per-tenant root keys, so snapshots, estimates, and resumes are
+        interchangeable between chunked and per-batch ingestion.
+        """
+        c = Ws if isinstance(Ws, StagedChunk) else self.stage_chunk(Ws, n_valids)
+        K = self.config.chunk_size
+        self._state = self._update_chunk(
+            self._state, c.Wb, c.nv, self._root_keys, self._step
+        )
+        self._step += K
+        self.diag.batches_ingested += K
+        self.diag.edges_ingested += c.edges
+
     def ingest_stream(
         self, batch_iter: Iterable[tuple[np.ndarray, int]]
     ) -> int:
-        """Drain a ``(W, n_valid)`` iterator (e.g. graph_stream.batches)."""
+        """Drain a ``(W, n_valid)`` iterator (e.g. graph_stream.batches).
+
+        With ``chunk_size > 1`` the iterator is assembled into K-batch
+        superbatches ingested under one dispatch each (the ragged tail falls
+        back to per-batch ingestion — state is identical either way), and the
+        next superbatch is staged on device while the current one computes.
+        """
+        from repro.data.prefetch import superbatches
+
+        K = self.config.chunk_size
         n = 0
-        for W, nv in batch_iter:
-            self.ingest(W, nv)
-            n += 1
+        if K <= 1:
+            for W, nv in batch_iter:
+                self.ingest(W, nv)
+                n += 1
+            return n
+        pending: Optional[StagedChunk] = None
+        for kind, payload in superbatches(
+            batch_iter, K, self.config.batch_size
+        ):
+            if pending is not None:
+                self.ingest_chunk(pending)
+                n += K
+                pending = None
+            if kind == "chunk":
+                pending = self.stage_chunk(*payload)
+            else:  # ragged tail: per-batch
+                self.ingest(*payload)
+                n += 1
+        if pending is not None:
+            self.ingest_chunk(pending)
+            n += K
         return n
 
     def sync(self) -> None:

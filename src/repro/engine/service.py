@@ -22,7 +22,7 @@ from typing import Callable, Iterable, Optional
 
 import numpy as np
 
-from repro.data.prefetch import PrefetchQueue
+from repro.data.prefetch import PrefetchQueue, superbatches
 from repro.engine.engine import SnapshotMismatch, TriangleCountEngine
 from repro.train.checkpoint import CheckpointManager, config_hash
 
@@ -62,6 +62,13 @@ def run_stream(
     If ``ckpt_dir`` is given the engine first restores from the newest
     complete checkpoint there and *skips* the already-ingested prefix of the
     iterator, then saves every ``ckpt_every`` batches plus once at the end.
+
+    With ``engine.config.chunk_size = K > 1`` batches are assembled into
+    K-superbatches ingested in one dispatch each, with the next superbatch's
+    device upload double-buffered behind the current one's compute; the state
+    is bit-identical to per-batch ingestion, but reports and checkpoints land
+    at chunk granularity (``engine.step`` still counts batches, so resume
+    skipping is unaffected).
     """
     rep = StreamReport()
     ckpt = None
@@ -99,21 +106,12 @@ def run_stream(
         "tenants": engine.config.n_tenants,
     }
     skip = engine.step  # batches already folded into the restored state
-    seen = 0
+    K = engine.config.chunk_size
     t0 = time.time()
-    while True:
-        try:
-            batch, stale = pf.get()
-        except StopIteration:
-            break
-        rep.stale_batches += int(stale)
-        seen += 1
-        if seen <= skip:
-            continue
-        W, nv = batch
-        engine.ingest(W, nv)
-        rep.batches += 1
-        rep.edges += int(np.asarray(nv).max())
+
+    def after_ingest(n_batches: int, n_edges: int) -> None:
+        rep.batches += n_batches
+        rep.edges += n_edges
         if report_every and engine.step % report_every == 0 and on_report:
             on_report(engine.step, engine.estimate(), engine.edges_seen())
         if ckpt and ckpt_every and rep.batches % ckpt_every == 0:
@@ -122,6 +120,45 @@ def run_stream(
                 engine.snapshot(),
                 {"config_hash": config_hash(meta), **meta},
             )
+
+    def drained():
+        """Post-skip batches out of the prefetch queue, stale-counted."""
+        seen = 0
+        while True:
+            try:
+                batch, stale = pf.get()
+            except StopIteration:
+                return
+            rep.stale_batches += int(stale)
+            seen += 1
+            if seen > skip:
+                yield batch
+
+    if K <= 1:
+        for W, nv in drained():
+            engine.ingest(W, nv)
+            after_ingest(1, int(np.asarray(nv).max()))
+    else:
+        # double buffering: dispatch compute on the staged superbatch (async,
+        # returns immediately), then stage the next one — its device upload
+        # overlaps the in-flight chunk's compute
+        pending = None  # staged-on-device superbatch
+        for kind, payload in superbatches(
+            drained(), K, engine.config.batch_size
+        ):
+            if pending is not None:
+                engine.ingest_chunk(pending)
+                after_ingest(K, pending.edges)
+                pending = None
+            if kind == "chunk":
+                pending = engine.stage_chunk(*payload)
+            else:  # ragged tail: per-batch
+                W, nv = payload
+                engine.ingest(W, nv)
+                after_ingest(1, int(np.asarray(nv).max()))
+        if pending is not None:
+            engine.ingest_chunk(pending)
+            after_ingest(K, pending.edges)
     engine.sync()  # async dispatches must land before the throughput clock stops
     rep.seconds = time.time() - t0
     if ckpt:

@@ -53,7 +53,9 @@ def multisearch_counts(
     insertion points into ``sorted_keys`` (which must be sorted ascending).
 
     Padding: keys are padded with +INF (count as never-less), queries padded
-    with anything (results for the pad tail are discarded).
+    with anything (results for the pad tail are discarded). A query equal to
+    +INF would count the key padding in count_le, so count_le is clamped to n
+    (count_lt needs no clamp: nothing is < the padding).
     """
     n = sorted_keys.shape[0]
     q = queries.shape[0]
@@ -81,7 +83,7 @@ def multisearch_counts(
         ],
         interpret=interpret,
     )(keys, qs)
-    return lt[:q], le[:q]
+    return lt[:q], jnp.minimum(le[:q], n)
 
 
 def exact_multisearch_kernel(sorted_keys, queries, **kw):

@@ -23,7 +23,11 @@ def segscan_op(values, flags, *, block: int = 1024):
 
 
 def multisearch_counts_op(sorted_keys, queries, *, q_block=256, k_block=2048):
-    """(count_lt, count_le) insertion points (kernel-backed)."""
+    """(count_lt, count_le) insertion points (kernel-backed).
+
+    This is the TPU target of ``repro.primitives.search.multisearch_bounds``
+    — the fused per-structure lookups on the bulk-update hot path land here
+    when the backend resolves to "pallas"."""
     return multisearch.multisearch_counts(
         sorted_keys,
         queries,

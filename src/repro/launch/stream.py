@@ -49,6 +49,7 @@ def build_engine(args) -> TriangleCountEngine:
             groups=args.groups,
             seeds=tuple(args.seed + t for t in range(args.tenants)),
             backend=args.backend,
+            chunk_size=getattr(args, "chunk", 1),
         )
     )
 
@@ -62,6 +63,9 @@ def main():
     ap.add_argument("--triangles", type=int, default=100)
     ap.add_argument("--estimators", type=int, default=65536)
     ap.add_argument("--batch", type=int, default=4096)
+    ap.add_argument("--chunk", type=int, default=1,
+                    help="batches fused per dispatch (lax.scan superbatch); "
+                         "state is bit-identical for any value")
     ap.add_argument("--groups", type=int, default=9)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--tenants", type=int, default=1,

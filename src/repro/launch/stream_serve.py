@@ -53,6 +53,8 @@ def main():
     ap.add_argument("--triangles", type=int, default=100)
     ap.add_argument("--estimators", type=int, default=32768)
     ap.add_argument("--batch", type=int, default=4096)
+    ap.add_argument("--chunk", type=int, default=1,
+                    help="batches fused per dispatch (see launch.stream)")
     ap.add_argument("--groups", type=int, default=9)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--tenants", type=int, default=2)

@@ -15,7 +15,10 @@ from repro.primitives.segscan import (
 from repro.primitives.search import (
     exact_multisearch,
     count_eq,
+    multisearch_backend,
+    multisearch_bounds,
     predecessor_multisearch,
+    set_multisearch_backend,
 )
 
 __all__ = [
@@ -27,5 +30,8 @@ __all__ = [
     "segmented_sum_scan",
     "exact_multisearch",
     "count_eq",
+    "multisearch_backend",
+    "multisearch_bounds",
     "predecessor_multisearch",
+    "set_multisearch_backend",
 ]

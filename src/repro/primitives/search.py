@@ -6,10 +6,72 @@ sides presorted it degrades to O(scan(n+m)). On TPU we express each lookup set
 as a vectorized binary search (``jnp.searchsorted``) over presorted int64 keys;
 the Pallas kernel in repro.kernels.multisearch provides the VMEM-chunked,
 gather-free variant used on hardware.
+
+``multisearch_bounds`` is the hot-path entry point: one call answers both
+insertion points (left/right) for a whole fused query vector, and a backend
+switch routes it to the Pallas counting kernel on TPU (gather-free, one
+streaming pass over the keys per query tile) or to ``jnp.searchsorted``
+elsewhere. Callers that fuse their lookups into one query vector per sorted
+structure pay one multisearch per structure instead of one per query role.
 """
 from __future__ import annotations
 
+import os
+
+import jax
 import jax.numpy as jnp
+
+MULTISEARCH_BACKENDS = ("auto", "xla", "pallas")
+
+_backend = os.environ.get("REPRO_MULTISEARCH_BACKEND", "auto")
+if _backend not in MULTISEARCH_BACKENDS:
+    raise ValueError(
+        f"REPRO_MULTISEARCH_BACKEND={_backend!r} is not one of "
+        f"{MULTISEARCH_BACKENDS}"
+    )
+
+
+def set_multisearch_backend(name: str) -> None:
+    """Force the multisearch backend: "auto" (Pallas on TPU, XLA elsewhere),
+    "xla" (jnp.searchsorted), or "pallas" (counting kernel; interpret mode off
+    TPU — slow, for parity testing only). The choice is resolved at trace
+    time, so switching also clears the jit caches — otherwise already-compiled
+    programs would silently keep their old backend forever."""
+    if name not in MULTISEARCH_BACKENDS:
+        raise ValueError(
+            f"unknown multisearch backend {name!r}; "
+            f"choose from {MULTISEARCH_BACKENDS}"
+        )
+    global _backend
+    if name != _backend:
+        _backend = name
+        jax.clear_caches()
+
+
+def multisearch_backend() -> str:
+    """The backend ``multisearch_bounds`` resolves to right now."""
+    if _backend != "auto":
+        return _backend
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def multisearch_bounds(sorted_keys, queries):
+    """(count_lt, count_le) per query: the searchsorted left/right insertion
+    points into ``sorted_keys``, int32, answered in one fused multisearch.
+
+    This is the backend-dispatched hot-path primitive: on TPU (or with the
+    backend forced to "pallas") it runs the chunked counting kernel from
+    ``repro.kernels.multisearch`` — dense compare-reduce in VMEM, zero gathers,
+    both bounds from the same streaming pass over the keys; otherwise two
+    ``jnp.searchsorted`` binary searches.
+    """
+    if multisearch_backend() == "pallas":
+        from repro.kernels.ops import multisearch_counts_op
+
+        return multisearch_counts_op(sorted_keys, queries)
+    lt = jnp.searchsorted(sorted_keys, queries, side="left").astype(jnp.int32)
+    le = jnp.searchsorted(sorted_keys, queries, side="right").astype(jnp.int32)
+    return lt, le
 
 
 def exact_multisearch(sorted_keys, queries, valid_n=None):

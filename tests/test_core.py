@@ -1,4 +1,5 @@
-"""Core algorithm tests: rankAll, NBSI invariants, unbiasedness, batch invariance."""
+"""Core algorithm tests: rankAll, NBSI invariants, unbiasedness, batch
+invariance, and chunked-update bit-exactness."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -6,6 +7,7 @@ import pytest
 
 from repro.core import (
     bulk_update_all_jit,
+    bulk_update_chunk_jit,
     coarse_estimates,
     estimate,
     init_state,
@@ -184,6 +186,166 @@ class TestUnbiasedness:
         # same expectation
         pooled_se = np.sqrt(xs.var() / len(xs) + xb.var() / len(xb))
         assert abs(xs.mean() - xb.mean()) < 5 * pooled_se + 0.02 * tau
+
+
+class TestClosingEdgeDuplicates:
+    def test_any_duplicate_copy_after_f2_closes(self):
+        """The arrival rule is existential: if the closing edge appears twice
+        in a batch, a copy AFTER f2 closes the wedge even when another copy
+        precedes f2 (the probe must take the last copy of the duplicate run)."""
+        from repro.core.bulk import _step3_closing
+
+        # closing edge (0,2) of wedge f1=(0,1), f2=(1,2) at pos 2 AND pos 6
+        W = jnp.asarray(np.array(
+            [[0, 1], [1, 2], [0, 2], [3, 4], [4, 5], [5, 6], [0, 2], [6, 7]],
+            np.int32,
+        ))
+        R = rank_all(W, jnp.int32(8))
+        f1 = jnp.asarray(np.array([[0, 1]] * 3, np.int32))
+        f2 = jnp.asarray(np.array([[1, 2]] * 3, np.int32))
+        has_f3 = jnp.zeros((3,), bool)
+        # f2 sampled at pos 5 (copy at 6 qualifies), pos 6 (no copy after),
+        # and from an older batch (any copy qualifies)
+        f2_bpos = jnp.asarray(np.array([5, 6, -1], np.int32))
+        got = np.asarray(_step3_closing(f1, f2, has_f3, f2_bpos, R))
+        np.testing.assert_array_equal(got, [True, False, True])
+
+
+class TestChunkedUpdate:
+    """bulk_update_chunk == K sequential bulk_update_all_jit calls, bit for bit
+    (the counter-based fold_in RNG guarantees the same per-batch key stream)."""
+
+    @staticmethod
+    def _stack(its):
+        Ws = jnp.stack([jnp.asarray(W) for W, _ in its])
+        nvs = jnp.asarray(np.array([nv for _, nv in its], np.int32))
+        return Ws, nvs
+
+    @pytest.mark.parametrize("seed,bs", [(0, 32), (5, 17), (9, 64)])
+    def test_chunk_bitexact_vs_sequential(self, seed, bs):
+        """Whole stream in one chunk dispatch, including the padded final
+        batch (the streams are sized so bs never divides them)."""
+        edges = erdos_renyi_stream(24, 150, seed=seed)
+        assert len(edges) % bs != 0  # final batch must be padded
+        its = list(batches(edges, bs))
+        key = jax.random.PRNGKey(seed + 40)
+
+        seq = init_state(256)
+        for i, (W, nv) in enumerate(its):
+            seq = bulk_update_all_jit(
+                seq, jnp.asarray(W), jnp.int32(nv), jax.random.fold_in(key, i)
+            )
+        seq = jax.tree.map(np.asarray, seq)
+
+        Ws, nvs = self._stack(its)
+        chunk = jax.tree.map(
+            np.asarray, bulk_update_chunk_jit(init_state(256), Ws, nvs, key)
+        )
+        for f in seq._fields:
+            np.testing.assert_array_equal(
+                getattr(seq, f), getattr(chunk, f), err_msg=f
+            )
+
+    def test_step0_resume_midstream(self):
+        """Splitting a stream into chunks at any step0 reproduces the single
+        chunk run exactly — the property engine resume relies on."""
+        edges = erdos_renyi_stream(30, 260, seed=3)
+        its = list(batches(edges, 32))
+        key = jax.random.PRNGKey(11)
+        Ws, nvs = self._stack(its)
+
+        whole = jax.tree.map(
+            np.asarray, bulk_update_chunk_jit(init_state(128), Ws, nvs, key, 0)
+        )
+        cut = len(its) // 2
+        st = bulk_update_chunk_jit(init_state(128), Ws[:cut], nvs[:cut], key, 0)
+        st = bulk_update_chunk_jit(st, Ws[cut:], nvs[cut:], key, cut)
+        st = jax.tree.map(np.asarray, st)
+        for f in whole._fields:
+            np.testing.assert_array_equal(
+                getattr(whole, f), getattr(st, f), err_msg=f
+            )
+
+
+class TestMultisearchBackendParity:
+    """The Pallas counting-kernel backend must produce bit-identical estimator
+    state to the jnp.searchsorted backend on the real hot path."""
+
+    def test_kernel_int64_inf_padding_and_duplicates(self):
+        """The rank-structure key shape: packed int64 keys with duplicate runs
+        and an INF64 sentinel tail (how rank_all marks padding arcs). The
+        Pallas counting kernel must agree with searchsorted on hits inside a
+        duplicate run (left AND right bounds), misses, negative queries, and
+        queries equal to the sentinel itself. (Lives here, not in
+        test_kernels.py, so it runs without the hypothesis dev dep.)"""
+        from repro.core.rank import INF64
+        from repro.kernels import ops
+
+        inf = np.int64(INF64)
+        keys = np.array(
+            [(2 << 32) | 1] * 3  # duplicate run
+            + [(2 << 32) | 5, (7 << 32) | 0, (7 << 32) | 9]
+            + [inf] * 5,  # padding tail
+            np.int64,
+        )
+        assert np.all(np.diff(keys.astype(object)) >= 0)
+        qs = np.array(
+            [
+                (2 << 32) | 1,  # hit inside the duplicate run
+                (2 << 32) | 0,  # miss below the run
+                (2 << 32) | 5,
+                (7 << 32) | 9,
+                (1 << 32),      # miss: src absent
+                -1,             # negative (pack2 of -1 endpoints)
+                (8 << 32),      # between real keys and the sentinel tail
+                inf,            # the sentinel itself
+            ],
+            np.int64,
+        )
+        lt, le = ops.multisearch_counts_op(
+            jnp.asarray(keys), jnp.asarray(qs), q_block=8, k_block=8
+        )
+        np.testing.assert_array_equal(
+            np.asarray(lt), np.searchsorted(keys, qs, side="left")
+        )
+        np.testing.assert_array_equal(
+            np.asarray(le), np.searchsorted(keys, qs, side="right")
+        )
+        # exact-match reconstruction used by the fused hot path
+        found = np.asarray(le) > np.asarray(lt)
+        np.testing.assert_array_equal(
+            found, [True, False, True, True, False, False, False, True]
+        )
+        np.testing.assert_array_equal(np.asarray(lt)[found], [0, 3, 5, 6])
+
+    def test_pallas_hot_path_parity(self):
+        from repro.core.bulk import bulk_update_all
+        from repro.primitives.search import set_multisearch_backend
+
+        edges = erdos_renyi_stream(20, 90, seed=7)
+        its = list(batches(edges, 16))
+        key = jax.random.PRNGKey(2)
+
+        def drive():
+            # fresh jit per backend: the dispatch is resolved at trace time
+            f = jax.jit(bulk_update_all)
+            st = init_state(128)
+            for i, (W, nv) in enumerate(its):
+                st = f(st, jnp.asarray(W), jnp.int32(nv),
+                       jax.random.fold_in(key, i))
+            return jax.tree.map(np.asarray, st)
+
+        set_multisearch_backend("xla")
+        try:
+            ref = drive()
+            set_multisearch_backend("pallas")  # interpret mode off-TPU
+            got = drive()
+        finally:
+            set_multisearch_backend("auto")
+        for f in ref._fields:
+            np.testing.assert_array_equal(
+                getattr(ref, f), getattr(got, f), err_msg=f
+            )
 
 
 class TestBatchInvariance:

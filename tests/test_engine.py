@@ -169,6 +169,98 @@ class TestIngestShapes:
             eng.ingest(np.zeros((3, 8, 2), np.int32))
 
 
+class TestChunkedIngest:
+    """chunk_size is pure dispatch granularity: state, estimates, snapshots,
+    and resumes are bit-identical to the per-batch engine."""
+
+    def test_run_stream_chunked_bitexact(self):
+        edges = erdos_renyi_stream(30, 250, seed=6)  # 8 batches: ragged tail
+        base = TriangleCountEngine(
+            EngineConfig(r=R, batch_size=BS, n_tenants=2, seeds=(5, 6))
+        )
+        run_stream(base, batches(edges, BS))
+        chunked = TriangleCountEngine(
+            EngineConfig(r=R, batch_size=BS, n_tenants=2, seeds=(5, 6),
+                         chunk_size=4)
+        )
+        rep = run_stream(chunked, batches(edges, BS))
+        assert rep.batches == base.step == chunked.step
+        assert rep.edges == len(edges)
+        sa, sb = base.snapshot(), chunked.snapshot()
+        for f in ("f1", "chi", "f2", "has_f3", "m_seen", "step", "root_keys"):
+            np.testing.assert_array_equal(sa[f], sb[f], err_msg=f)
+        np.testing.assert_array_equal(base.estimate(), chunked.estimate())
+
+    def test_snapshot_restores_across_chunk_sizes(self):
+        """A chunked engine's snapshot restores into a per-batch engine (and
+        back) — chunk_size is not part of the persisted state."""
+        edges = erdos_renyi_stream(25, 180, seed=8)
+        its = list(batches(edges, BS))
+        half = (len(its) // 2) or 1
+        a = TriangleCountEngine(
+            EngineConfig(r=R, batch_size=BS, chunk_size=3)
+        )
+        a.ingest_stream(its[:half])
+        b = TriangleCountEngine.from_snapshot(a.snapshot())  # chunk_size=1
+        assert b.config.chunk_size == 1
+        for W, nv in its[half:]:
+            a.ingest(W, nv)
+            b.ingest(W, nv)
+        np.testing.assert_array_equal(a.estimate(), b.estimate())
+        sa, sb = a.snapshot(), b.snapshot()
+        for f in ("f1", "chi", "f2", "has_f3", "m_seen", "step"):
+            np.testing.assert_array_equal(sa[f], sb[f], err_msg=f)
+
+    def test_ingest_stream_pads_short_batches(self):
+        """Unpadded (<s, 2) batches — which per-batch ingest() accepts — must
+        also flow through the chunked assembly (stack_batches pads them)."""
+        rng = np.random.default_rng(0)
+        items = [
+            (rng.integers(0, 20, (n, 2)).astype(np.int32), n)
+            for n in (3, 16, 7, 5, 16)
+        ]
+        a = TriangleCountEngine(EngineConfig(r=64, batch_size=16, chunk_size=2))
+        a.ingest_stream(iter(items))
+        b = TriangleCountEngine(EngineConfig(r=64, batch_size=16))
+        for W, nv in items:
+            b.ingest(W, nv)
+        sa, sb = a.snapshot(), b.snapshot()
+        for f in ("f1", "chi", "f2", "has_f3", "m_seen", "step"):
+            np.testing.assert_array_equal(sa[f], sb[f], err_msg=f)
+        assert a.diag.edges_ingested == b.diag.edges_ingested == 3 + 16 + 7 + 5 + 16
+
+    def test_per_tenant_edge_accounting_matches_per_batch(self):
+        """diag.edges_ingested for a per-tenant chunk == what K sequential
+        per-tenant ingest() calls record (per-batch max over tenants, summed)."""
+        Wb = np.zeros((2, 2, 16, 2), np.int32)  # (T, K, s, 2)
+        nv = np.array([[10, 0], [0, 10]], np.int32)
+        a = TriangleCountEngine(
+            EngineConfig(r=64, batch_size=16, n_tenants=2, chunk_size=2)
+        )
+        a.ingest_chunk(Wb, nv)
+        b = TriangleCountEngine(EngineConfig(r=64, batch_size=16, n_tenants=2))
+        for k in range(2):
+            b.ingest(Wb[:, k], nv[:, k])
+        assert a.diag.edges_ingested == b.diag.edges_ingested == 20
+
+    def test_chunk_shape_validation(self):
+        eng = TriangleCountEngine(
+            EngineConfig(r=64, batch_size=16, chunk_size=2)
+        )
+        with pytest.raises(ValueError):
+            eng.ingest_chunk(np.zeros((3, 16, 2), np.int32))  # K mismatch
+        unchunked = TriangleCountEngine(EngineConfig(r=64, batch_size=16))
+        with pytest.raises(ValueError):
+            unchunked.ingest_chunk(np.zeros((2, 16, 2), np.int32))
+
+    def test_chunked_needs_single_backend(self):
+        with pytest.raises(ValueError):
+            select_backend(
+                EngineConfig(r=64, batch_size=16, chunk_size=4,
+                             backend="pjit_coordinated"), None
+            )
+
+
 class TestBackendSelection:
     def test_auto_without_mesh_is_single(self):
         cfg = EngineConfig(r=64, batch_size=16)
