@@ -3,25 +3,53 @@
 The acceptance bar for the engine: a bank of T tenant streams under one
 vmapped jit program must sustain at least the single-stream edges/s on the
 same synthetic BA stream — i.e. multi-tenancy amortizes dispatch/sort
-overhead instead of multiplying it. Reports, per T in {1, 2, 4}:
+overhead instead of multiplying it. Two surfaces:
 
-  * aggregate edges/s (T x m edges through one shared program), and
-  * the time T back-to-back single-stream engine runs would take.
+  * ``main()`` (via ``benchmarks.run``): CSV rows, per T in {1, 2, 4}, of
+    aggregate edges/s vs T back-to-back single-stream runs.
+  * ``bench_grid()`` / the CLI: the (tenants x backend) grid — streams/s and
+    aggregate edges/s for every execution plan the current devices admit
+    (``single`` always; the ``banked_pjit_*`` tenant-sharded plans when
+    ``--mesh`` fits). ``--json BENCH_streaming.json`` merges the grid into
+    the trajectory record next to the (r, batch, chunk) edges/s grid.
+
+  PYTHONPATH=src python -m benchmarks.multistream --host-devices 4 \
+      --mesh tenants=2,estimators=2 --json BENCH_streaming.json
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import sys
 import time
+
+if __name__ == "__main__":
+    # must run before any jax device query (see repro.launch._env)
+    from repro.launch._env import apply_host_devices
+
+    apply_host_devices(sys.argv)
 
 from benchmarks.common import csv_row
 from repro.data.graph_stream import barabasi_albert_stream, batches
-from repro.engine import EngineConfig, TriangleCountEngine
+from repro.engine import EngineConfig, TriangleCountEngine, select_backend
 
 
-def _run(T: int, r: int, edges, bs: int) -> tuple[float, float]:
+def _run(
+    T: int,
+    r: int,
+    edges,
+    bs: int,
+    backend: str = "single",
+    mesh=None,
+    tenant_axis: str = "tenants",
+) -> tuple[float, float]:
     """Returns (seconds, aggregate edges/s) for a T-tenant engine pass."""
     eng = TriangleCountEngine(
         EngineConfig(r=r, batch_size=bs, n_tenants=T,
-                     seeds=tuple(range(T)))
+                     seeds=tuple(range(T)), backend=backend,
+                     tenant_axis=tenant_axis),
+        mesh=mesh,
     )
     it = list(batches(edges, bs))
     eng.ingest(*it[0])  # compile on first batch shape
@@ -29,10 +57,103 @@ def _run(T: int, r: int, edges, bs: int) -> tuple[float, float]:
     t0 = time.perf_counter()
     for W, nv in it[1:]:
         eng.ingest(W, nv)
-    eng.estimate()  # forces completion of the queue
+    eng.sync()  # forces completion of the queue
     dt = time.perf_counter() - t0
     m = sum(nv for _, nv in it[1:])
     return dt, T * m / dt
+
+
+def _available_backends(T: int, r: int, bs: int, mesh, tenant_axis: str):
+    """Every named plan this (tenants, mesh) combination can legally run."""
+    names = ["single"]
+    if mesh is not None:
+        for name in ("banked_pjit_independent", "banked_pjit_coordinated"):
+            try:
+                select_backend(
+                    EngineConfig(r=r, batch_size=bs, n_tenants=T,
+                                 backend=name, tenant_axis=tenant_axis),
+                    mesh,
+                )
+            except ValueError:
+                continue
+            names.append(name)
+    return names
+
+
+def bench_grid(
+    *,
+    tenants=(1, 2, 4),
+    r: int = 16384,
+    bs: int = 1024,
+    nodes: int = 5_000,
+    degree: int = 8,
+    mesh=None,
+    tenant_axis: str = "tenants",
+    smoke: bool = False,
+) -> list[dict]:
+    """The (tenants x backend) grid: streams/s + aggregate edges/s per plan."""
+    if smoke:
+        tenants, r, nodes = (1, 2), 2048, 2000
+    edges = barabasi_albert_stream(nodes, degree, seed=0)
+    m = len(edges)
+    rows = []
+    for T in tenants:
+        base = None
+        for backend in _available_backends(T, r, bs, mesh, tenant_axis):
+            dt, eps = _run(T, r, edges, bs, backend=backend, mesh=mesh,
+                           tenant_axis=tenant_axis)
+            row = {
+                "tenants": T,
+                "backend": backend,
+                "r": r,
+                "batch": bs,
+                "edges": m,
+                "seconds": round(dt, 6),
+                "edges_per_s": round(eps, 1),
+                "streams_per_s": round(T / dt, 4),
+            }
+            if backend == "single":
+                base = eps
+            row["speedup_vs_single"] = round(eps / base, 2) if base else None
+            rows.append(row)
+            print(
+                f"# tenants={T} backend={backend}: "
+                f"{row['streams_per_s']:.2f} streams/s, "
+                f"{eps:.0f} edges/s ({row['speedup_vs_single']}x)",
+                flush=True,
+            )
+    return rows
+
+
+def grid_section(rows: list[dict], smoke: bool, mesh=None) -> dict:
+    """The 'multistream' section of BENCH_streaming.json — the single shape
+    both writers (merge_json here, benchmarks/run.py::write_json) emit."""
+    import jax
+
+    return {
+        "smoke": smoke,
+        "device_count": jax.device_count(),
+        "mesh": dict(mesh.shape) if mesh is not None else None,
+        "results": rows,
+    }
+
+
+def merge_json(path: str, rows: list[dict], smoke: bool, mesh=None) -> None:
+    """Put the grid into the trajectory record next to the edges/s grid.
+
+    Only the ``multistream`` section is replaced (with its own device/mesh
+    context) — the (r, batch, chunk) grid and its top-level metadata stay
+    whatever run recorded them."""
+    payload = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            payload = json.load(f)
+    payload.setdefault("schema", "repro/streaming-throughput/v1")
+    payload["multistream"] = grid_section(rows, smoke, mesh=mesh)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"# merged multistream grid into {path}", file=sys.stderr)
 
 
 def main(r: int = 100_000, bs: int = 4096) -> list[str]:
@@ -54,4 +175,27 @@ def main(r: int = 100_000, bs: int = 4096) -> list[str]:
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="",
+                    help="merge the (tenants x backend) grid into this "
+                         "trajectory JSON (e.g. BENCH_streaming.json)")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--mesh", default="",
+                    help="device mesh spec, e.g. 'tenants=2,estimators=2'")
+    ap.add_argument("--tenant-axis", default="tenants")
+    ap.add_argument("--host-devices", type=int, default=0,
+                    help="force N CPU host devices for mesh testing")
+    args = ap.parse_args()
+    if args.json or args.mesh or args.smoke:
+        from repro.launch.mesh import make_stream_mesh
+
+        mesh = make_stream_mesh(args.mesh)
+        grid = bench_grid(
+            mesh=mesh,
+            tenant_axis=args.tenant_axis,
+            smoke=args.smoke,
+        )
+        if args.json:
+            merge_json(args.json, grid, args.smoke, mesh=mesh)
+    else:
+        main()

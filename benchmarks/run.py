@@ -7,10 +7,12 @@ Prints ``name,us_per_call,derived`` CSV rows (plus a header). Scaled to finish
 on a single CPU core; the dry-run + roofline (EXPERIMENTS.md) carry the
 at-scale numbers.
 
-``--json PATH`` runs the streaming-ingest grid instead (edges/s per
-(r, batch, chunk) configuration, chunk=1 being the per-batch baseline) and
-writes the machine-readable trajectory record CI uploads as an artifact;
-``--smoke`` shrinks it to CI scale.
+``--json PATH`` runs the streaming grids instead — edges/s per
+(r, batch, chunk) configuration (chunk=1 being the per-batch baseline) plus
+the engine-bank (tenants x backend) streams/s grid — and writes the
+machine-readable trajectory record CI uploads as an artifact; ``--smoke``
+shrinks both to CI scale. ``python -m benchmarks.multistream --mesh ...``
+re-merges the bank grid with tenant-sharded plans included.
 """
 from __future__ import annotations
 
@@ -24,7 +26,7 @@ import time
 def write_json(path: str, smoke: bool) -> None:
     import jax
 
-    from benchmarks import throughput
+    from benchmarks import multistream, throughput
 
     results = throughput.bench_grid(smoke=smoke)
     payload = {
@@ -35,6 +37,12 @@ def write_json(path: str, smoke: bool) -> None:
         "python": platform.python_version(),
         "jax": jax.__version__,
         "results": results,
+        # the engine-bank grid (tenants x backend -> streams/s); sharded-plan
+        # rows appear when the run has a mesh (python -m benchmarks.multistream
+        # --host-devices N --mesh ... merges them into the same file)
+        "multistream": multistream.grid_section(
+            multistream.bench_grid(smoke=smoke), smoke
+        ),
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)

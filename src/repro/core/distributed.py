@@ -27,6 +27,19 @@ Capacity: like MoE dispatch, per-(sender,receiver) buffers are padded to
 the update returns an ``overflow`` diagnostic that production monitors (and
 bumps the factor between batches — state is unaffected by a re-run). Tests
 assert zero overflow at the sizes exercised.
+
+* ``make_banked_pjit_update(mesh, scheme, tenant_axis)`` — the *tenant-sharded
+  bank*: ``vmap(bulk_update_all)`` over the leading tenant axis inside one jit
+  over the whole mesh. The bank's tenant dimension shards over the mesh axis
+  named ``tenant_axis`` and the estimator dimension shards over every remaining
+  mesh axis, giving the 2-D ``(tenants, estimators)`` layout when both exist.
+  Per-tenant programs are embarrassingly parallel along the tenant axis (zero
+  cross-tenant collectives by construction); within a tenant the scheme choice
+  mirrors the single-tenant plans: "independent" replicates W across the
+  estimator axes, "coordinated_xla" ships W sharded and gathers it per tenant
+  group before the structure build (see make_banked_pjit_update for why the
+  build itself stays replicated). ``make_banked_pjit_chunk_update`` is the
+  K-batch fused variant (``bulk_update_chunk`` under the same shardings).
 """
 from __future__ import annotations
 
@@ -38,7 +51,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.bulk import bulk_update_all
+from repro.core.bulk import bulk_update_all, bulk_update_chunk
 from repro.core.state import EstimatorState
 from repro.primitives.segscan import segment_starts, segmented_iota
 from repro.primitives.search import exact_multisearch
@@ -82,6 +95,136 @@ def make_pjit_update(mesh, scheme: str = "coordinated_xla"):
     return jax.jit(
         bulk_update_all,
         in_shardings=(state_sh, w_sh, rep, rep),
+        out_shardings=state_sh,
+        donate_argnums=(0,),
+    )
+
+
+# --------------------------------------------------------------------------
+# tenant-sharded banked pjit paths
+# --------------------------------------------------------------------------
+def split_tenant_axis(mesh, tenant_axis: str = "tenants"):
+    """(tenant_axis_size, estimator_axes, estimator_axes_size) for ``mesh``.
+
+    The tenant axis is the mesh axis literally named ``tenant_axis``; every
+    other axis shards the estimator dimension. Raises if the axis is absent —
+    callers that want a fallback should check ``tenant_axis in mesh.axis_names``
+    first (``select_backend``'s auto policy does).
+    """
+    if tenant_axis not in mesh.axis_names:
+        raise ValueError(
+            f"mesh axes {tuple(mesh.axis_names)} have no {tenant_axis!r} axis; "
+            "build one with repro.launch.mesh.make_stream_mesh('tenants=...')"
+        )
+    e_axes = tuple(a for a in mesh.axis_names if a != tenant_axis)
+    t_size = mesh.shape[tenant_axis]
+    e_size = mesh.size // t_size
+    return t_size, e_axes, e_size
+
+
+def banked_state_sharding(mesh, tenant_axis: str = "tenants") -> EstimatorState:
+    """NamedSharding pytree for a (n_tenants, r, ...) estimator bank: tenants
+    over ``tenant_axis``, estimators over the remaining axes. The engine uses
+    this to place a freshly initialized or snapshot-restored bank, so restore
+    reshards onto whatever mesh the target engine runs (mesh-portable
+    snapshots)."""
+    _, e_axes, _ = split_tenant_axis(mesh, tenant_axis)
+    t, e = tenant_axis, (e_axes if e_axes else None)
+    est = NamedSharding(mesh, P(t, e))
+    est2 = NamedSharding(mesh, P(t, e, None))
+    t_only = NamedSharding(mesh, P(t))
+    return EstimatorState(f1=est2, chi=est, f2=est2, has_f3=est, m_seen=t_only)
+
+
+def banked_batch_w_sharding(
+    mesh, scheme: str = "coordinated_xla", tenant_axis: str = "tenants"
+) -> NamedSharding:
+    """Input sharding for a (T, s, 2) batch — what ``make_banked_pjit_update``
+    expects and what the engine's per-batch ``ingest`` device_puts through
+    (host -> shards in one copy)."""
+    _, e_axes, _ = split_tenant_axis(mesh, tenant_axis)
+    t, e = tenant_axis, (e_axes if e_axes else None)
+    return NamedSharding(
+        mesh, P(t, None, None) if scheme == "independent" else P(t, e, None)
+    )
+
+
+def make_banked_pjit_update(
+    mesh, scheme: str = "coordinated_xla", tenant_axis: str = "tenants"
+):
+    """Tenant-sharded bank update: jit(vmap(bulk_update_all)) over the mesh.
+
+    Signature matches the engine's banked call convention:
+    ``f(state_bank, Wb (T,s,2), n_valid (T,), keys (T,2)) -> state_bank``.
+    Tenant dim -> ``tenant_axis``; estimator dim -> the remaining axes.
+    scheme="independent" replicates W across the estimator axes; with
+    "coordinated_xla" W *arrives* sharded across them (the host->device
+    transfer is distributed) and is all-gathered within each tenant group
+    before the batch-structure build. Keeping the structure build replicated
+    per group is deliberate: XLA's partitioner (observed on 0.4.x CPU)
+    miscompiles iota-into-sharded-concat fusions when the tenant dim and the
+    batch dim shard simultaneously — and every device in a tenant group needs
+    the full batch structure for its estimator shard's multisearches anyway.
+    The estimator-dim work (reservoir draws, Q1/Q2/Q3 query vectors) stays
+    sharded in both schemes. ``make_banked_pjit_chunk_update`` is the K-batch
+    fused variant (``bulk_update_chunk`` under the same shardings).
+    """
+    state_sh = banked_state_sharding(mesh, tenant_axis)
+    t = tenant_axis
+    w_in = banked_batch_w_sharding(mesh, scheme, tenant_axis)
+    w_gathered = NamedSharding(mesh, P(t, None, None))
+    t_only = NamedSharding(mesh, P(t))
+    t_rep = NamedSharding(mesh, P(t, None))
+
+    def banked(state, Wb, n_valid, keys):
+        Wb = jax.lax.with_sharding_constraint(Wb, w_gathered)
+        return jax.vmap(bulk_update_all)(state, Wb, n_valid, keys)
+
+    return jax.jit(
+        banked,
+        in_shardings=(state_sh, w_in, t_only, t_rep),
+        out_shardings=state_sh,
+        donate_argnums=(0,),
+    )
+
+
+def banked_chunk_w_sharding(
+    mesh, scheme: str = "coordinated_xla", tenant_axis: str = "tenants"
+) -> NamedSharding:
+    """Input sharding for a staged (T, K, s, 2) superbatch — what
+    ``make_banked_pjit_chunk_update`` expects and what the engine's
+    ``stage_chunk`` device_puts through (host -> shards in one copy)."""
+    _, e_axes, _ = split_tenant_axis(mesh, tenant_axis)
+    t, e = tenant_axis, (e_axes if e_axes else None)
+    return NamedSharding(
+        mesh,
+        P(t, None, None, None) if scheme == "independent" else P(t, None, e, None),
+    )
+
+
+def make_banked_pjit_chunk_update(
+    mesh, scheme: str = "coordinated_xla", tenant_axis: str = "tenants"
+):
+    """K-batch fused variant of ``make_banked_pjit_update``:
+    ``f(state_bank, Wb (T,K,s,2), n_valids (T,K), root_keys (T,2), step0)``.
+    Same shardings with a replicated scan axis; the counter-based RNG keeps it
+    bit-identical to K sequential banked updates (see bulk_update_chunk)."""
+    state_sh = banked_state_sharding(mesh, tenant_axis)
+    t = tenant_axis
+    w_in = banked_chunk_w_sharding(mesh, scheme, tenant_axis)
+    w_gathered = NamedSharding(mesh, P(t, None, None, None))
+    t_rep = NamedSharding(mesh, P(t, None))
+    rep = NamedSharding(mesh, P())
+
+    def banked_chunk(state, Wb, n_valids, keys, step0):
+        Wb = jax.lax.with_sharding_constraint(Wb, w_gathered)
+        return jax.vmap(bulk_update_chunk, in_axes=(0, 0, 0, 0, None))(
+            state, Wb, n_valids, keys, step0
+        )
+
+    return jax.jit(
+        banked_chunk,
+        in_shardings=(state_sh, w_in, t_rep, t_rep, rep),
         out_shardings=state_sh,
         donate_argnums=(0,),
     )

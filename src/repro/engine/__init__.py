@@ -2,7 +2,9 @@
 
 Sits between ``repro.core`` (the pure batch-update math) and ``repro.launch``
 (CLIs): owns estimator state for N tenant streams, ingests edge batches
-incrementally, answers rolling estimates, and snapshots/restores itself.
+incrementally, answers rolling estimates, and snapshots/restores itself —
+on one device or sharded over a mesh ``tenants`` axis (execution-plan
+handbook: docs/scaling.md).
 """
 from repro.engine.backends import BACKENDS, BackendPlan, select_backend
 from repro.engine.engine import (

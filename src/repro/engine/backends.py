@@ -1,27 +1,40 @@
 """Backend selection for TriangleCountEngine.
 
-One engine API, four execution plans over the same ``bulk_update_all``
+One engine API, six execution plans over the same ``bulk_update_all``
 semantics (and therefore the same estimate distribution — counter-based RNG
 makes the paths interchangeable mid-stream):
 
-  single            jit(vmap(bulk_update_all)) over the tenant axis. The
-                    default on one device and the only plan that runs a
-                    multi-tenant bank today; N streams share one program.
-  pjit_independent  paper Section 5's "independent bulk parallel": W
-                    replicated, each device sorts the whole batch for its
-                    estimator shard. Zero collectives, p-times duplicated
-                    sort work.
-  pjit_coordinated  W sharded; XLA's SPMD partitioner inserts the collectives
-                    for the global sorts/searches.
-  shardmap          the explicit coordinated scheme (hash-partitioned arcs +
-                    routed multisearches, repro.core.distributed). Reports a
-                    bucket-overflow diagnostic the engine watches.
+  single                   jit(vmap(bulk_update_all)) over the tenant axis.
+                           The default on one device; N streams share one
+                           program, all state on one device.
+  pjit_independent         paper Section 5's "independent bulk parallel": W
+                           replicated, each device sorts the whole batch for
+                           its estimator shard. Zero collectives, p-times
+                           duplicated sort work. Single-tenant.
+  pjit_coordinated         W sharded; XLA's SPMD partitioner inserts the
+                           collectives for the global sorts/searches.
+                           Single-tenant.
+  shardmap                 the explicit coordinated scheme (hash-partitioned
+                           arcs + routed multisearches,
+                           repro.core.distributed). Reports a bucket-overflow
+                           diagnostic the engine watches. Single-tenant.
+  banked_pjit_independent  the tenant-sharded bank: the bank's tenant dim
+                           shards over the mesh axis named
+                           ``config.tenant_axis``, estimators over every
+                           remaining axis (the 2-D (tenants, estimators)
+                           layout when both exist); W replicated across the
+                           estimator axes.
+  banked_pjit_coordinated  same layout with W sharded across the estimator
+                           axes — SPMD collectives stay *inside* each tenant
+                           group; the tenant axis itself is collective-free.
 
-``select_backend`` implements the "auto" policy: no mesh (or a 1-device mesh)
--> single; a real mesh with divisible shapes -> shardmap (the paper's
-recommended coordinated scheme); otherwise pjit_coordinated as the safe
-fallback. Multi-tenant banks currently force the single plan — sharding the
-tenant axis itself is the next scaling step (see ROADMAP).
+``select_backend`` implements the "auto" policy: a multi-tenant bank on a mesh
+with a divisible tenants axis -> a banked plan (coordinated when an estimator
+axis exists and shapes divide it, else independent); a bank without such a
+mesh -> single. Single tenant: no mesh (or a 1-device mesh) -> single; a real
+mesh with divisible shapes -> shardmap (the paper's recommended coordinated
+scheme); otherwise pjit_coordinated as the safe fallback.
+docs/scaling.md is the full decision handbook.
 """
 from __future__ import annotations
 
@@ -32,7 +45,14 @@ import jax
 
 from repro.core.bulk import bulk_update_all, bulk_update_chunk
 
-BACKENDS = ("single", "pjit_independent", "pjit_coordinated", "shardmap")
+BACKENDS = (
+    "single",
+    "pjit_independent",
+    "pjit_coordinated",
+    "shardmap",
+    "banked_pjit_independent",
+    "banked_pjit_coordinated",
+)
 
 
 @dataclass(frozen=True)
@@ -47,6 +67,20 @@ class BackendPlan:
     # builder for the K-batch fused ingest (state, Ws, n_valids, keys, step0);
     # None = the plan cannot chunk (chunk_size must stay 1)
     build_chunk: Optional[Callable] = None
+    # (config, mesh) -> EstimatorState of NamedShardings for the bank, or None
+    # for plans whose state lives unsharded on the default device. The engine
+    # device_puts fresh and snapshot-restored banks through this, which is
+    # what makes snapshots portable across mesh shapes.
+    bank_sharding: Optional[Callable] = None
+    # (config, mesh) -> NamedSharding for a (T, s, 2) batch / a staged
+    # (T, K, s, 2) superbatch; ingest/stage_chunk device_put through these so
+    # sharded plans upload host->shards once instead of host->device 0->reshard
+    batch_w_sharding: Optional[Callable] = None
+    chunk_w_sharding: Optional[Callable] = None
+
+
+def _tenant_axis(config) -> str:
+    return getattr(config, "tenant_axis", "tenants")
 
 
 def _build_single(config, mesh) -> Callable:
@@ -71,6 +105,56 @@ def _build_pjit(scheme: str):
     return build
 
 
+def _build_banked_pjit(scheme: str):
+    def build(config, mesh) -> Callable:
+        from repro.core.distributed import make_banked_pjit_update
+
+        return make_banked_pjit_update(
+            mesh, scheme=scheme, tenant_axis=_tenant_axis(config)
+        )
+
+    return build
+
+
+def _build_banked_pjit_chunk(scheme: str):
+    def build(config, mesh) -> Callable:
+        from repro.core.distributed import make_banked_pjit_chunk_update
+
+        return make_banked_pjit_chunk_update(
+            mesh, scheme=scheme, tenant_axis=_tenant_axis(config)
+        )
+
+    return build
+
+
+def _banked_sharding(config, mesh):
+    from repro.core.distributed import banked_state_sharding
+
+    return banked_state_sharding(mesh, tenant_axis=_tenant_axis(config))
+
+
+def _banked_batch_w_sharding(scheme: str):
+    def f(config, mesh):
+        from repro.core.distributed import banked_batch_w_sharding
+
+        return banked_batch_w_sharding(
+            mesh, scheme=scheme, tenant_axis=_tenant_axis(config)
+        )
+
+    return f
+
+
+def _banked_chunk_w_sharding(scheme: str):
+    def f(config, mesh):
+        from repro.core.distributed import banked_chunk_w_sharding
+
+        return banked_chunk_w_sharding(
+            mesh, scheme=scheme, tenant_axis=_tenant_axis(config)
+        )
+
+    return f
+
+
 def _build_shardmap(config, mesh) -> Callable:
     from repro.core.distributed import make_coordinated_update
 
@@ -79,6 +163,19 @@ def _build_shardmap(config, mesh) -> Callable:
         r=config.r,
         s=config.batch_size,
         capacity_factor=config.capacity_factor,
+    )
+
+
+def _banked_plan(scheme: str) -> BackendPlan:
+    return BackendPlan(
+        f"banked_pjit_{scheme.replace('_xla', '')}",
+        banked=True,
+        reports_overflow=False,
+        build=_build_banked_pjit(scheme),
+        build_chunk=_build_banked_pjit_chunk(scheme),
+        bank_sharding=_banked_sharding,
+        batch_w_sharding=_banked_batch_w_sharding(scheme),
+        chunk_w_sharding=_banked_chunk_w_sharding(scheme),
     )
 
 
@@ -93,6 +190,8 @@ _PLANS = {
         "pjit_coordinated", False, False, _build_pjit("coordinated_xla")
     ),
     "shardmap": BackendPlan("shardmap", False, True, _build_shardmap),
+    "banked_pjit_independent": _banked_plan("independent"),
+    "banked_pjit_coordinated": _banked_plan("coordinated_xla"),
 }
 
 
@@ -100,12 +199,40 @@ def _mesh_size(mesh: Any) -> int:
     return int(mesh.size) if mesh is not None else 1
 
 
+def _banked_mesh_fit(config, mesh) -> Optional[tuple[int, int]]:
+    """(t_size, e_size) when ``mesh`` can host this bank tenant-sharded:
+    it has the tenant axis, the axis divides n_tenants, and any estimator
+    axes divide r. None when the bank must fall back to ``single``."""
+    if mesh is None:
+        return None
+    ta = _tenant_axis(config)
+    if ta not in mesh.axis_names:
+        return None
+    t_size = int(mesh.shape[ta])
+    e_size = int(mesh.size) // t_size
+    if t_size < 1 or config.n_tenants % t_size != 0:
+        return None
+    if e_size > 1 and config.r % e_size != 0:
+        return None
+    return t_size, e_size
+
+
 def select_backend(config, mesh: Optional[Any] = None) -> BackendPlan:
     """Resolve config.backend (possibly "auto") to a concrete BackendPlan."""
     name = config.backend
     p = _mesh_size(mesh)
     if name == "auto":
-        if p <= 1 or config.n_tenants > 1:
+        fit = _banked_mesh_fit(config, mesh) if p > 1 else None
+        if fit is not None:
+            t_size, e_size = fit
+            # an estimator axis with divisible batches earns the W shard;
+            # otherwise replicate W per tenant group (pure tenant split)
+            name = (
+                "banked_pjit_coordinated"
+                if e_size > 1 and config.batch_size % e_size == 0
+                else "banked_pjit_independent"
+            )
+        elif config.n_tenants > 1 or p <= 1:
             name = "single"
         elif config.r % p == 0 and config.batch_size % p == 0:
             name = "shardmap"
@@ -117,10 +244,34 @@ def select_backend(config, mesh: Optional[Any] = None) -> BackendPlan:
     if not plan.banked and config.n_tenants > 1:
         raise ValueError(
             f"backend {name!r} is single-tenant; multi-tenant banks need "
-            "backend='single' (or 'auto')"
+            "'single', a banked_pjit_* plan, or 'auto'"
         )
     if plan.name != "single" and mesh is None:
         raise ValueError(f"backend {name!r} requires a mesh")
+    if plan.name.startswith("banked_"):
+        fit = _banked_mesh_fit(config, mesh)
+        if fit is None:
+            raise ValueError(
+                f"backend {name!r} needs a mesh with a "
+                f"{_tenant_axis(config)!r} axis whose size divides "
+                f"n_tenants={config.n_tenants} and whose remaining axes "
+                f"divide r={config.r}; got mesh "
+                f"{dict(mesh.shape) if mesh is not None else None}"
+            )
+        _, e_size = fit
+        if (
+            plan.name == "banked_pjit_coordinated"
+            and e_size > 1
+            and config.batch_size % e_size != 0
+        ):
+            # fail here, not at the first ingest: the coordinated plan shards
+            # W's batch dim over the estimator axes
+            raise ValueError(
+                f"banked_pjit_coordinated needs batch_size "
+                f"({config.batch_size}) divisible by the estimator axes "
+                f"product ({e_size}); use banked_pjit_independent (W "
+                "replicated per tenant group) instead"
+            )
     if plan.name == "shardmap" and (
         config.r % p != 0 or config.batch_size % p != 0
     ):
@@ -131,6 +282,6 @@ def select_backend(config, mesh: Optional[Any] = None) -> BackendPlan:
     if getattr(config, "chunk_size", 1) > 1 and plan.build_chunk is None:
         raise ValueError(
             f"backend {name!r} does not support chunked ingest; "
-            "chunk_size > 1 needs backend='single' (or 'auto' without a mesh)"
+            "chunk_size > 1 needs a banked plan ('single' or 'banked_pjit_*')"
         )
     return plan

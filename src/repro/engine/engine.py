@@ -12,21 +12,50 @@ one-shot script:
     (estimators + RNG cursor) through host memory or a CheckpointManager, so
     a killed process resumes bit-for-bit.
 
-Multi-tenancy: the engine owns a *bank* of ``n_tenants`` independent estimator
-sets stored as one pytree with a leading tenant axis, updated by a single
-``jax.vmap``-ed ``bulk_update_all`` under one ``jax.jit``. N concurrent streams
-(or N accuracy tiers of one stream at different ``r``-per-group seeds) share
-one compiled program and one device mesh — no per-stream recompilation, no
-per-stream dispatch overhead. Because randomness is counter-based
-(``jax.random.fold_in`` of a per-tenant root key with the batch index), tenant
-``t`` of the bank is **bit-for-bit identical** to a standalone single-stream
-run seeded the same way; tests assert this exactly.
+State layout
+------------
+The engine owns a *bank* of ``n_tenants`` independent estimator sets stored as
+one ``EstimatorState`` pytree with a leading tenant axis:
 
-Backend selection (see ``repro.engine.backends``): on a single device the
-vmapped sequential ``bulk_update_all`` runs; on a mesh the engine picks the
-pjit or explicit-collective coordinated path from ``repro.core.distributed``
-and watches its overflow diagnostic, escalating the routing capacity factor
-(one recompile) when hot vertices overflow a bucket.
+  f1      (T, r, 2) int32   level-1 edges, -1 sentinel when unset
+  chi     (T, r)    int32   neighborhood sizes |Gamma(f1)|
+  f2      (T, r, 2) int32   level-2 edges, canonical (min, max)
+  has_f3  (T, r)    bool    closing-edge-seen flags
+  m_seen  (T,)      int64   per-tenant stream length
+
+One ``jax.vmap``-ed ``bulk_update_all`` under one ``jax.jit`` updates every
+tenant per batch: N concurrent streams (or N accuracy tiers of one stream)
+share one compiled program — no per-stream recompilation or dispatch overhead.
+On a mesh with a ``tenants`` axis the bank *shards*: the tenant dimension
+splits over that axis and the estimator dimension over every remaining axis
+(the banked_pjit_* plans in ``repro.engine.backends``), so a million-tenant
+bank is a data-layout problem, not a loop. Single-tenant engines may instead
+pick the pjit or explicit-collective shard_map paths from
+``repro.core.distributed``; the engine watches shardmap's overflow diagnostic
+and escalates the routing capacity factor (one recompile) when hot vertices
+overflow a bucket.
+
+RNG contract
+------------
+Randomness is counter-based: batch ``i`` of tenant ``t`` uses
+``fold_in(PRNGKey(seeds[t]), i)``. No RNG state mutates outside the ``step``
+cursor, so tenant ``t`` of any bank — vmapped, tenant-sharded, chunked,
+restored — is **bit-for-bit identical** to a standalone single-stream run
+seeded the same way; tests assert exact array equality, not statistical
+closeness.
+
+Snapshot format
+---------------
+``snapshot()`` / ``bank_snapshot()`` return a flat dict of **host numpy**
+arrays: the five state fields above (always with the leading tenant axis, even
+for unbanked plans), ``root_keys (T, 2)``, ``step ()`` int64 (the batch
+cursor), and ``config`` = [r, batch_size, n_tenants] int64 for the restore
+handshake. The format carries no mesh or chunking information — restore
+device_puts the bank through the *target* engine's plan sharding, so a
+snapshot taken on a 4-device 2-D mesh restores onto one device, a different
+mesh shape, or a different tenants-per-device split, bit-identically
+(gather-to-host on save, reshard-on-restore). The dict is a plain pytree and
+round-trips through ``repro.train.checkpoint.CheckpointManager`` unchanged.
 """
 from __future__ import annotations
 
@@ -52,7 +81,10 @@ class EngineConfig:
     n_tenants: int = 1
     groups: int = 9  # median-of-means groups for estimate()
     seeds: Optional[tuple[int, ...]] = None  # per-tenant RNG seeds
-    backend: str = "auto"  # auto | single | pjit_independent | pjit_coordinated | shardmap
+    backend: str = "auto"  # auto | any name in repro.engine.backends.BACKENDS
+    # mesh axis the bank's tenant dim shards over (banked_pjit_* plans);
+    # every other mesh axis shards the estimator dim
+    tenant_axis: str = "tenants"
     capacity_factor: float = 2.0  # shardmap routing capacity (see distributed.py)
     # K: batches fused per dispatch (lax.scan inside one jit). Pure dispatch
     # granularity — state and RNG stream are identical for any K, so snapshots
@@ -132,13 +164,23 @@ class TriangleCountEngine:
     def _init_bank(self) -> EstimatorState:
         one = init_state(self.config.r)
         if self.plan.banked:
-            return jax.tree.map(
+            bank = jax.tree.map(
                 lambda x: jnp.broadcast_to(
                     x[None], (self.config.n_tenants,) + x.shape
                 ),
                 one,
             )
+            return self._place_bank(bank)
         return one
+
+    def _place_bank(self, bank: EstimatorState) -> EstimatorState:
+        """Lay the bank out the way this engine's plan expects: sharded over
+        the mesh for tenant-sharded plans, default device otherwise."""
+        if self.plan.bank_sharding is not None:
+            return jax.device_put(
+                bank, self.plan.bank_sharding(self.config, self.mesh)
+            )
+        return bank
 
     @property
     def n_tenants(self) -> int:
@@ -204,7 +246,15 @@ class TriangleCountEngine:
         )
         if not self.plan.banked:  # distributed single-tenant backends
             Wb, nv, keys = Wb[0], jnp.int32(int(nv[0])), keys[0]
-        out = self._update(self._state, jnp.asarray(Wb), jnp.asarray(nv), keys)
+            Wb = jnp.asarray(Wb)
+        elif self.plan.batch_w_sharding is not None:
+            # host -> shards in one copy (no staging hop via the default device)
+            Wb = jax.device_put(
+                Wb, self.plan.batch_w_sharding(self.config, self.mesh)
+            )
+        else:
+            Wb = jnp.asarray(Wb)
+        out = self._update(self._state, Wb, jnp.asarray(nv), keys)
         if self.plan.reports_overflow:
             # don't int() the overflow here: that would sync the host to the
             # device every batch and kill prefetch overlap. Drain every few
@@ -256,22 +306,33 @@ class TriangleCountEngine:
         K, s, T = self.config.chunk_size, self.config.batch_size, self.n_tenants
         if self._update_chunk is None:
             raise ValueError(
-                "chunked ingest needs EngineConfig(chunk_size > 1) on the "
-                "'single' backend"
+                "chunked ingest needs EngineConfig(chunk_size > 1) on a "
+                "banked plan ('single' or 'banked_pjit_*')"
             )
-        Ws = jnp.asarray(Ws, dtype=jnp.int32)
-        if Ws.ndim == 3:
-            if Ws.shape != (K, s, 2):
-                raise ValueError(f"chunk must be ({K}, {s}, 2), got {Ws.shape}")
-            Wb = jnp.broadcast_to(Ws[None], (T, K, s, 2))
-        elif Ws.ndim == 4:
-            if Ws.shape != (T, K, s, 2):
+        arr = np.asarray(Ws, dtype=np.int32)
+        if arr.ndim == 3:
+            if arr.shape != (K, s, 2):
+                raise ValueError(f"chunk must be ({K}, {s}, 2), got {arr.shape}")
+            Wb_host = np.broadcast_to(arr[None], (T, K, s, 2))
+        elif arr.ndim == 4:
+            if arr.shape != (T, K, s, 2):
                 raise ValueError(
-                    f"chunk must be ({T}, {K}, {s}, 2), got {Ws.shape}"
+                    f"chunk must be ({T}, {K}, {s}, 2), got {arr.shape}"
                 )
-            Wb = Ws
+            Wb_host = arr
         else:
-            raise ValueError(f"chunk must be (K,s,2) or (T,K,s,2), got {Ws.shape}")
+            raise ValueError(
+                f"chunk must be (K,s,2) or (T,K,s,2), got {arr.shape}"
+            )
+        if self.plan.chunk_w_sharding is not None:
+            # sharded plan: device_put straight through the plan's input
+            # sharding — one host->shards copy, no staging hop via the
+            # default device
+            Wb = jax.device_put(
+                Wb_host, self.plan.chunk_w_sharding(self.config, self.mesh)
+            )
+        else:
+            Wb = jnp.asarray(Wb_host)
         if n_valids is None:
             nv_host = np.full((T, K), s, np.int64)
         else:
@@ -351,6 +412,13 @@ class TriangleCountEngine:
         st = self._state
         if not self.plan.banked:
             st = jax.tree.map(lambda x: x[None], st)
+        elif self.plan.bank_sharding is not None:
+            # gather the bank to host and answer on the default device: the
+            # query then runs the same program as an unsharded engine, so the
+            # estimate is bit-identical across mesh shapes (float reduction
+            # order never depends on the layout). O(T*r) bytes per query —
+            # cheap next to ingest.
+            st = jax.tree.map(np.asarray, st)
         return np.asarray(self._estimate(st))
 
     def estimate_tenant(self, tenant: int = 0) -> float:
@@ -358,9 +426,11 @@ class TriangleCountEngine:
 
     # -- snapshot / restore -------------------------------------------------
     def snapshot(self) -> dict:
-        """Complete engine state as a flat dict of host numpy arrays.
+        """Complete engine state as a flat dict of host numpy arrays
+        (see "Snapshot format" in the module docstring).
 
-        The dict is a plain pytree, so it round-trips through
+        Gather-to-host: sharded banks are materialized as full host arrays, so
+        the dict is mesh-independent and round-trips through
         ``repro.train.checkpoint.CheckpointManager`` unchanged.
         """
         self._drain_overflow()
@@ -376,12 +446,19 @@ class TriangleCountEngine:
         )
         return snap
 
+    # mesh-portability contract: bank_snapshot gathers to host, bank_restore
+    # reshards onto the target plan — the names docs/scaling.md teaches
+    bank_snapshot = snapshot
+
     def restore(self, snap: dict) -> None:
         """Restore from a snapshot() dict (shape-checked against config).
 
         ``r`` and ``n_tenants`` must match; ``batch_size`` may differ (the
         estimator state is batch-size independent — Theorem 4.1's batch
         invariance — so a restored stream can legally re-batch).
+        Reshard-on-restore: the bank is device_put through *this* engine's
+        plan sharding, so the snapshot may come from any mesh shape or
+        tenants-per-device split (or none at all).
         """
         got = _snapshot_config(snap)
         want = (self.config.r, self.config.batch_size, self.config.n_tenants)
@@ -389,14 +466,21 @@ class TriangleCountEngine:
             raise SnapshotMismatch(
                 f"snapshot (r, batch_size, n_tenants)={got} != engine {want}"
             )
-        bank = EstimatorState(
-            **{f: jnp.asarray(snap[f]) for f in EstimatorState._fields}
+        host = EstimatorState(
+            **{f: np.asarray(snap[f]) for f in EstimatorState._fields}
         )
         if not self.plan.banked:
-            bank = jax.tree.map(lambda x: x[0], bank)
+            bank = jax.tree.map(lambda x: jnp.asarray(x[0]), host)
+        elif self.plan.bank_sharding is not None:
+            # host -> shards directly; no staging copy on the default device
+            bank = self._place_bank(host)
+        else:
+            bank = jax.tree.map(jnp.asarray, host)
         self._state = bank
         self._root_keys = jnp.asarray(snap["root_keys"])
         self._step = int(snap["step"])
+
+    bank_restore = restore
 
     @classmethod
     def from_snapshot(

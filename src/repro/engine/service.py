@@ -1,18 +1,38 @@
 """Stream service loop: engine + prefetch + checkpoints + rolling queries.
 
-``run_stream`` is the production ingestion loop every driver shares:
+``run_stream`` is the production ingestion loop every driver shares. It is
+plan-agnostic: the engine owns device placement, so the same loop drives a
+one-device bank, a shardmap single stream, or a tenant-sharded mesh bank
+(docs/scaling.md) without a branch.
 
+Pipeline
+--------
   * batches flow through ``repro.data.prefetch.PrefetchQueue`` so host-side
     generation/IO overlaps device compute (with the backup-batch straggler
     fallback disabled by default — estimator streams must not replay edges,
     so no deadline is set unless the caller opts in);
-  * the engine snapshot is checkpointed every ``ckpt_every`` batches through
-    ``repro.train.checkpoint.CheckpointManager`` (atomic manifest, keep-k,
-    async), and the loop auto-resumes from the newest complete manifest —
-    a killed run continues bit-for-bit thanks to the counter-based RNG;
-  * ``report_every`` invokes a query callback mid-stream with the rolling
-    per-tenant estimates — the "serve" path answers queries from the same
-    loop without stalling ingestion more than one estimate() dispatch.
+  * with ``engine.config.chunk_size = K > 1`` the loop assembles K-batch
+    superbatches and double-buffers their device upload behind the in-flight
+    chunk's compute; reports and checkpoints then land at chunk granularity,
+    while ``engine.step`` keeps counting batches;
+  * ``report_every`` invokes ``on_report(step, estimates, edges_seen)``
+    mid-stream with the rolling per-tenant estimates — the "serve" path
+    answers queries from the same loop without stalling ingestion more than
+    one estimate() dispatch (plus a bank gather on sharded plans).
+
+Checkpoint / resume contract
+----------------------------
+The engine snapshot (see "Snapshot format" in ``repro.engine.engine``) is
+saved every ``ckpt_every`` batches plus once at the end, through
+``repro.train.checkpoint.CheckpointManager`` (atomic manifest, keep-k,
+async) with metadata {config_hash, r, batch, tenants}. On start the loop
+restores the newest complete manifest and *skips* the already-ingested
+prefix of the iterator by batch count — which is why auto-resume refuses a
+changed ``batch_size`` (the skip would mis-position the stream) even though
+``engine.restore`` itself is batch-size independent. Everything else may
+change between runs: mesh shape, execution plan, chunk size. A killed run
+continues bit-for-bit thanks to the counter-based RNG (batch ``i`` always
+folds ``i`` into the root key, regardless of which process replays it).
 """
 from __future__ import annotations
 

@@ -1,0 +1,29 @@
+"""Environment hooks that must run before jax initializes a backend.
+
+Importing this module (like anything under ``repro``) imports jax, which is
+safe: XLA reads XLA_FLAGS when the *backend* initializes — at the first
+device query — not at import time. Callers just have to apply the hook
+before building a mesh or touching devices; the stream CLIs run it at
+module import, ahead of everything else.
+"""
+from __future__ import annotations
+
+import os
+
+
+def apply_host_devices(argv) -> None:
+    """Honor ``--host-devices N`` / ``--host-devices=N``: force N CPU host
+    devices via XLA_FLAGS so device meshes are testable without accelerators
+    (docs/scaling.md, "Driving it")."""
+    n = None
+    for i, arg in enumerate(argv):
+        if arg == "--host-devices" and i + 1 < len(argv):
+            n = argv[i + 1]
+        elif arg.startswith("--host-devices="):
+            n = arg.split("=", 1)[1]
+    if n is None or int(n) <= 0:
+        return  # 0 is the CLIs' documented "off" default
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={int(n)}"
+    )

@@ -10,12 +10,22 @@ reproduces the single-tenant run bit-for-bit.
   PYTHONPATH=src python -m repro.launch.stream --graph ba --nodes 2000 \
       --estimators 100000 --batch 4096
   PYTHONPATH=src python -m repro.launch.stream --graph ba --tenants 4
+  PYTHONPATH=src python -m repro.launch.stream --tenants 4 \
+      --host-devices 4 --mesh tenants=2,estimators=2   # tenant-sharded bank
 """
 from __future__ import annotations
 
 import argparse
+import sys
 
-import repro  # noqa: F401
+from repro.launch._env import apply_host_devices
+
+if __name__ == "__main__":
+    # must run before any jax device query (see repro.launch._env); guarded
+    # so merely importing this module never mutates the environment
+    apply_host_devices(sys.argv)
+
+import repro  # noqa: F401,E402
 from repro.core.sequential import count_triangles
 from repro.data.graph_stream import (
     barabasi_albert_stream,
@@ -24,6 +34,7 @@ from repro.data.graph_stream import (
     planted_triangle_stream,
 )
 from repro.engine import EngineConfig, TriangleCountEngine, run_stream
+from repro.launch.mesh import make_stream_mesh
 
 
 def make_stream(args):
@@ -41,7 +52,8 @@ def make_stream(args):
 
 
 def build_engine(args) -> TriangleCountEngine:
-    return TriangleCountEngine(
+    mesh = make_stream_mesh(getattr(args, "mesh", "") or "")
+    engine = TriangleCountEngine(
         EngineConfig(
             r=args.estimators,
             batch_size=args.batch,
@@ -49,9 +61,14 @@ def build_engine(args) -> TriangleCountEngine:
             groups=args.groups,
             seeds=tuple(args.seed + t for t in range(args.tenants)),
             backend=args.backend,
+            tenant_axis=getattr(args, "tenant_axis", "tenants"),
             chunk_size=getattr(args, "chunk", 1),
-        )
+        ),
+        mesh=mesh,
     )
+    if mesh is not None:
+        print(f"mesh: {dict(mesh.shape)} -> plan {engine.plan.name}", flush=True)
+    return engine
 
 
 def main():
@@ -71,7 +88,16 @@ def main():
     ap.add_argument("--tenants", type=int, default=1,
                     help="independent estimator banks over the same stream")
     ap.add_argument("--backend", default="auto",
-                    help="auto|single|pjit_independent|pjit_coordinated|shardmap")
+                    help="auto or any name in repro.engine.backends.BACKENDS")
+    ap.add_argument("--mesh", default="",
+                    help="device mesh spec, e.g. '8' or 'tenants=2,estimators=4' "
+                         "(see repro.launch.mesh.make_stream_mesh and "
+                         "docs/scaling.md)")
+    ap.add_argument("--tenant-axis", default="tenants",
+                    help="mesh axis carrying the bank's tenant dimension")
+    ap.add_argument("--host-devices", type=int, default=0,
+                    help="force N CPU host devices (testing a mesh without "
+                         "accelerators)")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_stream_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=0, help="0 = off")
     args = ap.parse_args()

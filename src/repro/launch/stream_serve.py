@@ -13,6 +13,8 @@ Two query surfaces:
 
   PYTHONPATH=src python -m repro.launch.stream_serve --graph ba --nodes 5000 \
       --tenants 4 --estimators 32768 --batch 4096 --report-every 4
+  PYTHONPATH=src python -m repro.launch.stream_serve --tenants 4 \
+      --host-devices 4 --mesh tenants=4       # tenant-sharded bank
 """
 from __future__ import annotations
 
@@ -21,7 +23,12 @@ import queue
 import sys
 import threading
 
-import repro  # noqa: F401
+from repro.launch._env import apply_host_devices
+
+if __name__ == "__main__":
+    # must run before any jax device query (see repro.launch._env)
+    apply_host_devices(sys.argv)
+
 from repro.data.graph_stream import batches
 from repro.engine import run_stream
 from repro.launch.stream import build_engine, make_stream
@@ -59,6 +66,13 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--tenants", type=int, default=2)
     ap.add_argument("--backend", default="auto")
+    ap.add_argument("--mesh", default="",
+                    help="device mesh spec, e.g. 'tenants=2,estimators=4' "
+                         "(docs/scaling.md)")
+    ap.add_argument("--tenant-axis", default="tenants",
+                    help="mesh axis carrying the bank's tenant dimension")
+    ap.add_argument("--host-devices", type=int, default=0,
+                    help="force N CPU host devices for mesh testing")
     ap.add_argument("--report-every", type=int, default=4)
     ap.add_argument("--repeat", type=int, default=1,
                     help="replay the generated stream this many times "

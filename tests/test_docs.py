@@ -1,0 +1,19 @@
+"""Docs stay healthy in tier-1 too: relative links in README/docs resolve and
+the scaling handbook's decision table covers every backend in BACKENDS
+(tools/check_docs.py is the single source of these checks; CI's docs job runs
+the same script plus the quickstart smoke)."""
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def test_docs_links_and_backend_coverage():
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "check_docs.py")],
+        capture_output=True,
+        text=True,
+        timeout=120,
+    )
+    assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr

@@ -49,6 +49,27 @@ def test_stream_driver_accuracy_and_resume(tmp_path):
 
 
 @pytest.mark.slow
+def test_stream_driver_tenant_sharded_matches_single(tmp_path):
+    """The --mesh CLI path end to end: a tenant-sharded bank over 4 forced
+    CPU devices prints the same estimates as the default single plan (the
+    counter-based RNG makes the plans interchangeable; docs/scaling.md)."""
+    base = [
+        "repro.launch.stream", "--graph", "er", "--nodes", "60",
+        "--edges", "500", "--estimators", "512", "--batch", "32",
+        "--tenants", "4", "--ckpt-every", "0",
+    ]
+    p1 = run(base)
+    assert p1.returncode == 0, p1.stderr
+    p2 = run(base + ["--host-devices", "4",
+                     "--mesh", "tenants=2,estimators=2"])
+    assert p2.returncode == 0, p2.stderr
+    assert "plan banked_pjit_coordinated" in p2.stdout, p2.stdout
+    ests1 = [l for l in p1.stdout.splitlines() if l.startswith("estimate")]
+    ests2 = [l for l in p2.stdout.splitlines() if l.startswith("estimate")]
+    assert ests1 == ests2 and len(ests1) == 4
+
+
+@pytest.mark.slow
 def test_lm_train_driver_smoke(tmp_path):
     # fresh ckpt dir per run: the trainer auto-resumes from an existing one,
     # which would skip all steps on a re-run (that behavior is covered by

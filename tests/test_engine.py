@@ -289,3 +289,47 @@ class TestBackendSelection:
         assert select_backend(
             EngineConfig(r=64, batch_size=16), mesh
         ).name == "single"
+
+    def test_banked_plans_need_fitting_mesh(self):
+        banked = EngineConfig(
+            r=64, batch_size=16, n_tenants=2, backend="banked_pjit_independent"
+        )
+        with pytest.raises(ValueError):  # no mesh at all
+            select_backend(banked, None)
+        with pytest.raises(ValueError):  # mesh lacks the tenants axis
+            select_backend(banked, jax.make_mesh((1,), ("data",)))
+        # a custom tenant_axis name is matched against the mesh axes
+        with pytest.raises(ValueError):
+            select_backend(
+                EngineConfig(r=64, batch_size=16, n_tenants=2,
+                             backend="banked_pjit_independent",
+                             tenant_axis="streams"),
+                jax.make_mesh((1,), ("tenants",)),
+            )
+        plan = select_backend(banked, jax.make_mesh((1,), ("tenants",)))
+        assert plan.banked and plan.bank_sharding is not None
+        assert plan.build_chunk is not None  # banked plans can chunk
+
+    def test_banked_engine_on_degenerate_mesh_matches_single(self):
+        """A 1-device 'tenants' mesh exercises the sharded code path (device_put
+        through bank_sharding, in_shardings jit) without multiple devices."""
+        edges = erdos_renyi_stream(25, 120, seed=3)
+        mesh = jax.make_mesh((1,), ("tenants",))
+        cfg = EngineConfig(r=64, batch_size=16, n_tenants=2, seeds=(4, 5))
+        ref = TriangleCountEngine(cfg)
+        eng = TriangleCountEngine(
+            EngineConfig(r=64, batch_size=16, n_tenants=2, seeds=(4, 5),
+                         backend="banked_pjit_coordinated"),
+            mesh=mesh,
+        )
+        for W, nv in batches(edges, 16):
+            ref.ingest(W, nv)
+            eng.ingest(W, nv)
+        sa, sb = ref.snapshot(), eng.bank_snapshot()
+        for f in ("f1", "chi", "f2", "has_f3", "m_seen", "step"):
+            np.testing.assert_array_equal(sa[f], sb[f], err_msg=f)
+        np.testing.assert_array_equal(ref.estimate(), eng.estimate())
+        # snapshot from the sharded plan restores into a plain engine
+        clone = TriangleCountEngine.from_snapshot(eng.bank_snapshot())
+        assert clone.plan.name == "single"
+        np.testing.assert_array_equal(ref.estimate(), clone.estimate())

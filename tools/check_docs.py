@@ -1,0 +1,70 @@
+"""Docs health check, run by the CI docs job and tests/test_docs.py.
+
+Checks:
+  1. every relative markdown link in README.md and docs/*.md resolves to a
+     real file/directory in the repo (anchors and external URLs are skipped);
+  2. docs/scaling.md names every execution plan in
+     ``repro.engine.backends.BACKENDS`` — the handbook's decision table must
+     not silently fall behind the code.
+
+  PYTHONPATH=src python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+# [text](target) — target up to the first ')' or whitespace
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def doc_files() -> list[pathlib.Path]:
+    return [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
+
+
+def check_links() -> list[str]:
+    errors = []
+    for md in doc_files():
+        text = md.read_text()
+        for target in _LINK.findall(text):
+            if target.startswith(_EXTERNAL) or target.startswith("#"):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                errors.append(f"{md.relative_to(ROOT)}: broken link {target!r}")
+    return errors
+
+
+def check_backend_coverage() -> list[str]:
+    sys.path.insert(0, str(ROOT / "src"))
+    from repro.engine.backends import BACKENDS
+
+    handbook = (ROOT / "docs" / "scaling.md").read_text()
+    # token match, not substring: 'pjit_independent' must not be satisfied by
+    # an occurrence of 'banked_pjit_independent'
+    return [
+        f"docs/scaling.md: backend {name!r} missing from the handbook"
+        for name in BACKENDS
+        if not re.search(rf"(?<![\w_]){re.escape(name)}(?![\w_])", handbook)
+    ]
+
+
+def main() -> int:
+    errors = check_links() + check_backend_coverage()
+    for e in errors:
+        print(e, file=sys.stderr)
+    if not errors:
+        print(f"docs OK: {len(doc_files())} files, links resolve, "
+              "all backends documented")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
