@@ -7,11 +7,14 @@ overhead instead of multiplying it. Two surfaces:
 
   * ``main()`` (via ``benchmarks.run``): CSV rows, per T in {1, 2, 4}, of
     aggregate edges/s vs T back-to-back single-stream runs.
-  * ``bench_grid()`` / the CLI: the (tenants x backend) grid — streams/s and
-    aggregate edges/s for every execution plan the current devices admit
-    (``single`` always; the ``banked_pjit_*`` tenant-sharded plans when
-    ``--mesh`` fits). ``--json BENCH_streaming.json`` merges the grid into
-    the trajectory record next to the (r, batch, chunk) edges/s grid.
+  * ``bench_grid()`` / the CLI: the (scheme, tenants x backend) grid —
+    streams/s and aggregate edges/s for every execution plan the current
+    devices admit (``single`` always; the ``banked_pjit_*`` tenant-sharded
+    plans when ``--mesh`` fits), per estimator scheme (``--scheme local``
+    adds the per-vertex rows). ``--json BENCH_streaming.json`` merges the
+    grid into the trajectory record next to the (scheme, r, batch, chunk)
+    edges/s grid, keyed by (scheme, tenants, backend) so reruns never
+    clobber other schemes' rows.
 
   PYTHONPATH=src python -m benchmarks.multistream --host-devices 4 \
       --mesh tenants=2,estimators=2 --json BENCH_streaming.json
@@ -43,12 +46,15 @@ def _run(
     backend: str = "single",
     mesh=None,
     tenant_axis: str = "tenants",
+    scheme: str = "global",
+    scheme_params=None,
 ) -> tuple[float, float]:
     """Returns (seconds, aggregate edges/s) for a T-tenant engine pass."""
     eng = TriangleCountEngine(
         EngineConfig(r=r, batch_size=bs, n_tenants=T,
                      seeds=tuple(range(T)), backend=backend,
-                     tenant_axis=tenant_axis),
+                     tenant_axis=tenant_axis, scheme=scheme,
+                     scheme_params=scheme_params),
         mesh=mesh,
     )
     it = list(batches(edges, bs))
@@ -89,11 +95,16 @@ def bench_grid(
     degree: int = 8,
     mesh=None,
     tenant_axis: str = "tenants",
+    scheme: str = "global",
     smoke: bool = False,
 ) -> list[dict]:
-    """The (tenants x backend) grid: streams/s + aggregate edges/s per plan."""
+    """The (scheme, tenants x backend) grid: streams/s + aggregate edges/s
+    per execution plan (the scheme rides along as a row dimension)."""
     if smoke:
         tenants, r, nodes = (1, 2), 2048, 2000
+    scheme_params = (
+        (("n_pools", 8), ("n_vertices", nodes)) if scheme == "local" else None
+    )
     edges = barabasi_albert_stream(nodes, degree, seed=0)
     m = len(edges)
     rows = []
@@ -101,13 +112,20 @@ def bench_grid(
         base = None
         for backend in _available_backends(T, r, bs, mesh, tenant_axis):
             dt, eps = _run(T, r, edges, bs, backend=backend, mesh=mesh,
-                           tenant_axis=tenant_axis)
+                           tenant_axis=tenant_axis, scheme=scheme,
+                           scheme_params=scheme_params)
             row = {
+                "scheme": scheme,
                 "tenants": T,
                 "backend": backend,
                 "r": r,
                 "batch": bs,
                 "edges": m,
+                # per-row run context: merged files hold rows from several
+                # runs, so the section-level metadata only describes the
+                # latest one — each row carries its own
+                "smoke": smoke,
+                "mesh": dict(mesh.shape) if mesh is not None else None,
                 "seconds": round(dt, 6),
                 "edges_per_s": round(eps, 1),
                 "streams_per_s": round(T / dt, 4),
@@ -117,12 +135,27 @@ def bench_grid(
             row["speedup_vs_single"] = round(eps / base, 2) if base else None
             rows.append(row)
             print(
-                f"# tenants={T} backend={backend}: "
+                f"# scheme={scheme} tenants={T} backend={backend}: "
                 f"{row['streams_per_s']:.2f} streams/s, "
                 f"{eps:.0f} edges/s ({row['speedup_vs_single']}x)",
                 flush=True,
             )
     return rows
+
+
+def row_key(row: dict) -> tuple:
+    """Identity of a multistream-grid row (pre-scheme rows are ``global``).
+
+    r/batch/smoke are part of the identity so a CI smoke run (small r) can
+    never replace the committed full-scale measurements."""
+    return (
+        row.get("scheme", "global"),
+        row["tenants"],
+        row["backend"],
+        row.get("r", 0),
+        row.get("batch", 0),
+        bool(row.get("smoke", False)),
+    )
 
 
 def grid_section(rows: list[dict], smoke: bool, mesh=None) -> dict:
@@ -141,15 +174,21 @@ def grid_section(rows: list[dict], smoke: bool, mesh=None) -> dict:
 def merge_json(path: str, rows: list[dict], smoke: bool, mesh=None) -> None:
     """Put the grid into the trajectory record next to the edges/s grid.
 
-    Only the ``multistream`` section is replaced (with its own device/mesh
-    context) — the (r, batch, chunk) grid and its top-level metadata stay
-    whatever run recorded them."""
+    Only the ``multistream`` section is touched, and its rows merge keyed by
+    (scheme, tenants, backend) — landing one scheme's grid keeps the other
+    schemes' committed rows; the (scheme, r, batch, chunk) grid and its
+    top-level metadata stay whatever run recorded them."""
+    from benchmarks.run import merge_rows
+
     payload = {}
     if os.path.exists(path):
         with open(path) as f:
             payload = json.load(f)
     payload.setdefault("schema", "repro/streaming-throughput/v1")
-    payload["multistream"] = grid_section(rows, smoke, mesh=mesh)
+    old_rows = payload.get("multistream", {}).get("results", [])
+    payload["multistream"] = grid_section(
+        merge_rows(old_rows, rows, row_key), smoke, mesh=mesh
+    )
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
         f.write("\n")
@@ -183,16 +222,20 @@ if __name__ == "__main__":
     ap.add_argument("--mesh", default="",
                     help="device mesh spec, e.g. 'tenants=2,estimators=2'")
     ap.add_argument("--tenant-axis", default="tenants")
+    ap.add_argument("--scheme", default="global",
+                    help="estimator scheme for the grid rows "
+                         "(repro.core.SCHEMES)")
     ap.add_argument("--host-devices", type=int, default=0,
                     help="force N CPU host devices for mesh testing")
     args = ap.parse_args()
-    if args.json or args.mesh or args.smoke:
+    if args.json or args.mesh or args.smoke or args.scheme != "global":
         from repro.launch.mesh import make_stream_mesh
 
         mesh = make_stream_mesh(args.mesh)
         grid = bench_grid(
             mesh=mesh,
             tenant_axis=args.tenant_axis,
+            scheme=args.scheme,
             smoke=args.smoke,
         )
         if args.json:

@@ -8,19 +8,44 @@ on a single CPU core; the dry-run + roofline (EXPERIMENTS.md) carry the
 at-scale numbers.
 
 ``--json PATH`` runs the streaming grids instead — edges/s per
-(r, batch, chunk) configuration (chunk=1 being the per-batch baseline) plus
-the engine-bank (tenants x backend) streams/s grid — and writes the
-machine-readable trajectory record CI uploads as an artifact; ``--smoke``
-shrinks both to CI scale. ``python -m benchmarks.multistream --mesh ...``
-re-merges the bank grid with tenant-sharded plans included.
+(scheme, r, batch, chunk) configuration (chunk=1 being the per-batch
+baseline) plus the engine-bank (scheme, tenants x backend) streams/s grid —
+and **merges** into an existing record keyed by those row coordinates, so a
+rerun of one scheme's grid never clobbers another scheme's committed rows;
+``--smoke`` shrinks both grids to CI scale.
+``python -m benchmarks.multistream --mesh ...`` re-merges the bank grid with
+tenant-sharded plans included.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import platform
 import sys
 import time
+
+
+def _row_key(row: dict) -> tuple:
+    """Identity of a throughput-grid row: rows missing the scheme field (the
+    pre-scheme-layer format) are ``global``. ``smoke`` participates so a CI
+    smoke run never replaces committed full-scale rows that happen to share
+    a configuration."""
+    return (
+        row.get("scheme", "global"),
+        row["r"],
+        row["batch"],
+        row["chunk"],
+        bool(row.get("smoke", False)),
+    )
+
+
+def merge_rows(old: list, new: list, key) -> list:
+    """New rows replace old rows with the same key; everything else stays."""
+    merged = {key(r): r for r in old}
+    for r in new:
+        merged[key(r)] = r
+    return [merged[k] for k in sorted(merged, key=str)]
 
 
 def write_json(path: str, smoke: bool) -> None:
@@ -28,7 +53,12 @@ def write_json(path: str, smoke: bool) -> None:
 
     from benchmarks import multistream, throughput
 
+    old: dict = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            old = json.load(f)
     results = throughput.bench_grid(smoke=smoke)
+    ms_rows = multistream.bench_grid(smoke=smoke)
     payload = {
         "schema": "repro/streaming-throughput/v1",
         "smoke": smoke,
@@ -36,12 +66,20 @@ def write_json(path: str, smoke: bool) -> None:
         "device_count": jax.device_count(),
         "python": platform.python_version(),
         "jax": jax.__version__,
-        "results": results,
-        # the engine-bank grid (tenants x backend -> streams/s); sharded-plan
-        # rows appear when the run has a mesh (python -m benchmarks.multistream
-        # --host-devices N --mesh ... merges them into the same file)
+        # merge keyed by (scheme, r, batch, chunk): landing the `local` grid
+        # must not clobber the committed `global` rows (and vice versa)
+        "results": merge_rows(old.get("results", []), results, _row_key),
+        # the engine-bank grid (scheme, tenants x backend -> streams/s);
+        # sharded-plan rows appear when the run has a mesh (python -m
+        # benchmarks.multistream --host-devices N --mesh ... merges them
+        # into the same file)
         "multistream": multistream.grid_section(
-            multistream.bench_grid(smoke=smoke), smoke
+            merge_rows(
+                old.get("multistream", {}).get("results", []),
+                ms_rows,
+                multistream.row_key,
+            ),
+            smoke,
         ),
     }
     with open(path, "w") as f:
@@ -55,8 +93,8 @@ def write_json(path: str, smoke: bool) -> None:
     if best:
         print(
             f"# wrote {path}; best chunked speedup "
-            f"{best['speedup_vs_per_batch']}x at r={best['r']} "
-            f"batch={best['batch']} chunk={best['chunk']}",
+            f"{best['speedup_vs_per_batch']}x at scheme={best['scheme']} "
+            f"r={best['r']} batch={best['batch']} chunk={best['chunk']}",
             file=sys.stderr,
         )
 
@@ -94,13 +132,12 @@ def main() -> None:
         "multistream": multistream.main,  # engine multi-tenant bank
     }
     print("name,us_per_call,derived")
-    all_rows = []
     for name, fn in benches.items():
         if only and name not in only:
             continue
         t0 = time.time()
         try:
-            all_rows += fn()
+            fn()
         except Exception as e:  # pragma: no cover
             print(f"{name},0,ERROR={type(e).__name__}:{e}", file=sys.stderr)
             raise

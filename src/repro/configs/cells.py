@@ -14,7 +14,7 @@ from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.train import steps as steps_mod
 from repro.train.optimizer import get_optimizer

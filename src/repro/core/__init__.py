@@ -7,7 +7,22 @@ from repro.core.bulk import (
     bulk_update_chunk,
     bulk_update_chunk_jit,
 )
-from repro.core.estimate import coarse_estimates, estimate, estimate_jit
+from repro.core.estimate import (
+    coarse_estimates,
+    effective_groups,
+    estimate,
+    estimate_jit,
+)
+from repro.core.schemes import (
+    GLOBAL,
+    EstimatorScheme,
+    GlobalScheme,
+    LocalScheme,
+    NaiveScheme,
+    SCHEMES,
+    register_scheme,
+    resolve_scheme,
+)
 
 __all__ = [
     "EstimatorState",
@@ -19,6 +34,15 @@ __all__ = [
     "bulk_update_chunk",
     "bulk_update_chunk_jit",
     "coarse_estimates",
+    "effective_groups",
     "estimate",
     "estimate_jit",
+    "GLOBAL",
+    "EstimatorScheme",
+    "GlobalScheme",
+    "LocalScheme",
+    "NaiveScheme",
+    "SCHEMES",
+    "register_scheme",
+    "resolve_scheme",
 ]

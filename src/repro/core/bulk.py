@@ -2,7 +2,9 @@
 estimators while maintaining the neighborhood sampling invariant (NBSI).
 
 One jit-compiled pure function: (state, W, n_valid, key) -> state'. The three
-steps map 1:1 onto the paper:
+steps map 1:1 onto the paper, and each stage is a public, reusable piece
+(``step1_level1`` / ``rank_queries`` / ``step2_level2`` / ``step3_closing``)
+that ``repro.core.schemes`` composes into pluggable estimator schemes:
 
   Step 1  level-1 reservoir over E ∪ W            (map + extract/combine)
   Step 2  rankAll(W) + multisearch for ld/rd, chi+, and the (src, rank)
@@ -37,7 +39,7 @@ from repro.primitives.search import multisearch_bounds
 from repro.primitives.sort import pack2
 
 
-def _step1_level1(state: EstimatorState, W, n_valid, key):
+def step1_level1(state: EstimatorState, W, n_valid, key):
     """Reservoir-sample level-1 edges over E ∪ W (paper Section 4.2).
 
     Draw t ~ U[0, m + |W|); t >= m selects replacement edge W[t - m]. For batch
@@ -61,7 +63,7 @@ def _step1_level1(state: EstimatorState, W, n_valid, key):
     return f1, chi, f2, has_f3, f1_bpos
 
 
-def _rank_queries(R: RankStructure, u, v, f1_bpos):
+def rank_queries(R: RankStructure, u, v, f1_bpos):
     """rank(endpoint -> other) for both f1 endpoints (paper Observation 4.4),
     fused into ONE multisearch over ``R.key_desc``.
 
@@ -101,12 +103,12 @@ def _rank_queries(R: RankStructure, u, v, f1_bpos):
     return jnp.where(miss_u, 0, w_u), jnp.where(miss_v, 0, w_v)
 
 
-def _step2_level2(f1, chi_minus, f2, has_f3, f1_bpos, R: RankStructure, key):
+def step2_level2(f1, chi_minus, f2, has_f3, f1_bpos, R: RankStructure, key):
     """Update level-2 edges and chi (paper Section 4.3)."""
     u, v = f1[:, 0], f1[:, 1]
     have_f1 = u >= 0
 
-    ld, rd = _rank_queries(R, u, v, f1_bpos)
+    ld, rd = rank_queries(R, u, v, f1_bpos)
     ld = jnp.where(have_f1, ld, 0)
     rd = jnp.where(have_f1, rd, 0)
     chi_plus = ld + rd
@@ -142,7 +144,7 @@ def _step2_level2(f1, chi_minus, f2, has_f3, f1_bpos, R: RankStructure, key):
     return f2_new, chi_new, has_f3, f2_bpos
 
 
-def _step3_closing(f1, f2, has_f3, f2_bpos, R: RankStructure):
+def step3_closing(f1, f2, has_f3, f2_bpos, R: RankStructure):
     """Detect closing edges in W (paper Section 4.4).
 
     The closing edge of the wedge (f1, f2) joins the two non-shared endpoints.
@@ -184,12 +186,12 @@ def bulk_update_all(
     n_valid = jnp.asarray(n_valid, dtype=jnp.int32)
     k1, k2 = jax.random.split(key)
 
-    f1, chi_m, f2, has_f3, f1_bpos = _step1_level1(state, W, n_valid, k1)
+    f1, chi_m, f2, has_f3, f1_bpos = step1_level1(state, W, n_valid, k1)
     R = rank_all(W, n_valid)
-    f2, chi, has_f3, f2_bpos = _step2_level2(
+    f2, chi, has_f3, f2_bpos = step2_level2(
         f1, chi_m, f2, has_f3, f1_bpos, R, k2
     )
-    has_f3 = _step3_closing(f1, f2, has_f3, f2_bpos, R)
+    has_f3 = step3_closing(f1, f2, has_f3, f2_bpos, R)
 
     return EstimatorState(
         f1=f1,

@@ -1,13 +1,21 @@
 """Coordinated bulk-parallel update on a TPU mesh (DESIGN.md Section 5).
 
+Every builder here is **scheme-generic**: it takes an
+``repro.core.schemes.EstimatorScheme`` and derives the shardings for the
+scheme's state pytree from its per-leaf axis roles
+(``scheme_state_specs`` — roles ``estimator`` / ``pair`` / ``replicated``),
+instead of hand-constructing ``EstimatorState``-of-``NamedSharding``s. The
+``w_mode`` argument (formerly confusingly also called "scheme") picks how the
+batch W is distributed; the *estimator scheme* picks what is computed.
+
 The paper's distinction between "independent bulk parallel" (every processor
 re-does the batch work; total work O(p * s log s)) and "coordinated" (shared
 structure built once; O(s log s)) lifts from cache lines to ICI links:
 
-* ``make_pjit_update(mesh, scheme)`` — one jit program over the whole mesh.
-    - scheme="independent":     W replicated; each device sorts the full batch
+* ``make_pjit_update(mesh, w_mode)`` — one jit program over the whole mesh.
+    - w_mode="independent":     W replicated; each device sorts the full batch
       for its estimator shard. Zero collectives, p-times duplicated sort FLOPs.
-    - scheme="coordinated_xla": W sharded; XLA's SPMD partitioner inserts the
+    - w_mode="coordinated_xla": W sharded; XLA's SPMD partitioner inserts the
       collectives for the global sort/searches automatically.
 
 * ``make_coordinated_update(mesh)`` — the explicit shard_map scheme:
@@ -28,22 +36,22 @@ the update returns an ``overflow`` diagnostic that production monitors (and
 bumps the factor between batches — state is unaffected by a re-run). Tests
 assert zero overflow at the sizes exercised.
 
-* ``make_banked_pjit_update(mesh, scheme, tenant_axis)`` — the *tenant-sharded
-  bank*: ``vmap(bulk_update_all)`` over the leading tenant axis inside one jit
-  over the whole mesh. The bank's tenant dimension shards over the mesh axis
-  named ``tenant_axis`` and the estimator dimension shards over every remaining
-  mesh axis, giving the 2-D ``(tenants, estimators)`` layout when both exist.
-  Per-tenant programs are embarrassingly parallel along the tenant axis (zero
-  cross-tenant collectives by construction); within a tenant the scheme choice
-  mirrors the single-tenant plans: "independent" replicates W across the
-  estimator axes, "coordinated_xla" ships W sharded and gathers it per tenant
-  group before the structure build (see make_banked_pjit_update for why the
-  build itself stays replicated). ``make_banked_pjit_chunk_update`` is the
-  K-batch fused variant (``bulk_update_chunk`` under the same shardings).
+* ``make_banked_pjit_update(mesh, w_mode, tenant_axis)`` — the *tenant-sharded
+  bank*: ``vmap(scheme.bulk_update)`` over the leading tenant axis inside one
+  jit over the whole mesh. The bank's tenant dimension shards over the mesh
+  axis named ``tenant_axis`` and the estimator dimension shards over every
+  remaining mesh axis, giving the 2-D ``(tenants, estimators)`` layout when
+  both exist. Per-tenant programs are embarrassingly parallel along the tenant
+  axis (zero cross-tenant collectives by construction); within a tenant the
+  ``w_mode`` choice mirrors the single-tenant plans: "independent" replicates
+  W across the estimator axes, "coordinated_xla" ships W sharded and gathers
+  it per tenant group before the structure build (see make_banked_pjit_update
+  for why the build itself stays replicated).
+  ``make_banked_pjit_chunk_update`` is the K-batch fused variant
+  (``scheme.chunk_update`` under the same shardings).
 """
 from __future__ import annotations
 
-import functools
 import inspect
 from typing import NamedTuple
 
@@ -51,7 +59,14 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.bulk import bulk_update_all, bulk_update_chunk
+from repro.core.schemes import (
+    GLOBAL,
+    ROLE_ESTIMATOR,
+    ROLE_PAIR,
+    ROLE_REPLICATED,
+    EstimatorScheme,
+    resolve_scheme,
+)
 from repro.core.state import EstimatorState
 from repro.primitives.segscan import segment_starts, segmented_iota
 from repro.primitives.search import exact_multisearch
@@ -82,18 +97,69 @@ def _shard_map(f, mesh, *, in_specs, out_specs):
 
 
 # --------------------------------------------------------------------------
+# axis-role -> sharding derivation (works for ANY scheme's state pytree)
+# --------------------------------------------------------------------------
+def scheme_state_specs(
+    scheme: EstimatorScheme, estimator_axes, *, tenant_axis: str | None = None
+):
+    """PartitionSpec pytree for ``scheme``'s state, derived from its axis
+    roles: ``estimator``/``pair`` leaves shard their leading axis over
+    ``estimator_axes`` (trailing axes replicated), ``replicated`` leaves
+    replicate everywhere. With ``tenant_axis`` every leaf gains a leading
+    tenant dimension sharded over that mesh axis (the banked layout). This is
+    the single derivation every execution plan uses — a new scheme never
+    hand-builds shardings."""
+    # accept a registry name too; in particular a pre-rename caller passing
+    # scheme="independent" (the old spelling of w_mode) gets the registry's
+    # clear "unknown scheme" error instead of an AttributeError deep inside
+    scheme = resolve_scheme(scheme)
+    e = tuple(estimator_axes) if estimator_axes else None
+    prefix = (tenant_axis,) if tenant_axis else ()
+    shapes = jax.eval_shape(lambda: scheme.init_state(2))  # ndims, no devices
+
+    def leaf(role, shaped):
+        nd = len(shaped.shape)
+        if role == ROLE_REPLICATED:
+            parts = (None,) * nd
+        elif role in (ROLE_ESTIMATOR, ROLE_PAIR):
+            parts = (e,) + (None,) * (nd - 1)
+        else:
+            raise ValueError(
+                f"scheme {scheme.name!r} leaf has unknown axis role {role!r}"
+            )
+        return P(*prefix, *parts)
+
+    return jax.tree.map(leaf, scheme.axis_roles(), shapes)
+
+
+def scheme_state_sharding(
+    mesh,
+    scheme: EstimatorScheme,
+    estimator_axes,
+    *,
+    tenant_axis: str | None = None,
+):
+    """NamedSharding pytree over ``mesh`` for ``scheme``'s state."""
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec),
+        scheme_state_specs(scheme, estimator_axes, tenant_axis=tenant_axis),
+    )
+
+
+# --------------------------------------------------------------------------
 # pjit paths
 # --------------------------------------------------------------------------
-def make_pjit_update(mesh, scheme: str = "coordinated_xla"):
+def make_pjit_update(
+    mesh, w_mode: str = "coordinated_xla", scheme: EstimatorScheme = GLOBAL
+):
     """jit-compiled bulk update with mesh shardings (see module docstring)."""
+    scheme = resolve_scheme(scheme)  # names OK; old scheme=w_mode strings err
     axes = tuple(mesh.axis_names)
-    est = NamedSharding(mesh, P(axes))
-    est2 = NamedSharding(mesh, P(axes, None))
     rep = NamedSharding(mesh, P())
-    w_sh = rep if scheme == "independent" else NamedSharding(mesh, P(axes, None))
-    state_sh = EstimatorState(f1=est2, chi=est, f2=est2, has_f3=est, m_seen=rep)
+    w_sh = rep if w_mode == "independent" else NamedSharding(mesh, P(axes, None))
+    state_sh = scheme_state_sharding(mesh, scheme, axes)
     return jax.jit(
-        bulk_update_all,
+        scheme.bulk_update,
         in_shardings=(state_sh, w_sh, rep, rep),
         out_shardings=state_sh,
         donate_argnums=(0,),
@@ -122,22 +188,21 @@ def split_tenant_axis(mesh, tenant_axis: str = "tenants"):
     return t_size, e_axes, e_size
 
 
-def banked_state_sharding(mesh, tenant_axis: str = "tenants") -> EstimatorState:
+def banked_state_sharding(
+    mesh, tenant_axis: str = "tenants", scheme: EstimatorScheme = GLOBAL
+):
     """NamedSharding pytree for a (n_tenants, r, ...) estimator bank: tenants
-    over ``tenant_axis``, estimators over the remaining axes. The engine uses
-    this to place a freshly initialized or snapshot-restored bank, so restore
-    reshards onto whatever mesh the target engine runs (mesh-portable
-    snapshots)."""
+    over ``tenant_axis``, estimators over the remaining axes — derived from
+    the scheme's axis roles, so any scheme's state lays out the same way. The
+    engine uses this to place a freshly initialized or snapshot-restored
+    bank, so restore reshards onto whatever mesh the target engine runs
+    (mesh-portable snapshots)."""
     _, e_axes, _ = split_tenant_axis(mesh, tenant_axis)
-    t, e = tenant_axis, (e_axes if e_axes else None)
-    est = NamedSharding(mesh, P(t, e))
-    est2 = NamedSharding(mesh, P(t, e, None))
-    t_only = NamedSharding(mesh, P(t))
-    return EstimatorState(f1=est2, chi=est, f2=est2, has_f3=est, m_seen=t_only)
+    return scheme_state_sharding(mesh, scheme, e_axes, tenant_axis=tenant_axis)
 
 
 def banked_batch_w_sharding(
-    mesh, scheme: str = "coordinated_xla", tenant_axis: str = "tenants"
+    mesh, w_mode: str = "coordinated_xla", tenant_axis: str = "tenants"
 ) -> NamedSharding:
     """Input sharding for a (T, s, 2) batch — what ``make_banked_pjit_update``
     expects and what the engine's per-batch ``ingest`` device_puts through
@@ -145,19 +210,22 @@ def banked_batch_w_sharding(
     _, e_axes, _ = split_tenant_axis(mesh, tenant_axis)
     t, e = tenant_axis, (e_axes if e_axes else None)
     return NamedSharding(
-        mesh, P(t, None, None) if scheme == "independent" else P(t, e, None)
+        mesh, P(t, None, None) if w_mode == "independent" else P(t, e, None)
     )
 
 
 def make_banked_pjit_update(
-    mesh, scheme: str = "coordinated_xla", tenant_axis: str = "tenants"
+    mesh,
+    w_mode: str = "coordinated_xla",
+    tenant_axis: str = "tenants",
+    scheme: EstimatorScheme = GLOBAL,
 ):
-    """Tenant-sharded bank update: jit(vmap(bulk_update_all)) over the mesh.
+    """Tenant-sharded bank update: jit(vmap(scheme.bulk_update)) over the mesh.
 
     Signature matches the engine's banked call convention:
     ``f(state_bank, Wb (T,s,2), n_valid (T,), keys (T,2)) -> state_bank``.
     Tenant dim -> ``tenant_axis``; estimator dim -> the remaining axes.
-    scheme="independent" replicates W across the estimator axes; with
+    w_mode="independent" replicates W across the estimator axes; with
     "coordinated_xla" W *arrives* sharded across them (the host->device
     transfer is distributed) and is all-gathered within each tenant group
     before the batch-structure build. Keeping the structure build replicated
@@ -166,19 +234,20 @@ def make_banked_pjit_update(
     batch dim shard simultaneously — and every device in a tenant group needs
     the full batch structure for its estimator shard's multisearches anyway.
     The estimator-dim work (reservoir draws, Q1/Q2/Q3 query vectors) stays
-    sharded in both schemes. ``make_banked_pjit_chunk_update`` is the K-batch
-    fused variant (``bulk_update_chunk`` under the same shardings).
+    sharded in both modes. ``make_banked_pjit_chunk_update`` is the K-batch
+    fused variant (``scheme.chunk_update`` under the same shardings).
     """
-    state_sh = banked_state_sharding(mesh, tenant_axis)
+    scheme = resolve_scheme(scheme)
+    state_sh = banked_state_sharding(mesh, tenant_axis, scheme)
     t = tenant_axis
-    w_in = banked_batch_w_sharding(mesh, scheme, tenant_axis)
+    w_in = banked_batch_w_sharding(mesh, w_mode, tenant_axis)
     w_gathered = NamedSharding(mesh, P(t, None, None))
     t_only = NamedSharding(mesh, P(t))
     t_rep = NamedSharding(mesh, P(t, None))
 
     def banked(state, Wb, n_valid, keys):
         Wb = jax.lax.with_sharding_constraint(Wb, w_gathered)
-        return jax.vmap(bulk_update_all)(state, Wb, n_valid, keys)
+        return jax.vmap(scheme.bulk_update)(state, Wb, n_valid, keys)
 
     return jax.jit(
         banked,
@@ -189,7 +258,7 @@ def make_banked_pjit_update(
 
 
 def banked_chunk_w_sharding(
-    mesh, scheme: str = "coordinated_xla", tenant_axis: str = "tenants"
+    mesh, w_mode: str = "coordinated_xla", tenant_axis: str = "tenants"
 ) -> NamedSharding:
     """Input sharding for a staged (T, K, s, 2) superbatch — what
     ``make_banked_pjit_chunk_update`` expects and what the engine's
@@ -198,27 +267,31 @@ def banked_chunk_w_sharding(
     t, e = tenant_axis, (e_axes if e_axes else None)
     return NamedSharding(
         mesh,
-        P(t, None, None, None) if scheme == "independent" else P(t, None, e, None),
+        P(t, None, None, None) if w_mode == "independent" else P(t, None, e, None),
     )
 
 
 def make_banked_pjit_chunk_update(
-    mesh, scheme: str = "coordinated_xla", tenant_axis: str = "tenants"
+    mesh,
+    w_mode: str = "coordinated_xla",
+    tenant_axis: str = "tenants",
+    scheme: EstimatorScheme = GLOBAL,
 ):
     """K-batch fused variant of ``make_banked_pjit_update``:
     ``f(state_bank, Wb (T,K,s,2), n_valids (T,K), root_keys (T,2), step0)``.
     Same shardings with a replicated scan axis; the counter-based RNG keeps it
-    bit-identical to K sequential banked updates (see bulk_update_chunk)."""
-    state_sh = banked_state_sharding(mesh, tenant_axis)
+    bit-identical to K sequential banked updates (see scheme.chunk_update)."""
+    scheme = resolve_scheme(scheme)
+    state_sh = banked_state_sharding(mesh, tenant_axis, scheme)
     t = tenant_axis
-    w_in = banked_chunk_w_sharding(mesh, scheme, tenant_axis)
+    w_in = banked_chunk_w_sharding(mesh, w_mode, tenant_axis)
     w_gathered = NamedSharding(mesh, P(t, None, None, None))
     t_rep = NamedSharding(mesh, P(t, None))
     rep = NamedSharding(mesh, P())
 
     def banked_chunk(state, Wb, n_valids, keys, step0):
         Wb = jax.lax.with_sharding_constraint(Wb, w_gathered)
-        return jax.vmap(bulk_update_chunk, in_axes=(0, 0, 0, 0, None))(
+        return jax.vmap(scheme.chunk_update, in_axes=(0, 0, 0, 0, None))(
             state, Wb, n_valids, keys, step0
         )
 
@@ -359,14 +432,24 @@ def _route_one_way(payload, row_valid, dest, axes, p, cap):
 
 
 def make_coordinated_update(
-    mesh, r: int, s: int, capacity_factor: float = 2.0
+    mesh, r: int, s: int, capacity_factor: float = 2.0,
+    scheme: EstimatorScheme = GLOBAL,
 ):
     """Explicit coordinated bulk update over ``mesh`` (all axes flattened).
 
     r: total estimators; s: total batch size. Both divisible by device count.
     Returns jit(f)(state, W, n_valid, key) -> (state, overflow_count) with the
-    estimator/W shardings baked in.
+    estimator/W shardings baked in. The routed-multisearch kernel below *is*
+    the paper's bulkUpdateAll, so only schemes that share that update
+    (``scheme.update_kind == "nbsi"``: global, local) can run it; their state
+    specs are still derived from the axis roles like every other plan.
     """
+    scheme = resolve_scheme(scheme)
+    if scheme.update_kind != "nbsi":
+        raise ValueError(
+            f"scheme {scheme.name!r} (update_kind={scheme.update_kind!r}) has "
+            "no coordinated shard_map kernel; use a pjit or single plan"
+        )
     axes = tuple(mesh.axis_names)
     p = mesh.size
     assert r % p == 0 and s % p == 0, (r, s, p)
@@ -523,10 +606,8 @@ def make_coordinated_update(
         overflow = ovf_build + ovf1 + ovf2 + ovf3 + ovf4
         return new_state, jax.lax.psum(overflow, axes)
 
-    est = P(axes)
-    est2 = P(axes, None)
     rep = P()
-    state_spec = EstimatorState(f1=est2, chi=est, f2=est2, has_f3=est, m_seen=rep)
+    state_spec = scheme_state_specs(scheme, axes)
     shmapped = _shard_map(
         update,
         mesh,

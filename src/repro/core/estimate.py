@@ -2,6 +2,21 @@
 
 Per estimator: X = chi * m if the closing edge has been seen else 0; E[X] = tau.
 The sharp estimate is a median-of-means over g groups of r/g estimators each.
+
+Group-count rule: ``groups`` is a *request*, honored exactly when it divides
+``r`` and otherwise rounded down to ``effective_groups(r, groups)`` — the
+largest divisor of ``r`` that is <= ``groups``; an *unsatisfiable* request
+(``groups > r``) degrades to ONE group, i.e. the plain unbiased mean (the
+same fallback the pre-rule code used there). Every estimator always
+participates; nothing is trimmed. (The pre-PR-4 behavior silently dropped
+the trailing ``r % groups`` estimators.)
+
+Deliberate carve-out: asking for exactly ``groups == r`` IS honored and
+yields a median over size-1 groups, which on sparse coarse estimates (most
+X are 0) biases toward zero. That is what the caller literally requested —
+the rule only *rounds down* infeasible requests, it never second-guesses
+feasible ones. Callers who want robustness on sparse data should request
+``groups << r`` (the Theorem 3.4 regime) or use the mean (groups=1).
 """
 from __future__ import annotations
 
@@ -11,6 +26,27 @@ import jax.numpy as jnp
 from repro.core.state import EstimatorState
 
 
+def effective_groups(r: int, groups: int) -> int:
+    """Largest divisor of ``r`` that is <= ``groups`` (and >= 1); an
+    unsatisfiable request (``groups > r``) collapses to 1, the unbiased mean
+    (parity with the pre-rule fallback). ``groups == r`` is feasible and
+    honored — see the module docstring's carve-out note.
+
+    The group count actually used by ``estimate``: 9 groups over r=512
+    estimators become 8 groups of 64, never 9 groups of 56 plus 8 silently
+    dropped estimators. ``EngineConfig`` validates ``groups >= 1`` up front so
+    a bank can never be configured into the degenerate trim.
+    """
+    if r < 1:
+        raise ValueError(f"need at least one estimator, got r={r}")
+    if groups > r:
+        return 1
+    g = max(1, int(groups))
+    while r % g:
+        g -= 1
+    return g
+
+
 def coarse_estimates(state: EstimatorState) -> jax.Array:
     """(r,) float64 unbiased coarse estimates (Lemma 3.2)."""
     x = state.chi.astype(jnp.float64) * state.m_seen.astype(jnp.float64)
@@ -18,14 +54,15 @@ def coarse_estimates(state: EstimatorState) -> jax.Array:
 
 
 def estimate(state: EstimatorState, groups: int = 9) -> jax.Array:
-    """Median-of-means aggregate (Theorem 3.4). groups must divide r (or we trim)."""
+    """Median-of-means aggregate (Theorem 3.4) over all r estimators.
+
+    ``groups`` that does not divide ``r`` is rounded down to
+    ``effective_groups(r, groups)`` — see the module docstring for the rule.
+    """
     x = coarse_estimates(state)
     r = x.shape[0]
-    per = r // groups
-    if per == 0:
-        return jnp.mean(x)
-    x = x[: per * groups].reshape(groups, per)
-    return jnp.median(jnp.mean(x, axis=1))
+    g = effective_groups(r, groups)
+    return jnp.median(jnp.mean(x.reshape(g, r // g), axis=1))
 
 
 estimate_jit = jax.jit(estimate, static_argnums=(1,))

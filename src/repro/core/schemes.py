@@ -1,21 +1,297 @@
-"""The two strawman parallelization schemes from paper Section 1, as baselines.
+"""Pluggable estimator schemes: one streaming engine, many triangle queries.
 
-* naive_parallel: r independent estimators, each processing every edge —
-  O(r*m) work. Implemented as a lax.scan over edges of a vmapped single-edge
-  update; only usable at toy sizes (that is the paper's point).
-* independent_bulk: every device runs the full bulk algorithm on the whole
-  batch for its estimator shard — same code as bulk_update_all; the p-times
-  duplicated sort work appears at the *sharding* level (W replicated), so the
-  scheme lives in repro.core.distributed / launch.dryrun, not here.
+The paper's estimator answers exactly one query — the *global* triangle count
+tau. Everything above it (distributed plans, the engine, snapshots, CLIs,
+benchmarks) used to reference the five ``EstimatorState`` fields by name, so
+adding a sibling query meant forking the stack. This module is the seam that
+makes a scheme a one-file addition instead:
+
+``EstimatorScheme``
+    ``init_state(r)`` / ``bulk_update(state, W, n_valid, key)`` /
+    ``chunk_update(state, Ws, n_valids, key, step0)`` /
+    ``estimate(state, groups)`` plus a per-leaf **axis-role spec**
+    (``axis_roles()``) naming how each state leaf relates to the estimator
+    dimension. ``repro.core.distributed`` and ``repro.engine.backends``
+    *derive* mesh shardings for any scheme's state pytree from those roles
+    instead of hand-constructing ``EstimatorState``-of-``NamedSharding``s.
+
+Axis roles (the vocabulary the sharding derivation understands):
+  * ``"estimator"``  — leading axis is the r-estimator axis (e.g. ``chi``);
+    shards over the mesh's estimator axes, trailing axes replicated.
+  * ``"pair"``       — the (r, 2) edge layout (``f1``/``f2``): estimator
+    axis leading, the 2-endpoint axis replicated. Derives the same spec as
+    ``"estimator"`` but names the layout so schemes stay self-describing.
+  * ``"replicated"`` — no estimator axis anywhere (e.g. the ``m_seen``
+    stream-length scalar); replicated across estimator shards. Banked plans
+    still prepend the tenant axis to every role.
+
+Registered schemes:
+  * ``global`` — the paper's query: one median-of-means scalar per tenant
+    (``repro.core.bulk`` + ``repro.core.estimate``, unchanged semantics).
+  * ``naive``  — the Section 1 strawman update (edge-at-a-time over all r
+    estimators, O(r*s) work per batch) behind the same interface; kept as a
+    registered scheme so the property tests and benchmarks can drive the
+    baseline through the identical stack. No coordinated shard_map kernel
+    (``update_kind = "naive"``).
+  * ``local``  — per-vertex triangle counts via vertex-partitioned estimator
+    pools (REPT, arXiv:1811.09136; CoCoS, arXiv:1802.04249). The r
+    estimators split into ``n_pools`` contiguous pools; vertices hash to an
+    owning pool; pool p runs the paper's NBSI update and *attributes* its
+    closed triangles only to the vertices it owns. The ingest update is
+    byte-for-byte ``bulk_update_all`` — the sampled triangle's three
+    vertices (f1 ∪ f2) are already in the state, so per-vertex attribution
+    is purely an estimate-time scatter. Restricting the *update* to a
+    partition's substream would be wrong: a triangle containing an owned
+    vertex v can open with the one edge NOT incident to v's partition, so
+    every pool must watch the full stream (REPT keeps a shared edge sample
+    for the same reason and partitions only the counters). Because state
+    and update coincide with ``global``, the local scheme runs on all six
+    execution plans, chunked ingest, and cross-mesh snapshots with zero
+    backend changes.
+
+Unbiasedness of the local estimate: Lemma 3.2 gives each triangle T a
+contribution of exactly 1 to E[X] per estimator, via the unique sampling path
+(f1, f2) = (first, second) edge of T. Hence for any vertex v,
+``E[X * 1{v in sampled triangle}] = L_v``, the local count. Pool p's
+per-vertex mean over its ``r / n_pools`` estimators is therefore unbiased for
+every vertex it owns (the REPT aggregation). Theorem 3.4's median-of-means
+sharpening is deliberately NOT applied per vertex: the per-vertex indicator
+``X * 1{v in tri}`` is sparse (most estimators contribute 0 to any given
+vertex), so the median of group means is 0 unless more than half the groups
+hit v — a severe small-count downward bias the global scalar never suffers.
+``sum_v L_v = 3 * tau`` is the cheap cross-check the CLIs print.
 """
 from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.state import EstimatorState
+from repro.core.bulk import bulk_update_all, bulk_update_chunk
+from repro.core.estimate import coarse_estimates, estimate
+from repro.core.state import EstimatorState, init_state
+
+# ---------------------------------------------------------------------------
+# axis roles
+# ---------------------------------------------------------------------------
+ROLE_ESTIMATOR = "estimator"
+ROLE_PAIR = "pair"
+ROLE_REPLICATED = "replicated"
+ROLES = (ROLE_ESTIMATOR, ROLE_PAIR, ROLE_REPLICATED)
+
+# the NBSI tuple's roles — every scheme whose state is EstimatorState shares it
+NBSI_STATE_ROLES = EstimatorState(
+    f1=ROLE_PAIR,
+    chi=ROLE_ESTIMATOR,
+    f2=ROLE_PAIR,
+    has_f3=ROLE_ESTIMATOR,
+    m_seen=ROLE_REPLICATED,
+)
+
+_HASH_MULT = jnp.uint32(2654435761)
 
 
+def vertex_pool(v: jax.Array, n_pools: int) -> jax.Array:
+    """Owning pool of vertex ``v`` in [0, n_pools): multiplicative hash (the
+    same family the shard_map plan uses for vertex ownership)."""
+    return ((v.astype(jnp.uint32) * _HASH_MULT) % jnp.uint32(n_pools)).astype(
+        jnp.int32
+    )
+
+
+# ---------------------------------------------------------------------------
+# the scheme interface
+# ---------------------------------------------------------------------------
+class EstimatorScheme:
+    """Base scheme: the paper's NBSI state and bulk update, query unspecified.
+
+    Subclasses override ``estimate`` (and, for non-NBSI updates, the state /
+    update methods plus ``axis_roles``). ``update_kind`` declares whether the
+    update is the paper's bulkUpdateAll (``"nbsi"``) — required for the
+    explicit-collective ``shardmap`` plan, whose routed-multisearch kernel
+    hardcodes that math — or something else.
+    """
+
+    name: str = "?"
+    update_kind: str = "nbsi"
+
+    # -- state / update (NBSI defaults; override for non-NBSI schemes) ------
+    def init_state(self, r: int) -> EstimatorState:
+        return init_state(r)
+
+    def bulk_update(self, state, W, n_valid, key):
+        return bulk_update_all(state, W, n_valid, key)
+
+    def chunk_update(self, state, Ws, n_valids, key, step0=0):
+        """K stacked batches under one dispatch, same fold_in(key, step0+i)
+        counter contract as ``bulk_update_chunk`` (bit-equal to K sequential
+        ``bulk_update`` calls for any scheme that uses this default)."""
+        steps = jnp.asarray(step0, jnp.int64) + jnp.arange(
+            Ws.shape[0], dtype=jnp.int64
+        )
+
+        def step(st, xs):
+            W, nv, i = xs
+            return self.bulk_update(st, W, nv, jax.random.fold_in(key, i)), None
+
+        state, _ = jax.lax.scan(step, state, (Ws, n_valids, steps))
+        return state
+
+    def axis_roles(self):
+        """Pytree with the state's structure, each leaf a role string."""
+        return NBSI_STATE_ROLES
+
+    # -- query --------------------------------------------------------------
+    def estimate(self, state, groups: int = 9) -> jax.Array:
+        raise NotImplementedError
+
+    def validate(self, r: int) -> None:
+        """Raise ValueError if this scheme cannot run with ``r`` estimators.
+
+        Called by ``EngineConfig``/engine construction so a bad combination
+        fails at build time, never mid-stream."""
+        if r < 1:
+            raise ValueError(f"scheme {self.name!r} needs r >= 1, got {r}")
+
+
+class GlobalScheme(EstimatorScheme):
+    """The paper's query: one global triangle count per tenant (Thm 3.4)."""
+
+    name = "global"
+
+    def chunk_update(self, state, Ws, n_valids, key, step0=0):
+        return bulk_update_chunk(state, Ws, n_valids, key, step0)
+
+    def estimate(self, state, groups: int = 9) -> jax.Array:
+        return estimate(state, groups)
+
+
+class NaiveScheme(GlobalScheme):
+    """Section 1's strawman: the same global query over the edge-at-a-time
+    parallel update (O(r*s) work per batch). Registered so baselines drive
+    the identical engine/benchmark stack; no shard_map kernel exists for it.
+    """
+
+    name = "naive"
+    update_kind = "naive"
+
+    def bulk_update(self, state, W, n_valid, key):
+        return naive_parallel_update(state, W, n_valid, key)
+
+    def chunk_update(self, state, Ws, n_valids, key, step0=0):
+        return EstimatorScheme.chunk_update(self, state, Ws, n_valids, key, step0)
+
+
+@dataclass(frozen=True)
+class LocalScheme(EstimatorScheme):
+    """Per-vertex triangle counts via vertex-partitioned estimator pools.
+
+    ``estimate(state, groups)`` returns ``(n_vertices,)`` float64 — vertex
+    v's estimated incident-triangle count L_v. The r estimators form
+    ``n_pools`` contiguous pools; vertex v is owned by pool
+    ``vertex_pool(v, n_pools)`` and only that pool's estimators attribute to
+    it, so on a sharded bank the attribution scatter stays pool-local (the
+    CoCoS layout). Within a pool the per-vertex aggregate is the plain mean
+    (unbiased, Lemma 3.2); ``groups`` is accepted for interface uniformity
+    but unused — per-vertex median-of-means biases sparse counts to zero
+    (see the module docstring). State and update are exactly the global
+    scheme's, which is what buys every backend for free.
+    """
+
+    n_vertices: int
+    n_pools: int = 1
+    name = "local"
+
+    def validate(self, r: int) -> None:
+        super().validate(r)
+        if self.n_vertices < 1:
+            raise ValueError(
+                f"local scheme needs n_vertices >= 1, got {self.n_vertices}"
+            )
+        if self.n_pools < 1 or r % self.n_pools:
+            raise ValueError(
+                f"local scheme needs n_pools >= 1 dividing r={r}, got "
+                f"n_pools={self.n_pools}"
+            )
+
+    def estimate(self, state, groups: int = 9) -> jax.Array:
+        del groups  # see class docstring: pool mean, not median-of-means
+        r = state.chi.shape[0]
+        self.validate(r)
+        r_pool = r // self.n_pools
+
+        x = coarse_estimates(state)  # (r,) f64, E[X] = tau per estimator
+        u, v = state.f1[:, 0], state.f1[:, 1]
+        a, b = state.f2[:, 0], state.f2[:, 1]
+        # the sampled triangle's third vertex: f2's endpoint not shared with f1
+        o2 = jnp.where((a == u) | (a == v), b, a)
+        tri = jnp.stack([u, v, o2])  # (3, r) — the triangle's vertex ids
+
+        pool = jnp.arange(r, dtype=jnp.int32) // r_pool
+        closed = state.has_f3 & (u >= 0) & (a >= 0)
+        take = (
+            closed[None, :]
+            & (tri >= 0)
+            & (tri < self.n_vertices)
+            & (vertex_pool(tri, self.n_pools) == pool[None, :])
+        )
+        vert = jnp.where(take, tri, self.n_vertices)  # out of bounds -> drop
+        sums = (
+            jnp.zeros((self.n_vertices,), jnp.float64)
+            .at[vert]
+            .add(jnp.where(take, x[None, :], 0.0), mode="drop")
+        )
+        # vertex v's pool contributes exactly r_pool estimators (pools are
+        # contiguous index blocks), so the unbiased estimate is sum / r_pool
+        return sums / r_pool
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+SCHEMES: Dict[str, Callable[..., EstimatorScheme]] = {}
+
+
+def register_scheme(name: str, factory: Callable[..., EstimatorScheme]) -> None:
+    """Add a scheme factory (``factory(**params) -> EstimatorScheme``).
+
+    ``tools/check_docs.py`` requires every registered name to appear in the
+    docs (scaling handbook + paper map), so registration is a doc contract.
+    """
+    SCHEMES[name] = factory
+
+
+register_scheme("global", GlobalScheme)
+register_scheme("naive", NaiveScheme)
+register_scheme("local", LocalScheme)
+
+GLOBAL = GlobalScheme()  # the default instance most call sites share
+
+
+def resolve_scheme(
+    name, params: Optional[dict | tuple] = None
+) -> EstimatorScheme:
+    """Scheme instance from a registry name + params (or pass one through)."""
+    if isinstance(name, EstimatorScheme):
+        return name
+    if name not in SCHEMES:
+        raise ValueError(
+            f"unknown scheme {name!r}; registered: {sorted(SCHEMES)}"
+        )
+    try:
+        return SCHEMES[name](**dict(params or {}))
+    except TypeError as e:
+        raise ValueError(
+            f"bad params for scheme {name!r}: {e} "
+            "(e.g. the local scheme needs n_vertices)"
+        ) from e
+
+
+# ---------------------------------------------------------------------------
+# the Section 1 naive-parallel update (the O(r*m) strawman baseline)
+# ---------------------------------------------------------------------------
 def _edge_update(state: EstimatorState, inputs):
     """One stream arrival against all estimators (vectorized naive scheme)."""
     (edge, key) = inputs

@@ -3,6 +3,8 @@
 * ``SequentialNS``: edge-at-a-time neighborhood sampling (the PTTW13 baseline
   the paper compares against in Table 3) — plain numpy, one estimator vector.
 * ``count_triangles``: exact brute-force tau for small graphs.
+* ``local_triangle_counts``: exact per-vertex counts (the ``local`` scheme's
+  ground truth).
 * ``gamma_after``: |Gamma_S(e)| ground truth used by the NBSI invariant tests.
 """
 from __future__ import annotations
@@ -21,6 +23,27 @@ def count_triangles(edges: np.ndarray) -> int:
         u, v = int(u), int(v)
         count += len(adj[u] & adj[v])
     return count // 3
+
+
+def local_triangle_counts(edges: np.ndarray, n_vertices: int) -> np.ndarray:
+    """Exact per-vertex incident-triangle counts L_v (the local scheme's
+    ground truth). Vertices >= ``n_vertices`` are simply not reported —
+    matching the scheme's per-vertex drop semantics — so
+    ``sum(L) == 3 * count_triangles(edges)`` holds exactly when the bound
+    covers every vertex."""
+    adj: dict[int, set[int]] = {}
+    for u, v in edges:
+        adj.setdefault(int(u), set()).add(int(v))
+        adj.setdefault(int(v), set()).add(int(u))
+    counts = np.zeros(n_vertices, dtype=np.int64)
+    for u, v in edges:
+        u, v = int(u), int(v)
+        for w in adj[u] & adj[v]:
+            # triangle {u, v, w} is met once per edge: each vertex nets +3
+            for x in (u, v, w):
+                if x < n_vertices:
+                    counts[x] += 1
+    return counts // 3
 
 
 def gamma_after(edges: np.ndarray, i: int) -> int:

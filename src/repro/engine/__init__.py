@@ -6,7 +6,12 @@ incrementally, answers rolling estimates, and snapshots/restores itself —
 on one device or sharded over a mesh ``tenants`` axis (execution-plan
 handbook: docs/scaling.md).
 """
-from repro.engine.backends import BACKENDS, BackendPlan, select_backend
+from repro.engine.backends import (
+    BACKENDS,
+    BackendPlan,
+    config_scheme,
+    select_backend,
+)
 from repro.engine.engine import (
     EngineConfig,
     EngineDiagnostics,
@@ -19,6 +24,7 @@ from repro.engine.service import StreamReport, run_stream
 __all__ = [
     "BACKENDS",
     "BackendPlan",
+    "config_scheme",
     "EngineConfig",
     "EngineDiagnostics",
     "SnapshotMismatch",

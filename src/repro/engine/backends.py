@@ -35,6 +35,15 @@ mesh -> single. Single tenant: no mesh (or a 1-device mesh) -> single; a real
 mesh with divisible shapes -> shardmap (the paper's recommended coordinated
 scheme); otherwise pjit_coordinated as the safe fallback.
 docs/scaling.md is the full decision handbook.
+
+Every plan is **scheme-generic**: the builders resolve
+``EngineConfig.scheme`` through ``repro.core.schemes`` and jit the scheme's
+own update, with state shardings derived from the scheme's axis roles
+(``repro.core.distributed.scheme_state_sharding``) — no plan references state
+fields by name. The one restriction: ``shardmap``'s routed-multisearch kernel
+hardcodes the paper's NBSI update, so schemes with a different update
+(``update_kind != "nbsi"``, i.e. ``naive``) fall back to ``pjit_coordinated``
+under "auto" and are rejected when named explicitly.
 """
 from __future__ import annotations
 
@@ -43,7 +52,7 @@ from typing import Any, Callable, Optional
 
 import jax
 
-from repro.core.bulk import bulk_update_all, bulk_update_chunk
+from repro.core.schemes import EstimatorScheme, resolve_scheme
 
 BACKENDS = (
     "single",
@@ -83,45 +92,63 @@ def _tenant_axis(config) -> str:
     return getattr(config, "tenant_axis", "tenants")
 
 
+def config_scheme(config) -> EstimatorScheme:
+    """Resolve the EstimatorScheme an engine config names (default global)."""
+    return resolve_scheme(
+        getattr(config, "scheme", "global"),
+        getattr(config, "scheme_params", None),
+    )
+
+
 def _build_single(config, mesh) -> Callable:
-    return jax.jit(jax.vmap(bulk_update_all), donate_argnums=(0,))
+    scheme = config_scheme(config)
+    return jax.jit(jax.vmap(scheme.bulk_update), donate_argnums=(0,))
 
 
 def _build_single_chunk(config, mesh) -> Callable:
     # scan over the K axis inside the jit; the stream key and batch cursor
     # ride in unvmapped/traced so one compiled program serves the whole stream
+    scheme = config_scheme(config)
     return jax.jit(
-        jax.vmap(bulk_update_chunk, in_axes=(0, 0, 0, 0, None)),
+        jax.vmap(scheme.chunk_update, in_axes=(0, 0, 0, 0, None)),
         donate_argnums=(0,),
     )
 
 
-def _build_pjit(scheme: str):
+def _build_pjit(w_mode: str):
     def build(config, mesh) -> Callable:
         from repro.core.distributed import make_pjit_update
 
-        return make_pjit_update(mesh, scheme=scheme)
-
-    return build
-
-
-def _build_banked_pjit(scheme: str):
-    def build(config, mesh) -> Callable:
-        from repro.core.distributed import make_banked_pjit_update
-
-        return make_banked_pjit_update(
-            mesh, scheme=scheme, tenant_axis=_tenant_axis(config)
+        return make_pjit_update(
+            mesh, w_mode=w_mode, scheme=config_scheme(config)
         )
 
     return build
 
 
-def _build_banked_pjit_chunk(scheme: str):
+def _build_banked_pjit(w_mode: str):
+    def build(config, mesh) -> Callable:
+        from repro.core.distributed import make_banked_pjit_update
+
+        return make_banked_pjit_update(
+            mesh,
+            w_mode=w_mode,
+            tenant_axis=_tenant_axis(config),
+            scheme=config_scheme(config),
+        )
+
+    return build
+
+
+def _build_banked_pjit_chunk(w_mode: str):
     def build(config, mesh) -> Callable:
         from repro.core.distributed import make_banked_pjit_chunk_update
 
         return make_banked_pjit_chunk_update(
-            mesh, scheme=scheme, tenant_axis=_tenant_axis(config)
+            mesh,
+            w_mode=w_mode,
+            tenant_axis=_tenant_axis(config),
+            scheme=config_scheme(config),
         )
 
     return build
@@ -130,26 +157,28 @@ def _build_banked_pjit_chunk(scheme: str):
 def _banked_sharding(config, mesh):
     from repro.core.distributed import banked_state_sharding
 
-    return banked_state_sharding(mesh, tenant_axis=_tenant_axis(config))
+    return banked_state_sharding(
+        mesh, tenant_axis=_tenant_axis(config), scheme=config_scheme(config)
+    )
 
 
-def _banked_batch_w_sharding(scheme: str):
+def _banked_batch_w_sharding(w_mode: str):
     def f(config, mesh):
         from repro.core.distributed import banked_batch_w_sharding
 
         return banked_batch_w_sharding(
-            mesh, scheme=scheme, tenant_axis=_tenant_axis(config)
+            mesh, w_mode=w_mode, tenant_axis=_tenant_axis(config)
         )
 
     return f
 
 
-def _banked_chunk_w_sharding(scheme: str):
+def _banked_chunk_w_sharding(w_mode: str):
     def f(config, mesh):
         from repro.core.distributed import banked_chunk_w_sharding
 
         return banked_chunk_w_sharding(
-            mesh, scheme=scheme, tenant_axis=_tenant_axis(config)
+            mesh, w_mode=w_mode, tenant_axis=_tenant_axis(config)
         )
 
     return f
@@ -163,19 +192,20 @@ def _build_shardmap(config, mesh) -> Callable:
         r=config.r,
         s=config.batch_size,
         capacity_factor=config.capacity_factor,
+        scheme=config_scheme(config),
     )
 
 
-def _banked_plan(scheme: str) -> BackendPlan:
+def _banked_plan(w_mode: str) -> BackendPlan:
     return BackendPlan(
-        f"banked_pjit_{scheme.replace('_xla', '')}",
+        f"banked_pjit_{w_mode.replace('_xla', '')}",
         banked=True,
         reports_overflow=False,
-        build=_build_banked_pjit(scheme),
-        build_chunk=_build_banked_pjit_chunk(scheme),
+        build=_build_banked_pjit(w_mode),
+        build_chunk=_build_banked_pjit_chunk(w_mode),
         bank_sharding=_banked_sharding,
-        batch_w_sharding=_banked_batch_w_sharding(scheme),
-        chunk_w_sharding=_banked_chunk_w_sharding(scheme),
+        batch_w_sharding=_banked_batch_w_sharding(w_mode),
+        chunk_w_sharding=_banked_chunk_w_sharding(w_mode),
     )
 
 
@@ -219,6 +249,7 @@ def _banked_mesh_fit(config, mesh) -> Optional[tuple[int, int]]:
 
 def select_backend(config, mesh: Optional[Any] = None) -> BackendPlan:
     """Resolve config.backend (possibly "auto") to a concrete BackendPlan."""
+    scheme = config_scheme(config)  # validates the scheme name/params early
     name = config.backend
     p = _mesh_size(mesh)
     if name == "auto":
@@ -234,13 +265,23 @@ def select_backend(config, mesh: Optional[Any] = None) -> BackendPlan:
             )
         elif config.n_tenants > 1 or p <= 1:
             name = "single"
-        elif config.r % p == 0 and config.batch_size % p == 0:
+        elif (
+            scheme.update_kind == "nbsi"
+            and config.r % p == 0
+            and config.batch_size % p == 0
+        ):
             name = "shardmap"
         else:
             name = "pjit_coordinated"
     if name not in _PLANS:
         raise ValueError(f"unknown backend {name!r}; choose from {BACKENDS}")
     plan = _PLANS[name]
+    if name == "shardmap" and scheme.update_kind != "nbsi":
+        raise ValueError(
+            f"backend 'shardmap' hardcodes the paper's NBSI update; scheme "
+            f"{scheme.name!r} (update_kind={scheme.update_kind!r}) cannot run "
+            "it — use 'single' or a pjit plan"
+        )
     if not plan.banked and config.n_tenants > 1:
         raise ValueError(
             f"backend {name!r} is single-tenant; multi-tenant banks need "

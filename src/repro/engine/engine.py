@@ -12,10 +12,28 @@ one-shot script:
     (estimators + RNG cursor) through host memory or a CheckpointManager, so
     a killed process resumes bit-for-bit.
 
+Estimator schemes
+-----------------
+``EngineConfig.scheme`` names the estimator scheme (``repro.core.schemes``):
+what the bank computes and what ``estimate()`` returns per tenant — a scalar
+triangle count for ``global``/``naive``, an ``(n_vertices,)`` vector of
+per-vertex counts for ``local``. The engine never references state fields by
+name: it initializes state through ``scheme.init_state``, the execution plans
+jit ``scheme.bulk_update``/``chunk_update`` with shardings derived from the
+scheme's axis roles, and the snapshot walks the state pytree's own field
+names. Two service-surface assumptions remain on the state shape: it must be
+a NamedTuple exposing an ``m_seen`` stream-length leaf (``edges_seen()`` and
+the CLIs read it), and its field names must avoid the snapshot's reserved
+keys (``root_keys``/``step``/``config``/``scheme``). Every NBSI-state scheme
+satisfies both by construction; a scheme with a novel state pytree must too.
+Schemes with the NBSI update (``global``/``local``) share compiled programs
+and are bit-identical in state for equal seeds.
+
 State layout
 ------------
 The engine owns a *bank* of ``n_tenants`` independent estimator sets stored as
-one ``EstimatorState`` pytree with a leading tenant axis:
+one state pytree with a leading tenant axis; for the NBSI schemes that is
+``EstimatorState``:
 
   f1      (T, r, 2) int32   level-1 edges, -1 sentinel when unset
   chi     (T, r)    int32   neighborhood sizes |Gamma(f1)|
@@ -47,10 +65,13 @@ closeness.
 Snapshot format
 ---------------
 ``snapshot()`` / ``bank_snapshot()`` return a flat dict of **host numpy**
-arrays: the five state fields above (always with the leading tenant axis, even
+arrays: the state fields above (always with the leading tenant axis, even
 for unbanked plans), ``root_keys (T, 2)``, ``step ()`` int64 (the batch
-cursor), and ``config`` = [r, batch_size, n_tenants] int64 for the restore
-handshake. The format carries no mesh or chunking information — restore
+cursor), ``config`` = [r, batch_size, n_tenants] int64, and ``scheme`` (the
+scheme name as a 0-d str array) for the restore handshake — restoring into an
+engine running a different scheme raises ``SnapshotMismatch``; snapshots
+written before the scheme layer existed lack the key and restore as
+``global``. The format carries no mesh or chunking information — restore
 device_puts the bank through the *target* engine's plan sharding, so a
 snapshot taken on a 4-device 2-D mesh restores onto one device, a different
 mesh shape, or a different tenants-per-device split, bit-identically
@@ -66,8 +87,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.estimate import estimate as _estimate_one
-from repro.core.state import EstimatorState, init_state
+from repro.core.estimate import effective_groups
+from repro.core.schemes import EstimatorScheme, resolve_scheme
 from repro.engine.backends import BackendPlan, select_backend
 
 
@@ -79,9 +100,18 @@ class EngineConfig:
     r: int  # estimators per tenant
     batch_size: int  # s: fixed ingest width (shorter batches are padded)
     n_tenants: int = 1
-    groups: int = 9  # median-of-means groups for estimate()
+    # requested median-of-means groups for estimate(); rounded down to
+    # effective_groups(r, groups) — the largest divisor of r <= groups — so
+    # every estimator always participates (nothing is silently trimmed)
+    groups: int = 9
     seeds: Optional[tuple[int, ...]] = None  # per-tenant RNG seeds
     backend: str = "auto"  # auto | any name in repro.engine.backends.BACKENDS
+    # estimator scheme: what the bank computes (repro.core.schemes registry).
+    # scheme_params is a ((name, value), ...) tuple (a dict is normalized at
+    # construction), e.g. scheme="local",
+    # scheme_params=(("n_vertices", 10_000), ("n_pools", 8))
+    scheme: str = "global"
+    scheme_params: Optional[tuple] = None
     # mesh axis the bank's tenant dim shards over (banked_pjit_* plans);
     # every other mesh axis shards the estimator dim
     tenant_axis: str = "tenants"
@@ -90,6 +120,27 @@ class EngineConfig:
     # granularity — state and RNG stream are identical for any K, so snapshots
     # restore across engines with different chunk_size.
     chunk_size: int = 1
+
+    def __post_init__(self):
+        if isinstance(self.scheme_params, dict):
+            object.__setattr__(
+                self, "scheme_params", tuple(sorted(self.scheme_params.items()))
+            )
+        if self.groups < 1:
+            raise ValueError(
+                f"groups must be >= 1, got {self.groups}; estimate() uses "
+                "effective_groups(r, groups) so no estimator is ever dropped"
+            )
+
+    def resolved_scheme(self) -> EstimatorScheme:
+        """The EstimatorScheme instance this config names (validated)."""
+        scheme = resolve_scheme(self.scheme, self.scheme_params)
+        scheme.validate(self.r)
+        return scheme
+
+    def effective_groups(self) -> int:
+        """The group count estimate() actually uses (divisor rule)."""
+        return effective_groups(self.r, self.groups)
 
     def tenant_seeds(self) -> tuple[int, ...]:
         if self.seeds is not None:
@@ -143,6 +194,7 @@ class TriangleCountEngine:
             raise ValueError(f"chunk_size must be >= 1, got {config.chunk_size}")
         self.config = config
         self.mesh = mesh
+        self.scheme: EstimatorScheme = config.resolved_scheme()
         self.plan: BackendPlan = select_backend(config, mesh)
         self._update = self.plan.build(config, mesh)
         self._update_chunk = (
@@ -156,13 +208,14 @@ class TriangleCountEngine:
         )
         self._state = self._init_bank()
         # per-tenant estimate under one jit; groups is static
+        scheme, groups = self.scheme, config.groups
         self._estimate = jax.jit(
-            jax.vmap(lambda st: _estimate_one(st, groups=config.groups))
+            jax.vmap(lambda st: scheme.estimate(st, groups=groups))
         )
 
     # -- construction -------------------------------------------------------
-    def _init_bank(self) -> EstimatorState:
-        one = init_state(self.config.r)
+    def _init_bank(self):
+        one = self.scheme.init_state(self.config.r)
         if self.plan.banked:
             bank = jax.tree.map(
                 lambda x: jnp.broadcast_to(
@@ -173,7 +226,7 @@ class TriangleCountEngine:
             return self._place_bank(bank)
         return one
 
-    def _place_bank(self, bank: EstimatorState) -> EstimatorState:
+    def _place_bank(self, bank):
         """Lay the bank out the way this engine's plan expects: sharded over
         the mesh for tenant-sharded plans, default device otherwise."""
         if self.plan.bank_sharding is not None:
@@ -407,7 +460,9 @@ class TriangleCountEngine:
 
     # -- queries ------------------------------------------------------------
     def estimate(self) -> np.ndarray:
-        """(n_tenants,) rolling median-of-means estimates (paper Thm 3.4)."""
+        """Rolling per-tenant estimates: shape ``(n_tenants,)`` for scalar
+        schemes (the paper's Thm 3.4 median-of-means), ``(n_tenants, ...)``
+        for vector schemes (e.g. ``local``: per-vertex counts)."""
         self._drain_overflow()
         st = self._state
         if not self.plan.banked:
@@ -421,8 +476,10 @@ class TriangleCountEngine:
             st = jax.tree.map(np.asarray, st)
         return np.asarray(self._estimate(st))
 
-    def estimate_tenant(self, tenant: int = 0) -> float:
-        return float(self.estimate()[tenant])
+    def estimate_tenant(self, tenant: int = 0):
+        """One tenant's estimate: a float for scalar schemes, else an array."""
+        e = self.estimate()[tenant]
+        return float(e) if np.ndim(e) == 0 else e
 
     # -- snapshot / restore -------------------------------------------------
     def snapshot(self) -> dict:
@@ -444,6 +501,7 @@ class TriangleCountEngine:
             [self.config.r, self.config.batch_size, self.config.n_tenants],
             np.int64,
         )
+        snap["scheme"] = np.array(self.scheme.name)
         return snap
 
     # mesh-portability contract: bank_snapshot gathers to host, bank_restore
@@ -455,10 +513,12 @@ class TriangleCountEngine:
 
         ``r`` and ``n_tenants`` must match; ``batch_size`` may differ (the
         estimator state is batch-size independent — Theorem 4.1's batch
-        invariance — so a restored stream can legally re-batch).
-        Reshard-on-restore: the bank is device_put through *this* engine's
-        plan sharding, so the snapshot may come from any mesh shape or
-        tenants-per-device split (or none at all).
+        invariance — so a restored stream can legally re-batch). The scheme
+        handshake: a snapshot carries its scheme name and refuses to restore
+        into an engine running a different scheme; pre-scheme snapshots (no
+        ``scheme`` key) are ``global``. Reshard-on-restore: the bank is
+        device_put through *this* engine's plan sharding, so the snapshot may
+        come from any mesh shape or tenants-per-device split (or none at all).
         """
         got = _snapshot_config(snap)
         want = (self.config.r, self.config.batch_size, self.config.n_tenants)
@@ -466,8 +526,16 @@ class TriangleCountEngine:
             raise SnapshotMismatch(
                 f"snapshot (r, batch_size, n_tenants)={got} != engine {want}"
             )
-        host = EstimatorState(
-            **{f: np.asarray(snap[f]) for f in EstimatorState._fields}
+        snap_scheme = str(np.asarray(snap.get("scheme", "global")))
+        if snap_scheme != self.scheme.name:
+            raise SnapshotMismatch(
+                f"snapshot was written by scheme {snap_scheme!r}; this engine "
+                f"runs {self.scheme.name!r} (pass scheme={snap_scheme!r} or "
+                "use from_snapshot, which adopts the snapshot's scheme)"
+            )
+        state_cls = type(self._state)
+        host = state_cls(
+            **{f: np.asarray(snap[f]) for f in state_cls._fields}
         )
         if not self.plan.banked:
             bank = jax.tree.map(lambda x: jnp.asarray(x[0]), host)
@@ -492,6 +560,10 @@ class TriangleCountEngine:
         **config_kwargs,
     ) -> "TriangleCountEngine":
         r, s, t = _snapshot_config(snap)
+        if "scheme" not in config_kwargs and "scheme" in snap:
+            # adopt the snapshot's scheme; parameterized schemes (local)
+            # still need scheme_params from the caller
+            config_kwargs["scheme"] = str(np.asarray(snap["scheme"]))
         cfg = EngineConfig(
             r=r,
             batch_size=batch_size if batch_size is not None else s,

@@ -94,8 +94,14 @@ def run_stream(
     ckpt = None
     if ckpt_dir is not None:
         ckpt = CheckpointManager(ckpt_dir, async_save=True)
+        template = engine.snapshot()
+        saved = ckpt.manifest()
+        if saved is not None and "keys" in saved and "scheme" not in saved["keys"]:
+            # pre-scheme-layer checkpoint: restore without the scheme leaf;
+            # engine.restore defaults the handshake to "global"
+            template.pop("scheme", None)
         try:
-            restored, manifest = ckpt.restore(engine.snapshot())
+            restored, manifest = ckpt.restore(template)
         except (AssertionError, KeyError) as e:
             raise SnapshotMismatch(
                 f"checkpoint in {ckpt_dir!r} does not fit this engine "

@@ -56,7 +56,6 @@ def moe_dispatch_ref(expert_idx, capacity, n_experts):
     with slot >= capacity are dropped (keep = False). The dispatch matrix is
     one_hot(expert)*one_hot(slot) — the standard capacity-factor MoE routing.
     """
-    t = expert_idx.shape[0]
     one_hot = jax.nn.one_hot(expert_idx, n_experts, dtype=jnp.int32)  # (t, E)
     pos_in_expert = jnp.cumsum(one_hot, axis=0) - 1  # (t, E)
     slot = jnp.take_along_axis(pos_in_expert, expert_idx[:, None], axis=1)[:, 0]

@@ -122,10 +122,10 @@ def run_stream_cell(shape: str, multi_pod: bool, capacity_factor=2.0) -> dict:
     nv = sds((), jnp.int32)
     key = sds((2,), jnp.uint32)
     t0 = time.time()
-    if spec["scheme"] == "shardmap":
+    if spec["w_mode"] == "shardmap":
         jf = make_coordinated_update(mesh, r=r, s=s, capacity_factor=capacity_factor)
     else:
-        jf = make_pjit_update(mesh, spec["scheme"])
+        jf = make_pjit_update(mesh, w_mode=spec["w_mode"])
     lowered = jf.lower(state, W, nv, key)
     compiled = lowered.compile()
     # useful work floor: one pass of comparisons for sort(2s) + r estimator updates

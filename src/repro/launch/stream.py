@@ -12,6 +12,8 @@ reproduces the single-tenant run bit-for-bit.
   PYTHONPATH=src python -m repro.launch.stream --graph ba --tenants 4
   PYTHONPATH=src python -m repro.launch.stream --tenants 4 \
       --host-devices 4 --mesh tenants=2,estimators=2   # tenant-sharded bank
+  PYTHONPATH=src python -m repro.launch.stream --scheme local --pools 4 \
+      --graph er --nodes 100 --edges 1500              # per-vertex counts
 """
 from __future__ import annotations
 
@@ -26,7 +28,7 @@ if __name__ == "__main__":
     apply_host_devices(sys.argv)
 
 import repro  # noqa: F401,E402
-from repro.core.sequential import count_triangles
+from repro.core.sequential import count_triangles, local_triangle_counts
 from repro.data.graph_stream import (
     barabasi_albert_stream,
     batches,
@@ -51,6 +53,18 @@ def make_stream(args):
     return edges, tau
 
 
+def scheme_args(args) -> dict:
+    """EngineConfig scheme kwargs from CLI flags (shared by both drivers)."""
+    scheme = getattr(args, "scheme", "global")
+    params = None
+    if scheme == "local":
+        params = (
+            ("n_pools", getattr(args, "pools", 1)),
+            ("n_vertices", getattr(args, "vertices", 0) or args.nodes),
+        )
+    return {"scheme": scheme, "scheme_params": params}
+
+
 def build_engine(args) -> TriangleCountEngine:
     mesh = make_stream_mesh(getattr(args, "mesh", "") or "")
     engine = TriangleCountEngine(
@@ -63,12 +77,52 @@ def build_engine(args) -> TriangleCountEngine:
             backend=args.backend,
             tenant_axis=getattr(args, "tenant_axis", "tenants"),
             chunk_size=getattr(args, "chunk", 1),
+            **scheme_args(args),
         ),
         mesh=mesh,
     )
     if mesh is not None:
         print(f"mesh: {dict(mesh.shape)} -> plan {engine.plan.name}", flush=True)
     return engine
+
+
+def add_scheme_flags(ap) -> None:
+    ap.add_argument("--scheme", default="global",
+                    help="estimator scheme: any name in repro.core.SCHEMES "
+                         "(global = one triangle count per tenant; local = "
+                         "per-vertex counts via vertex-partitioned pools)")
+    ap.add_argument("--vertices", type=int, default=0,
+                    help="local scheme: vertex-id bound for the per-vertex "
+                         "output (0 = use --nodes)")
+    ap.add_argument("--pools", type=int, default=1,
+                    help="local scheme: estimator pools vertices hash into "
+                         "(must divide --estimators)")
+
+
+def format_topk(est, true_counts=None, top: int = 5) -> str:
+    """``v:est`` (optionally ``(true t)``) for the top vertices — the one
+    per-vertex summary format both drivers print."""
+    import numpy as np
+
+    parts = []
+    for vtx in np.argsort(est)[::-1][:top]:
+        s = f"{int(vtx)}:{float(est[vtx]):.1f}"
+        if true_counts is not None:
+            s += f"(true {int(true_counts[vtx])})"
+        parts.append(s)
+    return f"[{' '.join(parts)}]"
+
+
+def print_local_estimates(est, tenant, true_counts=None, top: int = 5) -> None:
+    """Per-vertex output: the sum/3 global cross-check plus the top vertices."""
+    import numpy as np
+
+    line = (f"local[tenant {tenant}] sum/3={float(est.sum()) / 3:.1f} "
+            f"top{top}={format_topk(est, true_counts, top)}")
+    if true_counts is not None:
+        denom = np.maximum(true_counts.sum(), 1)
+        line += f" l1.err={np.abs(est - true_counts).sum() / denom:.3%}"
+    print(line, flush=True)
 
 
 def main():
@@ -89,6 +143,7 @@ def main():
                     help="independent estimator banks over the same stream")
     ap.add_argument("--backend", default="auto",
                     help="auto or any name in repro.engine.backends.BACKENDS")
+    add_scheme_flags(ap)
     ap.add_argument("--mesh", default="",
                     help="device mesh spec, e.g. '8' or 'tenants=2,estimators=4' "
                          "(see repro.launch.mesh.make_stream_mesh and "
@@ -116,6 +171,14 @@ def main():
     print(f"processed {len(edges)} edges in {dt:.2f}s "
           f"({len(edges)/dt/1e6:.2f}M edges/s, r={args.estimators})")
     ests = engine.estimate()
+    if args.scheme == "local":
+        true_counts = None
+        if tau is not None:
+            n_vertices = args.vertices or args.nodes
+            true_counts = local_triangle_counts(edges, n_vertices)
+        for t in range(args.tenants):
+            print_local_estimates(ests[t], t, true_counts)
+        return
     est = float(ests[0])
     print(f"estimate: {est:.1f}" + (
         f"  true: {tau}  rel.err: {abs(est-tau)/max(tau,1):.3%}" if tau else ""))

@@ -29,17 +29,29 @@ if __name__ == "__main__":
     # must run before any jax device query (see repro.launch._env)
     apply_host_devices(sys.argv)
 
+import numpy as np
+
 from repro.data.graph_stream import batches
 from repro.engine import run_stream
-from repro.launch.stream import build_engine, make_stream
+from repro.launch.stream import (
+    add_scheme_flags,
+    build_engine,
+    format_topk,
+    make_stream,
+)
 
 
 def _print_rolling(step, ests, edges_seen, tau=None):
     for t, e in enumerate(ests):
-        line = (f"query step={step} tenant={t} m={int(edges_seen[t])} "
-                f"estimate={float(e):.1f}")
-        if tau:
-            line += f" rel.err={abs(float(e)-tau)/max(tau,1):.3%}"
+        if np.ndim(e) > 0:  # vector scheme (local): summarize per tenant
+            line = (f"query step={step} tenant={t} m={int(edges_seen[t])} "
+                    f"sum/3={float(np.sum(e)) / 3:.1f} "
+                    f"top={format_topk(e, top=3)}")
+        else:
+            line = (f"query step={step} tenant={t} m={int(edges_seen[t])} "
+                    f"estimate={float(e):.1f}")
+            if tau:
+                line += f" rel.err={abs(float(e)-tau)/max(tau,1):.3%}"
         print(line, flush=True)
 
 
@@ -66,6 +78,7 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--tenants", type=int, default=2)
     ap.add_argument("--backend", default="auto")
+    add_scheme_flags(ap)
     ap.add_argument("--mesh", default="",
                     help="device mesh spec, e.g. 'tenants=2,estimators=4' "
                          "(docs/scaling.md)")
@@ -105,7 +118,11 @@ def main():
                 try:
                     t = int(cmd)
                     e = engine.estimate_tenant(t)
-                    print(f"answer tenant={t} estimate={e:.1f}", flush=True)
+                    if np.ndim(e) > 0:  # vector scheme: the sum/3 cross-check
+                        print(f"answer tenant={t} sum/3={float(np.sum(e))/3:.1f}",
+                              flush=True)
+                    else:
+                        print(f"answer tenant={t} estimate={e:.1f}", flush=True)
                 except (ValueError, IndexError):
                     print(f"answer error=bad query {cmd!r}", flush=True)
         if stop:

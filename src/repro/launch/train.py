@@ -13,7 +13,6 @@ import importlib
 import time
 
 import jax
-import numpy as np
 
 import repro  # noqa: F401
 from repro.configs.cells import LM_ARCHS

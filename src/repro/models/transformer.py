@@ -25,7 +25,6 @@ from repro.models.layers import (
     layer_norm,
     rms_norm,
     rope,
-    softmax_xent,
     swiglu,
 )
 from repro.primitives.segscan import segment_starts, segmented_iota

@@ -111,6 +111,19 @@ class CheckpointManager:
                 shutil.rmtree(t, ignore_errors=True)
 
     # -- restore ------------------------------------------------------------
+    def manifest(self, step: Optional[int] = None) -> Optional[dict]:
+        """The manifest dict of ``step`` (default: newest), or None if empty.
+
+        Lets callers inspect what a checkpoint contains (its ``keys`` list,
+        config hash, ...) before committing to a template-shaped restore —
+        e.g. the stream service drops snapshot keys a pre-upgrade checkpoint
+        never wrote."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return None
+        d = self.dir / f"step_{step:010d}"
+        return json.loads((d / "manifest.json").read_text())
+
     def latest_step(self) -> Optional[int]:
         steps = []
         for d in self.dir.glob("step_*"):

@@ -11,7 +11,6 @@ Baseline policy (the hillclimb in EXPERIMENTS.md §Perf iterates on this):
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.models.transformer import TransformerConfig

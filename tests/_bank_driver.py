@@ -2,15 +2,20 @@
 count set before jax initializes — so it runs in its own process; see
 tests/test_tenant_sharding.py).
 
-Checks, against a `single`-backend reference bank on the same stream:
-  * banked_pjit_* ingest is bit-identical per tenant (state AND estimates),
-    for the pure tenant mesh, the 2-D (tenants, estimators) mesh, and the
-    chunked (fused multi-batch) path on a sharded bank;
+Parametrized over the estimator scheme (argv[1]: "global" | "local" — the
+scheme axis the issue-4 acceptance requires). Checks, against a
+`single`-backend reference bank running the SAME scheme on the same stream:
+  * banked_pjit_* ingest is bit-identical per tenant (state AND estimates —
+    scalars for global, per-vertex vectors for local), for the pure tenant
+    mesh, the 2-D (tenants, estimators) mesh, and the chunked (fused
+    multi-batch) path on a sharded bank;
   * snapshots round-trip across mesh shapes: 2-D mesh -> no mesh -> different
     mesh, continuing the stream bit-identically after every reshard;
-  * select_backend's auto policy picks the documented plan per mesh shape.
+  * select_backend's auto policy picks the documented plan per mesh shape
+    (scheme-independent; checked on the global pass only).
 """
 import os
+import sys
 
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
@@ -22,32 +27,44 @@ from repro.engine import EngineConfig, TriangleCountEngine, select_backend
 from repro.launch.mesh import make_stream_mesh
 
 T, R, S = 4, 512, 32
+NODES = 30
 SEEDS = (11, 12, 13, 14)
+SCHEME_KW = {
+    "global": {},
+    "local": {
+        "scheme": "local",
+        "scheme_params": (("n_pools", 2), ("n_vertices", NODES)),
+    },
+}
 
 
-def cfg(**kw):
+def cfg(scheme="global", **kw):
     base = dict(r=R, batch_size=S, n_tenants=T, seeds=SEEDS)
+    base.update(SCHEME_KW[scheme])
     base.update(kw)
     return EngineConfig(**base)
 
 
 def assert_same_bank(a: dict, b: dict, ctx: str) -> None:
-    for f in ("f1", "chi", "f2", "has_f3", "m_seen", "step", "root_keys"):
+    for f in ("f1", "chi", "f2", "has_f3", "m_seen", "step", "root_keys",
+              "scheme"):
         np.testing.assert_array_equal(a[f], b[f], err_msg=f"{ctx}:{f}")
 
 
-def main():
+def main(scheme: str = "global"):
     import jax
 
     assert jax.device_count() == 8, jax.device_count()
-    edges = erdos_renyi_stream(30, 200, seed=5)
+    edges = erdos_renyi_stream(NODES, 200, seed=5)
     its = list(batches(edges, S))
 
-    ref = TriangleCountEngine(cfg(backend="single"))
+    ref = TriangleCountEngine(cfg(scheme, backend="single"))
     for W, nv in its:
         ref.ingest(W, nv)
     ref_snap = ref.bank_snapshot()
     ref_est = ref.estimate()
+    if scheme == "local":
+        assert ref_est.shape == (T, NODES), ref_est.shape
 
     # --- every sharded plan matches `single` per tenant, bit for bit ---
     mesh_t = make_stream_mesh("tenants=4")
@@ -58,33 +75,36 @@ def main():
         (mesh_2d, "banked_pjit_independent", "banked_pjit_independent"),
     ]
     for mesh, backend, want in plans:
-        eng = TriangleCountEngine(cfg(backend=backend), mesh=mesh)
+        eng = TriangleCountEngine(cfg(scheme, backend=backend), mesh=mesh)
         assert eng.plan.name == want, (eng.plan.name, want)
         for W, nv in its:
             eng.ingest(W, nv)
         assert_same_bank(ref_snap, eng.bank_snapshot(),
                          f"{want}@{dict(mesh.shape)}")
         np.testing.assert_array_equal(ref_est, eng.estimate())
-        print(f"{want} on {dict(mesh.shape)} bit-identical OK")
+        print(f"{scheme}/{want} on {dict(mesh.shape)} bit-identical OK")
 
     # --- chunked (scan-fused) ingest on a sharded bank ---
-    chunked = TriangleCountEngine(cfg(chunk_size=3), mesh=mesh_2d)
+    chunked = TriangleCountEngine(cfg(scheme, chunk_size=3), mesh=mesh_2d)
     chunked.ingest_stream(iter(its))
     assert_same_bank(ref_snap, chunked.bank_snapshot(), "chunked@2x2")
     np.testing.assert_array_equal(ref_est, chunked.estimate())
-    print("chunked sharded ingest bit-identical OK")
+    print(f"{scheme}/chunked sharded ingest bit-identical OK")
 
     # --- snapshots round-trip across mesh shapes (issue acceptance) ---
     half = len(its) // 2
-    sharded = TriangleCountEngine(cfg(), mesh=mesh_2d)
+    sharded = TriangleCountEngine(cfg(scheme), mesh=mesh_2d)
     for W, nv in its[:half]:
         sharded.ingest(W, nv)
-    # 2-device-per-axis mesh -> 1-device engine
-    solo = TriangleCountEngine.from_snapshot(sharded.bank_snapshot())
+    # 2-device-per-axis mesh -> 1-device engine (scheme adopted from the snap)
+    extra = dict(SCHEME_KW[scheme])
+    extra.pop("scheme", None)
+    solo = TriangleCountEngine.from_snapshot(sharded.bank_snapshot(), **extra)
     assert solo.plan.name == "single", solo.plan.name
+    assert solo.scheme.name == ref.scheme.name
     # 1-device engine -> different mesh shape (pure tenant axis)
     resharded = TriangleCountEngine.from_snapshot(
-        solo.bank_snapshot(), mesh=mesh_t
+        solo.bank_snapshot(), mesh=mesh_t, **extra
     )
     assert resharded.plan.name == "banked_pjit_independent"
     for eng in (sharded, solo, resharded):
@@ -94,35 +114,39 @@ def main():
     assert_same_bank(ref_snap, resharded.bank_snapshot(), "single->mesh")
     np.testing.assert_array_equal(ref_est, solo.estimate())
     np.testing.assert_array_equal(ref_est, resharded.estimate())
-    print("snapshot round-trip across mesh shapes OK")
+    print(f"{scheme}/snapshot round-trip across mesh shapes OK")
 
     # --- auto policy on meshes (the docs/scaling.md decision table) ---
-    assert select_backend(cfg(), mesh_t).name == "banked_pjit_independent"
-    assert select_backend(cfg(), mesh_2d).name == "banked_pjit_coordinated"
-    # batch not divisible by the estimator axis -> W stays replicated
-    assert (
-        select_backend(cfg(batch_size=S + 1), mesh_2d).name
-        == "banked_pjit_independent"
-    )
-    # no tenants axis on the mesh -> a bank falls back to single
-    no_t = make_stream_mesh("8")
-    assert select_backend(cfg(), no_t).name == "single"
-    # 3 tenants don't divide a 4-way tenant axis -> single
-    assert select_backend(cfg(n_tenants=3, seeds=None), mesh_t).name == "single"
-    # single tenant on a 1-tenant-axis stream mesh -> banked (estimator axes
-    # carry the parallelism); on a tenant-less mesh -> the shardmap scheme
-    mesh_1e = make_stream_mesh("tenants=1,estimators=2")
-    assert (
-        select_backend(cfg(n_tenants=1, seeds=None), mesh_1e).name
-        == "banked_pjit_coordinated"
-    )
-    assert (
-        select_backend(cfg(n_tenants=1, seeds=None), no_t).name == "shardmap"
-    )
-    print("auto policy OK")
+    if scheme == "global":
+        assert select_backend(cfg(), mesh_t).name == "banked_pjit_independent"
+        assert select_backend(cfg(), mesh_2d).name == "banked_pjit_coordinated"
+        # batch not divisible by the estimator axis -> W stays replicated
+        assert (
+            select_backend(cfg(batch_size=S + 1), mesh_2d).name
+            == "banked_pjit_independent"
+        )
+        # no tenants axis on the mesh -> a bank falls back to single
+        no_t = make_stream_mesh("8")
+        assert select_backend(cfg(), no_t).name == "single"
+        # 3 tenants don't divide a 4-way tenant axis -> single
+        assert select_backend(
+            cfg(n_tenants=3, seeds=None), mesh_t
+        ).name == "single"
+        # single tenant on a 1-tenant-axis stream mesh -> banked (estimator
+        # axes carry the parallelism); on a tenant-less mesh -> shardmap
+        mesh_1e = make_stream_mesh("tenants=1,estimators=2")
+        assert (
+            select_backend(cfg(n_tenants=1, seeds=None), mesh_1e).name
+            == "banked_pjit_coordinated"
+        )
+        assert (
+            select_backend(cfg(n_tenants=1, seeds=None), no_t).name
+            == "shardmap"
+        )
+        print("auto policy OK")
 
     print("ALL-BANK-OK")
 
 
 if __name__ == "__main__":
-    main()
+    main(sys.argv[1] if len(sys.argv) > 1 else "global")

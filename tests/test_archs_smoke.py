@@ -41,7 +41,6 @@ def run_smoke(arch, shape):
 
     if cell.kind == "train":
         params_s, opt_s, batch_s, _ = cell.args
-        from repro.configs.cells import LM_ARCHS
 
         # real init for params (not random garbage) so the step is meaningful
         params, opt_state = _init_real(arch, cell, key)

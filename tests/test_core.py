@@ -8,7 +8,6 @@ import pytest
 from repro.core import (
     bulk_update_all_jit,
     bulk_update_chunk_jit,
-    coarse_estimates,
     estimate,
     init_state,
     rank_all,
@@ -150,8 +149,6 @@ class TestUnbiasedness:
     def test_mean_matches_tau_planted(self):
         edges, tau = planted_triangle_stream(30, 300, 500, seed=2)
         st = run_stream(edges, r=60_000, batch_size=64, seed=11)
-        from repro.core.state import EstimatorState
-
         x = np.where(st.has_f3, st.chi.astype(np.float64) * int(st.m_seen), 0.0)
         mean = x.mean()
         se = x.std() / np.sqrt(len(x))
@@ -165,12 +162,7 @@ class TestUnbiasedness:
         from repro.core.state import EstimatorState
 
         est = float(
-            estimate(
-                __import__("repro.core.state", fromlist=["EstimatorState"]).EstimatorState(
-                    *[jnp.asarray(v) for v in st]
-                ),
-                groups=9,
-            )
+            estimate(EstimatorState(*[jnp.asarray(v) for v in st]), groups=9)
         )
         assert abs(est - tau) / tau < 0.25, (est, tau)
 
@@ -193,7 +185,7 @@ class TestClosingEdgeDuplicates:
         """The arrival rule is existential: if the closing edge appears twice
         in a batch, a copy AFTER f2 closes the wedge even when another copy
         precedes f2 (the probe must take the last copy of the duplicate run)."""
-        from repro.core.bulk import _step3_closing
+        from repro.core.bulk import step3_closing
 
         # closing edge (0,2) of wedge f1=(0,1), f2=(1,2) at pos 2 AND pos 6
         W = jnp.asarray(np.array(
@@ -207,7 +199,7 @@ class TestClosingEdgeDuplicates:
         # f2 sampled at pos 5 (copy at 6 qualifies), pos 6 (no copy after),
         # and from an older batch (any copy qualifies)
         f2_bpos = jnp.asarray(np.array([5, 6, -1], np.int32))
-        got = np.asarray(_step3_closing(f1, f2, has_f3, f2_bpos, R))
+        got = np.asarray(step3_closing(f1, f2, has_f3, f2_bpos, R))
         np.testing.assert_array_equal(got, [True, False, True])
 
 

@@ -15,7 +15,6 @@ from repro.engine import (
     run_stream,
     select_backend,
 )
-from repro.train.checkpoint import CheckpointManager
 
 R, BS = 512, 32
 

@@ -3,7 +3,6 @@ formulas (validated against XLA cost analysis on scan-free configurations,
 where every trip count is 1 and the two must agree)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.roofline.hlo import collective_stats, _shape_bytes

@@ -1,0 +1,325 @@
+"""Estimator-scheme layer tests: registry + params, the axis-role sharding
+derivation, the groups divisor rule, the local scheme's exact attribution and
+statistical accuracy against ground truth, and the engine-level scheme
+handshake (state bit-identity with global, chunking, snapshots, backends)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    EstimatorState,
+    GLOBAL,
+    LocalScheme,
+    effective_groups,
+    estimate,
+    resolve_scheme,
+)
+from repro.core.schemes import (
+    NBSI_STATE_ROLES,
+    ROLE_ESTIMATOR,
+    EstimatorScheme,
+    vertex_pool,
+)
+from repro.core.sequential import count_triangles, local_triangle_counts
+from repro.data.graph_stream import batches, erdos_renyi_stream
+from repro.engine import (
+    EngineConfig,
+    SnapshotMismatch,
+    TriangleCountEngine,
+    run_stream,
+    select_backend,
+)
+
+R, BS = 512, 32
+
+
+class TestRegistry:
+    def test_resolve_by_name(self):
+        assert resolve_scheme("global").name == "global"
+        assert resolve_scheme("naive").name == "naive"
+        loc = resolve_scheme("local", {"n_vertices": 10, "n_pools": 2})
+        assert loc.name == "local" and loc.n_vertices == 10
+
+    def test_unknown_and_bad_params(self):
+        with pytest.raises(ValueError):
+            resolve_scheme("nope")
+        with pytest.raises(ValueError):  # local without n_vertices
+            resolve_scheme("local")
+
+    def test_passthrough_instance(self):
+        assert resolve_scheme(GLOBAL) is GLOBAL
+
+    def test_config_normalizes_dict_params(self):
+        cfg = EngineConfig(
+            r=64, batch_size=16, scheme="local",
+            scheme_params={"n_vertices": 8, "n_pools": 2},
+        )
+        assert isinstance(cfg.scheme_params, tuple)
+        assert cfg.resolved_scheme().n_vertices == 8
+
+    def test_config_validates_scheme_and_groups(self):
+        with pytest.raises(ValueError):
+            EngineConfig(r=64, batch_size=16, groups=0)
+        with pytest.raises(ValueError):  # 3 pools don't divide r=64
+            TriangleCountEngine(EngineConfig(
+                r=64, batch_size=16, scheme="local",
+                scheme_params={"n_vertices": 8, "n_pools": 3},
+            ))
+        with pytest.raises(ValueError):
+            TriangleCountEngine(EngineConfig(
+                r=64, batch_size=16, scheme="local",
+                scheme_params={"n_vertices": 0},
+            ))
+
+
+class TestEffectiveGroups:
+    """The satellite fix: ``groups`` never silently trims estimators."""
+
+    @pytest.mark.parametrize(
+        "r,groups,want",
+        [(512, 9, 8), (512, 512, 512), (10, 9, 5), (7, 3, 1), (64, 1, 1),
+         (90_000, 9, 9), (12, 100, 1), (8, 9, 1)],
+    )
+    def test_rule(self, r, groups, want):
+        assert effective_groups(r, groups) == want
+        assert r % effective_groups(r, groups) == 0
+
+    def test_rule_rejects_empty(self):
+        with pytest.raises(ValueError):
+            effective_groups(0, 9)
+
+    def test_groups_above_r_is_the_mean_not_median_of_singletons(self):
+        """groups > r degrades to the plain mean (the old per==0 fallback):
+        a median over size-1 groups would zero out sparse coarse estimates."""
+        x = np.array([0, 0, 0, 100.0, 0, 0, 0, 0])  # one closed estimator
+        st = EstimatorState(
+            f1=jnp.zeros((8, 2), jnp.int32),
+            chi=jnp.asarray(x, jnp.int32),
+            f2=jnp.zeros((8, 2), jnp.int32),
+            has_f3=jnp.ones((8,), bool),
+            m_seen=jnp.int64(1),
+        )
+        assert float(estimate(st, groups=9)) == x.mean()  # not 0.0
+
+    def test_estimate_uses_every_estimator(self):
+        """r=10, groups=9: the old code dropped estimator 9 (9 groups of 1);
+        the rule now gives 5 groups of 2 with all 10 participating."""
+        x = np.zeros(10)
+        x[9] = 1000.0  # only the estimator the old trim would drop
+        st = EstimatorState(
+            f1=jnp.zeros((10, 2), jnp.int32),
+            chi=jnp.asarray(x, jnp.int32),
+            f2=jnp.zeros((10, 2), jnp.int32),
+            has_f3=jnp.ones((10,), bool),
+            m_seen=jnp.int64(1),
+        )
+        got = float(estimate(st, groups=9))
+        want = float(np.median(np.mean(x.reshape(5, 2), axis=1)))
+        assert got == want
+        assert got != 0.0 or want == 0.0  # the dropped estimator now counts
+
+
+class TestAxisRoles:
+    def test_derived_specs_match_handbuilt(self):
+        from jax.sharding import PartitionSpec as P
+
+        from repro.core.distributed import scheme_state_specs
+
+        axes = ("data", "model")
+        specs = scheme_state_specs(GLOBAL, axes)
+        assert specs.chi == P(axes)
+        assert specs.f1 == P(axes, None)
+        assert specs.m_seen == P()
+        banked = scheme_state_specs(GLOBAL, ("est",), tenant_axis="tenants")
+        assert banked.chi == P("tenants", ("est",))
+        assert banked.f1 == P("tenants", ("est",), None)
+        assert banked.m_seen == P("tenants")
+
+    def test_local_shares_nbsi_roles(self):
+        loc = LocalScheme(n_vertices=8, n_pools=2)
+        assert loc.axis_roles() == NBSI_STATE_ROLES
+        assert loc.axis_roles().chi == ROLE_ESTIMATOR
+
+    def test_unknown_role_rejected(self):
+        from repro.core.distributed import scheme_state_specs
+
+        class Bad(EstimatorScheme):
+            name = "bad"
+
+            def axis_roles(self):
+                return NBSI_STATE_ROLES._replace(chi="bogus")
+
+        with pytest.raises(ValueError):
+            scheme_state_specs(Bad(), ("x",))
+
+
+class TestLocalScheme:
+    def test_exact_attribution_handbuilt_state(self):
+        """Four hand-built estimators, two pools: the scatter attributes each
+        closed wedge's X = chi*m to exactly the triangle vertices its pool
+        owns, divided by the pool size."""
+        V, P_ = 8, 2
+        scheme = LocalScheme(n_vertices=V, n_pools=P_)
+        # estimators 0,1 -> pool 0; estimators 2,3 -> pool 1
+        # est 0: wedge f1=(0,1), f2=(1,2) closed -> triangle {0,1,2}, chi=2
+        # est 1: open (no f2)
+        # est 2: wedge f1=(3,4), f2=(4,5) closed -> triangle {3,4,5}, chi=4
+        # est 3: closed triangle {0,1,2} again, chi=6
+        st = EstimatorState(
+            f1=jnp.asarray([[0, 1], [0, 1], [3, 4], [0, 1]], jnp.int32),
+            chi=jnp.asarray([2, 1, 4, 6], jnp.int32),
+            f2=jnp.asarray([[1, 2], [-1, -1], [4, 5], [1, 2]], jnp.int32),
+            has_f3=jnp.asarray([True, False, True, True]),
+            m_seen=jnp.int64(10),
+        )
+        got = np.asarray(scheme.estimate(st))
+        own = np.asarray(vertex_pool(jnp.arange(V), P_))
+        want = np.zeros(V)
+        for est_idx, (tri, x) in enumerate(
+            [({0, 1, 2}, 20.0), (set(), 0.0), ({3, 4, 5}, 40.0), ({0, 1, 2}, 60.0)]
+        ):
+            pool = est_idx // 2
+            for vtx in tri:
+                if own[vtx] == pool:
+                    want[vtx] += x / 2  # r_pool = 2
+        np.testing.assert_allclose(got, want)
+
+    def test_statistical_accuracy_vs_ground_truth(self):
+        """Per-vertex estimates track the exact local counts: the sum/3
+        cross-check lands near tau and the vertex profile correlates."""
+        edges = erdos_renyi_stream(30, 200, seed=5)
+        tau = count_triangles(edges)
+        truth = local_triangle_counts(edges, 30)
+        eng = TriangleCountEngine(EngineConfig(
+            r=40_000, batch_size=BS, seeds=(1,), scheme="local",
+            scheme_params={"n_vertices": 30, "n_pools": 4},
+        ))
+        for W, nv in batches(edges, BS):
+            eng.ingest(W, nv)
+        est = eng.estimate()[0]
+        assert est.shape == (30,)
+        assert abs(est.sum() / 3 - tau) < 0.1 * tau, (est.sum() / 3, tau)
+        assert np.corrcoef(truth, est)[0, 1] > 0.9
+
+    def test_state_bit_identical_to_global(self):
+        """The local scheme's ingest IS the paper's bulkUpdateAll — same
+        seeds give byte-identical state; only the query differs."""
+        edges = erdos_renyi_stream(25, 150, seed=3)
+        kw = dict(r=R, batch_size=BS, n_tenants=2, seeds=(7, 8))
+        g = TriangleCountEngine(EngineConfig(**kw))
+        loc = TriangleCountEngine(EngineConfig(
+            **kw, scheme="local",
+            scheme_params={"n_vertices": 25, "n_pools": 2},
+        ))
+        for W, nv in batches(edges, BS):
+            g.ingest(W, nv)
+            loc.ingest(W, nv)
+        sg, sl = g.snapshot(), loc.snapshot()
+        for f in ("f1", "chi", "f2", "has_f3", "m_seen", "step", "root_keys"):
+            np.testing.assert_array_equal(sg[f], sl[f], err_msg=f)
+        assert str(sg["scheme"]) == "global" and str(sl["scheme"]) == "local"
+
+    def test_chunked_local_bitexact(self):
+        """chunk_size stays pure dispatch granularity under the local scheme."""
+        edges = erdos_renyi_stream(25, 180, seed=6)
+        kw = dict(
+            r=R, batch_size=BS, seeds=(4,), scheme="local",
+            scheme_params={"n_vertices": 25, "n_pools": 2},
+        )
+        a = TriangleCountEngine(EngineConfig(**kw))
+        run_stream(a, batches(edges, BS))
+        b = TriangleCountEngine(EngineConfig(**kw, chunk_size=3))
+        run_stream(b, batches(edges, BS))
+        sa, sb = a.snapshot(), b.snapshot()
+        for f in ("f1", "chi", "f2", "has_f3", "m_seen", "step"):
+            np.testing.assert_array_equal(sa[f], sb[f], err_msg=f)
+        np.testing.assert_array_equal(a.estimate(), b.estimate())
+
+
+class TestNaiveScheme:
+    def test_runs_through_engine(self):
+        edges = erdos_renyi_stream(15, 60, seed=2)
+        eng = TriangleCountEngine(
+            EngineConfig(r=64, batch_size=16, seeds=(0,), scheme="naive")
+        )
+        for W, nv in batches(edges, 16):
+            eng.ingest(W, nv)
+        assert eng.edges_seen()[0] == len(edges)
+        assert np.ndim(eng.estimate()[0]) == 0  # same scalar query as global
+        assert str(eng.snapshot()["scheme"]) == "naive"
+
+    def test_no_shardmap_kernel(self):
+        cfg = EngineConfig(
+            r=64, batch_size=16, scheme="naive", backend="shardmap"
+        )
+        mesh = jax.make_mesh((1,), ("data",))
+        with pytest.raises(ValueError):
+            select_backend(cfg, mesh)
+        # auto on a shardmap-shaped mesh falls back to pjit_coordinated
+        auto = EngineConfig(r=64, batch_size=16, scheme="naive")
+        assert select_backend(auto, mesh).name == "single"  # 1-device mesh
+
+
+class TestSchemeSnapshots:
+    def test_cross_scheme_restore_refused(self):
+        loc = TriangleCountEngine(EngineConfig(
+            r=64, batch_size=16, scheme="local",
+            scheme_params={"n_vertices": 8, "n_pools": 2},
+        ))
+        loc.ingest(np.array([[0, 1], [1, 2]], np.int32))
+        g = TriangleCountEngine(EngineConfig(r=64, batch_size=16))
+        with pytest.raises(SnapshotMismatch):
+            g.restore(loc.snapshot())
+
+    def test_pre_scheme_snapshot_restores_as_global(self):
+        """Snapshots written before the scheme layer carry no scheme key and
+        must keep restoring into a global engine."""
+        a = TriangleCountEngine(EngineConfig(r=64, batch_size=16, seeds=(1,)))
+        a.ingest(np.array([[0, 1], [1, 2], [0, 2]], np.int32))
+        snap = a.snapshot()
+        snap.pop("scheme")
+        b = TriangleCountEngine(EngineConfig(r=64, batch_size=16, seeds=(1,)))
+        b.restore(snap)
+        np.testing.assert_array_equal(a.estimate(), b.estimate())
+        c = TriangleCountEngine.from_snapshot(snap)
+        assert c.scheme.name == "global" and c.step == 1
+
+    def test_from_snapshot_adopts_scheme(self):
+        loc = TriangleCountEngine(EngineConfig(
+            r=64, batch_size=16, scheme="local",
+            scheme_params={"n_vertices": 8, "n_pools": 2},
+        ))
+        loc.ingest(np.array([[0, 1], [1, 2]], np.int32))
+        snap = loc.bank_snapshot()
+        # parameterized scheme: params must come from the caller
+        with pytest.raises(ValueError):
+            TriangleCountEngine.from_snapshot(snap)
+        clone = TriangleCountEngine.from_snapshot(
+            snap, scheme_params={"n_vertices": 8, "n_pools": 2}
+        )
+        assert clone.scheme.name == "local"
+        np.testing.assert_array_equal(loc.estimate(), clone.estimate())
+
+    def test_pre_scheme_checkpoint_dir_resumes(self, tmp_path):
+        """A checkpoint directory written before the scheme layer (no scheme
+        leaf in the npz) resumes through run_stream."""
+        from repro.train.checkpoint import CheckpointManager
+
+        edges = erdos_renyi_stream(20, 100, seed=4)
+        its = list(batches(edges, 16))
+        cfg = EngineConfig(r=64, batch_size=16, seeds=(3,))
+        a = TriangleCountEngine(cfg)
+        for W, nv in its[:3]:
+            a.ingest(W, nv)
+        old_snap = a.snapshot()
+        old_snap.pop("scheme")  # what a pre-upgrade engine wrote
+        ckpt = CheckpointManager(str(tmp_path))
+        ckpt.save(a.step, old_snap, {"r": 64, "batch": 16, "tenants": 1})
+
+        b = TriangleCountEngine(cfg)
+        rep = run_stream(b, iter(its), ckpt_dir=str(tmp_path))
+        assert rep.resumed_from == 3 and rep.batches == len(its) - 3
+        for W, nv in its[3:]:
+            a.ingest(W, nv)
+        np.testing.assert_array_equal(a.estimate(), b.estimate())

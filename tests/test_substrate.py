@@ -13,7 +13,7 @@ from hypothesis import given, settings, strategies as st
 from repro.models.embedding import embedding_bag
 from repro.train.checkpoint import CheckpointManager
 from repro.train.elastic import shrink_or_grow_estimators
-from repro.train.grad_comm import EFState, _quant_int8, init_ef
+from repro.train.grad_comm import EFState, _quant_int8
 from repro.train.optimizer import adafactor, adamw, sgd
 from repro.data.prefetch import PrefetchQueue, work_stealing_shards
 

@@ -1,7 +1,8 @@
-"""Tenant-sharded bank tests. The banked_pjit_* plans need >1 device, so the
-actual checks run in a subprocess with XLA_FLAGS=--xla_force_host_platform_
-device_count=8 (set *only* there, per the dry-run isolation rule); see
-tests/_bank_driver.py for what is asserted."""
+"""Tenant-sharded bank tests, parametrized over the estimator scheme. The
+banked_pjit_* plans need >1 device, so the actual checks run in a subprocess
+with XLA_FLAGS=--xla_force_host_platform_device_count=8 (set *only* there,
+per the dry-run isolation rule); see tests/_bank_driver.py for what is
+asserted per scheme."""
 import pathlib
 import subprocess
 import sys
@@ -12,9 +13,10 @@ ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 
 @pytest.mark.slow
-def test_tenant_sharded_bank():
+@pytest.mark.parametrize("scheme", ["global", "local"])
+def test_tenant_sharded_bank(scheme):
     proc = subprocess.run(
-        [sys.executable, str(ROOT / "tests" / "_bank_driver.py")],
+        [sys.executable, str(ROOT / "tests" / "_bank_driver.py"), scheme],
         capture_output=True,
         text=True,
         timeout=900,

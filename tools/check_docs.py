@@ -5,7 +5,11 @@ Checks:
      real file/directory in the repo (anchors and external URLs are skipped);
   2. docs/scaling.md names every execution plan in
      ``repro.engine.backends.BACKENDS`` — the handbook's decision table must
-     not silently fall behind the code.
+     not silently fall behind the code;
+  3. every registered estimator scheme (``repro.core.schemes.SCHEMES``)
+     appears backticked in BOTH docs/scaling.md (the plan table's scheme
+     column) and docs/paper_map.md (the scheme section) — registering a
+     scheme is a documentation contract.
 
   PYTHONPATH=src python tools/check_docs.py
 """
@@ -56,13 +60,30 @@ def check_backend_coverage() -> list[str]:
     ]
 
 
+def check_scheme_coverage() -> list[str]:
+    sys.path.insert(0, str(ROOT / "src"))
+    from repro.core.schemes import SCHEMES
+
+    # backticked occurrence, not bare word: scheme names ("local", "global")
+    # are everyday words, so only `name` counts as documentation
+    errors = []
+    for doc in ("scaling.md", "paper_map.md"):
+        text = (ROOT / "docs" / doc).read_text()
+        errors += [
+            f"docs/{doc}: registered scheme `{name}` is not documented"
+            for name in SCHEMES
+            if f"`{name}`" not in text
+        ]
+    return errors
+
+
 def main() -> int:
-    errors = check_links() + check_backend_coverage()
+    errors = check_links() + check_backend_coverage() + check_scheme_coverage()
     for e in errors:
         print(e, file=sys.stderr)
     if not errors:
         print(f"docs OK: {len(doc_files())} files, links resolve, "
-              "all backends documented")
+              "all backends and schemes documented")
     return 1 if errors else 0
 
 
