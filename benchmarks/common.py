@@ -1,9 +1,54 @@
 """Shared benchmark helpers."""
 from __future__ import annotations
 
+import json
+import os
+import sys
 import time
 
 import jax
+
+
+def section_meta(smoke: bool, mesh=None) -> dict:
+    """Per-section run context every BENCH_streaming.json section carries —
+    one definition so the sections cannot drift field-by-field."""
+    return {
+        "smoke": smoke,
+        "device_count": jax.device_count(),
+        "mesh": dict(mesh.shape) if mesh is not None else None,
+    }
+
+
+def merge_rows(old: list, new: list, key) -> list:
+    """New rows replace old rows with the same key; everything else stays."""
+    merged = {key(r): r for r in old}
+    for r in new:
+        merged[key(r)] = r
+    return [merged[k] for k in sorted(merged, key=str)]
+
+
+def merge_section(
+    path: str, section: str, rows: list, row_key, meta: dict
+) -> None:
+    """Merge ``rows`` into one named section of a trajectory JSON record.
+
+    The single section-merge every BENCH_streaming.json writer shares: load
+    the existing payload (so every OTHER top-level key — other sections'
+    committed grids — survives untouched), replace ``section`` with ``meta``
+    plus the old and new rows merged by ``row_key``, and write back. This is
+    what makes the never-clobber contract structural instead of a
+    per-writer convention."""
+    payload = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            payload = json.load(f)
+    payload.setdefault("schema", "repro/streaming-throughput/v1")
+    old_rows = payload.get(section, {}).get("results", [])
+    payload[section] = {**meta, "results": merge_rows(old_rows, rows, row_key)}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"# merged {section} grid into {path}", file=sys.stderr)
 
 
 def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:

@@ -22,8 +22,6 @@ overhead instead of multiplying it. Two surfaces:
 from __future__ import annotations
 
 import argparse
-import json
-import os
 import sys
 import time
 
@@ -161,38 +159,23 @@ def row_key(row: dict) -> tuple:
 def grid_section(rows: list[dict], smoke: bool, mesh=None) -> dict:
     """The 'multistream' section of BENCH_streaming.json — the single shape
     both writers (merge_json here, benchmarks/run.py::write_json) emit."""
-    import jax
+    from benchmarks.common import section_meta
 
-    return {
-        "smoke": smoke,
-        "device_count": jax.device_count(),
-        "mesh": dict(mesh.shape) if mesh is not None else None,
-        "results": rows,
-    }
+    return {**section_meta(smoke, mesh), "results": rows}
 
 
 def merge_json(path: str, rows: list[dict], smoke: bool, mesh=None) -> None:
     """Put the grid into the trajectory record next to the edges/s grid.
 
-    Only the ``multistream`` section is touched, and its rows merge keyed by
-    (scheme, tenants, backend) — landing one scheme's grid keeps the other
-    schemes' committed rows; the (scheme, r, batch, chunk) grid and its
-    top-level metadata stay whatever run recorded them."""
-    from benchmarks.run import merge_rows
+    Only the ``multistream`` section is touched (``benchmarks.common
+    .merge_section`` carries every other top-level key verbatim), and its
+    rows merge keyed by (scheme, tenants, backend) — landing one scheme's
+    grid keeps the other schemes' committed rows; the (scheme, r, batch,
+    chunk) grid and its top-level metadata stay whatever run recorded
+    them."""
+    from benchmarks.common import merge_section, section_meta
 
-    payload = {}
-    if os.path.exists(path):
-        with open(path) as f:
-            payload = json.load(f)
-    payload.setdefault("schema", "repro/streaming-throughput/v1")
-    old_rows = payload.get("multistream", {}).get("results", [])
-    payload["multistream"] = grid_section(
-        merge_rows(old_rows, rows, row_key), smoke, mesh=mesh
-    )
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=2)
-        f.write("\n")
-    print(f"# merged multistream grid into {path}", file=sys.stderr)
+    merge_section(path, "multistream", rows, row_key, section_meta(smoke, mesh))
 
 
 def main(r: int = 100_000, bs: int = 4096) -> list[str]:

@@ -1,0 +1,221 @@
+"""Query throughput under concurrent ingest — the serving benchmark.
+
+The serving story ("millions of users polling rolling counts") is bounded by
+how fast ``estimate()`` answers *while the same engine keeps ingesting*. This
+bench drives that loop: after every ingested batch it answers one batched
+multi-tenant query plus one per-tenant poll per tenant, and reports
+queries/s alongside the edges/s the ingest sustained underneath. Each
+(scheme, tenants, backend) combination runs both query paths:
+
+  * ``device`` — the device-resident sharded query (per-shard partial
+    reductions + fixed-order combine, ``plan.build_estimate``) with the
+    engine's per-step cache serving the per-tenant polls;
+  * ``gather`` — the gather-to-host oracle (``estimate(gather=True)``),
+    which materializes the O(T * r) bank on host for EVERY query — the
+    pre-query-path serving cost, kept as the baseline row.
+
+``--json BENCH_streaming.json`` merges rows into the trajectory record under
+the ``query_serve`` key — its own section, keyed by
+(scheme, tenants, backend, path, r, batch, smoke), so reruns never clobber
+the ingest grids (``results`` / ``multistream`` stay untouched).
+
+  PYTHONPATH=src python -m benchmarks.query_serve --host-devices 4 \
+      --mesh tenants=2,estimators=2 --json BENCH_streaming.json
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+if __name__ == "__main__":
+    # must run before any jax device query (see repro.launch._env)
+    from repro.launch._env import apply_host_devices
+
+    apply_host_devices(sys.argv)
+
+from repro.data.graph_stream import barabasi_albert_stream, batches
+from repro.engine import EngineConfig, TriangleCountEngine
+
+QUERY_PATHS = ("device", "gather")
+
+
+def _run_serve(
+    T: int,
+    r: int,
+    edges,
+    bs: int,
+    backend: str,
+    mesh,
+    path: str,
+    tenant_axis: str = "tenants",
+    scheme: str = "global",
+    scheme_params=None,
+):
+    """One serving pass: ingest the stream, answering (1 batched + T
+    per-tenant) queries after every batch. Returns the row dict, or None when
+    this plan has no device-resident program (nothing to measure)."""
+    eng = TriangleCountEngine(
+        EngineConfig(r=r, batch_size=bs, n_tenants=T,
+                     seeds=tuple(range(T)), backend=backend,
+                     tenant_axis=tenant_axis, scheme=scheme,
+                     scheme_params=scheme_params),
+        mesh=mesh,
+    )
+    gather = path == "gather"
+    if not gather and eng._estimate_device is None:
+        return None  # unsharded plan: estimate() IS the gather program
+    it = list(batches(edges, bs))
+    eng.ingest(*it[0])  # compile ingest + both query programs
+    eng.estimate(gather=gather)
+    eng.estimate()
+    queries = 0
+    hits0 = eng.diag.query_cache_hits  # exclude warmup hits from the row
+    t0 = time.perf_counter()
+    for W, nv in it[1:]:
+        eng.ingest(W, nv)
+        if gather:
+            # pre-query-path serving: every query re-gathers the bank
+            eng.estimate(gather=True)
+            queries += 1
+            for t in range(T):
+                eng.estimate(gather=True)
+                queries += 1
+        else:
+            eng.estimate()  # one device-resident dispatch, cached per step
+            queries += 1
+            for t in range(T):
+                eng.estimate_tenant(t)  # served from the per-step cache
+                queries += 1
+    eng.sync()
+    dt = time.perf_counter() - t0
+    m = sum(nv for _, nv in it[1:])
+    return {
+        "scheme": scheme,
+        "tenants": T,
+        "backend": eng.plan.name,
+        "path": path,
+        "r": r,
+        "batch": bs,
+        "edges": m,
+        "queries": queries,
+        "cache_hits": eng.diag.query_cache_hits - hits0,  # timed loop only
+        "mesh": dict(mesh.shape) if mesh is not None else None,
+        "seconds": round(dt, 6),
+        "queries_per_s": round(queries / dt, 1),
+        "edges_per_s": round(T * m / dt, 1),
+    }
+
+
+def bench_grid(
+    *,
+    tenants=(2, 4),
+    r: int = 16384,
+    bs: int = 1024,
+    nodes: int = 5_000,
+    degree: int = 8,
+    mesh=None,
+    tenant_axis: str = "tenants",
+    scheme: str = "global",
+    smoke: bool = False,
+) -> list[dict]:
+    """(tenants x backend x query-path) -> queries/s under concurrent ingest."""
+    from benchmarks.multistream import _available_backends
+
+    if smoke:
+        tenants, r, nodes = (2,), 2048, 2000
+    scheme_params = (
+        (("n_pools", 8), ("n_vertices", nodes)) if scheme == "local" else None
+    )
+    edges = barabasi_albert_stream(nodes, degree, seed=0)
+    rows = []
+    for T in tenants:
+        for backend in _available_backends(T, r, bs, mesh, tenant_axis):
+            for path in QUERY_PATHS:
+                row = _run_serve(
+                    T, r, edges, bs, backend, mesh, path,
+                    tenant_axis=tenant_axis, scheme=scheme,
+                    scheme_params=scheme_params,
+                )
+                if row is None:
+                    continue
+                row["smoke"] = smoke
+                rows.append(row)
+                print(
+                    f"# scheme={scheme} tenants={T} backend={row['backend']} "
+                    f"path={path}: {row['queries_per_s']:.0f} queries/s over "
+                    f"{row['edges_per_s']:.0f} edges/s ingest "
+                    f"({row['cache_hits']} cache hits)",
+                    flush=True,
+                )
+    return rows
+
+
+def row_key(row: dict) -> tuple:
+    """Identity of a query-serve row; smoke participates so CI smoke runs
+    never replace committed full-scale rows."""
+    return (
+        row.get("scheme", "global"),
+        row["tenants"],
+        row["backend"],
+        row["path"],
+        row.get("r", 0),
+        row.get("batch", 0),
+        bool(row.get("smoke", False)),
+    )
+
+
+def merge_json(path: str, rows: list[dict], smoke: bool, mesh=None) -> None:
+    """Merge the grid under the ``query_serve`` key of the trajectory JSON.
+
+    Only that section is touched (``benchmarks.common.merge_section``
+    carries every other top-level key verbatim): the (scheme, r, batch,
+    chunk) ingest grid in ``results`` and the ``multistream`` bank grid
+    keep whatever run recorded them, and within the section rows merge by
+    ``row_key``."""
+    from benchmarks.common import merge_section, section_meta
+
+    merge_section(path, "query_serve", rows, row_key, section_meta(smoke, mesh))
+
+
+def main() -> list[str]:
+    """CSV mode for benchmarks.run: the single-device serving numbers."""
+    from benchmarks.common import csv_row
+
+    edges = barabasi_albert_stream(5_000, 8, seed=0)
+    out = []
+    for T in (1, 4):
+        row = _run_serve(T, 16384, edges, 1024, "single", None, "gather")
+        out.append(csv_row(
+            f"query_serve/T{T}", row["seconds"] * 1e6,
+            f"queries_per_s={row['queries_per_s']:.0f};"
+            f"edges_per_s={row['edges_per_s']:.0f};r={row['r']}"))
+        print(out[-1], flush=True)
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="",
+                    help="merge the query grid into this trajectory JSON "
+                         "(e.g. BENCH_streaming.json)")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--mesh", default="",
+                    help="device mesh spec, e.g. 'tenants=2,estimators=2'")
+    ap.add_argument("--tenant-axis", default="tenants")
+    ap.add_argument("--scheme", default="global",
+                    help="estimator scheme for the grid rows")
+    ap.add_argument("--host-devices", type=int, default=0,
+                    help="force N CPU host devices for mesh testing")
+    args = ap.parse_args()
+    from repro.launch.mesh import make_stream_mesh
+
+    mesh = make_stream_mesh(args.mesh)
+    grid = bench_grid(
+        mesh=mesh,
+        tenant_axis=args.tenant_axis,
+        scheme=args.scheme,
+        smoke=args.smoke,
+    )
+    if args.json:
+        merge_json(args.json, grid, args.smoke, mesh=mesh)

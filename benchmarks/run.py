@@ -14,7 +14,10 @@ and **merges** into an existing record keyed by those row coordinates, so a
 rerun of one scheme's grid never clobbers another scheme's committed rows;
 ``--smoke`` shrinks both grids to CI scale.
 ``python -m benchmarks.multistream --mesh ...`` re-merges the bank grid with
-tenant-sharded plans included.
+tenant-sharded plans included, and ``python -m benchmarks.query_serve
+--mesh ... --json ...`` merges the queries/s-under-ingest serving grid under
+its own ``query_serve`` key (device-resident vs gather-to-host query paths)
+without touching the ingest rows.
 """
 from __future__ import annotations
 
@@ -24,6 +27,8 @@ import os
 import platform
 import sys
 import time
+
+from benchmarks.common import merge_rows  # write_json merges the two grids it owns
 
 
 def _row_key(row: dict) -> tuple:
@@ -40,14 +45,6 @@ def _row_key(row: dict) -> tuple:
     )
 
 
-def merge_rows(old: list, new: list, key) -> list:
-    """New rows replace old rows with the same key; everything else stays."""
-    merged = {key(r): r for r in old}
-    for r in new:
-        merged[key(r)] = r
-    return [merged[k] for k in sorted(merged, key=str)]
-
-
 def write_json(path: str, smoke: bool) -> None:
     import jax
 
@@ -60,6 +57,10 @@ def write_json(path: str, smoke: bool) -> None:
     results = throughput.bench_grid(smoke=smoke)
     ms_rows = multistream.bench_grid(smoke=smoke)
     payload = {
+        # every top-level key this writer does not own (e.g. the
+        # `query_serve` serving grid) is carried over verbatim — the
+        # never-clobber contract covers whole sections, not just rows
+        **old,
         "schema": "repro/streaming-throughput/v1",
         "smoke": smoke,
         "backend": jax.default_backend(),
@@ -119,6 +120,7 @@ def main() -> None:
         breakdown,
         kernels,
         multistream,
+        query_serve,
         schemes,
         throughput,
     )
@@ -130,6 +132,7 @@ def main() -> None:
         "breakdown": breakdown.main,    # paper Figure 5
         "kernels": kernels.main,        # kernel contracts + bytes
         "multistream": multistream.main,  # engine multi-tenant bank
+        "query_serve": query_serve.main,  # queries/s under concurrent ingest
     }
     print("name,us_per_call,derived")
     for name, fn in benches.items():

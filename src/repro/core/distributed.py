@@ -49,6 +49,16 @@ assert zero overflow at the sizes exercised.
   for why the build itself stays replicated).
   ``make_banked_pjit_chunk_update`` is the K-batch fused variant
   (``scheme.chunk_update`` under the same shardings).
+
+* ``make_banked_estimate(mesh, r, tenant_axis)`` / ``make_sharded_estimate``
+  — the *device-resident query path*: answer ``estimate()`` where the state
+  lives instead of gathering the bank to host. Each device runs the
+  scheme's ``partial_estimate`` over its shard (group sums for the scalar
+  schemes, pool-local attribution scatters for ``local``), all_gathers the
+  fixed-shape partials across the estimator axes only (axis-index order),
+  and applies ``scheme.combine_estimates`` — a fixed-order combine that is
+  bit-identical to the gathered oracle (see "Shardable decomposition" in
+  ``repro.core.estimate``). Only the O(T)-sized answer leaves the mesh.
 """
 from __future__ import annotations
 
@@ -300,6 +310,110 @@ def make_banked_pjit_chunk_update(
         in_shardings=(state_sh, w_in, t_rep, t_rep, rep),
         out_shardings=state_sh,
         donate_argnums=(0,),
+    )
+
+
+# --------------------------------------------------------------------------
+# device-resident query path (sharded estimates)
+# --------------------------------------------------------------------------
+def _estimate_out_ndim(scheme: EstimatorScheme, r: int, groups: int) -> int:
+    """ndim of one tenant's estimate (0 for scalar schemes, 1 for local)."""
+    shaped = jax.eval_shape(
+        lambda: scheme.estimate(scheme.init_state(r), groups=groups)
+    )
+    return len(shaped.shape)
+
+
+def make_banked_estimate(
+    mesh,
+    r: int,
+    tenant_axis: str = "tenants",
+    scheme: EstimatorScheme = GLOBAL,
+    groups: int = 9,
+):
+    """Device-resident query over a tenant-sharded bank: jit(shard_map) that
+    answers ``f(state_bank) -> (n_tenants, ...)`` estimates WITHOUT gathering
+    the bank — only the (tenants, g)- or (tenants, n_vertices)-sized partials
+    move, never the O(T * r) state.
+
+    Each device reduces its own (tenant-shard, estimator-shard) block with
+    ``scheme.partial_estimate`` (group sums for ``global``/``naive``,
+    pool-local attribution scatters for ``local``), all_gathers the
+    fixed-shape partials within its tenant group (deterministic axis-index
+    order), and runs ``scheme.combine_estimates`` — the fixed-order combine
+    that reproduces the gathered oracle bit for bit (see "Shardable
+    decomposition" in ``repro.core.estimate``). The tenant axis stays
+    collective-free; the output shards over it.
+    """
+    scheme = resolve_scheme(scheme)
+    if not scheme.shardable_estimate:
+        raise ValueError(
+            f"scheme {scheme.name!r} has no shardable estimate stage; "
+            "query via the gather-to-host path instead"
+        )
+    _, e_axes, e_size = split_tenant_axis(mesh, tenant_axis)
+    if r % e_size:
+        raise ValueError(
+            f"r={r} must divide over the estimator axes (product {e_size})"
+        )
+    r_local = r // e_size
+    state_spec = scheme_state_specs(scheme, e_axes, tenant_axis=tenant_axis)
+    out_nd = _estimate_out_ndim(scheme, r, groups)
+    out_spec = P(tenant_axis, *((None,) * out_nd))
+
+    def query(bank):
+        off = (
+            jax.lax.axis_index(e_axes) * r_local if e_axes else jnp.int32(0)
+        )
+        partial = jax.vmap(
+            lambda st: scheme.partial_estimate(
+                st, offset=off, r=r, groups=groups
+            )
+        )(bank)  # (T_local, *partial_shape) — fixed shape per scheme
+        if e_axes and e_size > 1:
+            parts = jax.lax.all_gather(partial, e_axes)  # (e, T_local, ...)
+        else:
+            parts = partial[None]
+        return jax.vmap(
+            lambda p: scheme.combine_estimates(p, r=r, groups=groups),
+            in_axes=1,
+        )(parts)  # (T_local, *out_shape), identical on every group member
+
+    return jax.jit(
+        _shard_map(query, mesh, in_specs=(state_spec,), out_specs=out_spec)
+    )
+
+
+def make_sharded_estimate(
+    mesh, r: int, scheme: EstimatorScheme = GLOBAL, groups: int = 9
+):
+    """Device-resident query for the single-tenant sharded plans (pjit_*,
+    shardmap): estimator dim sharded over ALL mesh axes, output replicated.
+    Same partial/combine contract as ``make_banked_estimate``; returns
+    ``f(state) -> estimate`` (no tenant axis)."""
+    scheme = resolve_scheme(scheme)
+    if not scheme.shardable_estimate:
+        raise ValueError(
+            f"scheme {scheme.name!r} has no shardable estimate stage; "
+            "query via the gather-to-host path instead"
+        )
+    axes = tuple(mesh.axis_names)
+    p = mesh.size
+    if r % p:
+        raise ValueError(f"r={r} must divide the mesh size {p}")
+    r_local = r // p
+    state_spec = scheme_state_specs(scheme, axes)
+    out_nd = _estimate_out_ndim(scheme, r, groups)
+    out_spec = P(*((None,) * out_nd))
+
+    def query(state):
+        off = jax.lax.axis_index(axes) * r_local
+        partial = scheme.partial_estimate(state, offset=off, r=r, groups=groups)
+        parts = jax.lax.all_gather(partial, axes) if p > 1 else partial[None]
+        return scheme.combine_estimates(parts, r=r, groups=groups)
+
+    return jax.jit(
+        _shard_map(query, mesh, in_specs=(state_spec,), out_specs=out_spec)
     )
 
 

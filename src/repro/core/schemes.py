@@ -14,6 +14,12 @@ makes a scheme a one-file addition instead:
     dimension. ``repro.core.distributed`` and ``repro.engine.backends``
     *derive* mesh shardings for any scheme's state pytree from those roles
     instead of hand-constructing ``EstimatorState``-of-``NamedSharding``s.
+    Schemes with ``shardable_estimate = True`` additionally expose the
+    query as a per-shard ``partial_estimate`` + fixed-order
+    ``combine_estimates`` pair, which is what lets sharded engines answer
+    ``estimate()`` device-resident (``make_banked_estimate``) instead of
+    gathering the bank to host — group sums for ``global``/``naive``,
+    pool-local attribution scatters for ``local``.
 
 Axis roles (the vocabulary the sharding derivation understands):
   * ``"estimator"``  — leading axis is the r-estimator axis (e.g. ``chi``);
@@ -70,7 +76,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.bulk import bulk_update_all, bulk_update_chunk
-from repro.core.estimate import coarse_estimates, estimate
+from repro.core.estimate import (
+    coarse_estimates,
+    combine_group_sums,
+    estimate,
+    partial_group_sums,
+)
 from repro.core.state import EstimatorState, init_state
 
 # ---------------------------------------------------------------------------
@@ -147,6 +158,38 @@ class EstimatorScheme:
     def estimate(self, state, groups: int = 9) -> jax.Array:
         raise NotImplementedError
 
+    # -- shardable query (the device-resident path) -------------------------
+    # A scheme whose estimate factors through a per-shard partial reduction
+    # sets shardable_estimate = True and implements the pair below; the
+    # execution plans then answer queries where the state lives
+    # (repro.core.distributed.make_banked_estimate / make_sharded_estimate)
+    # instead of gathering the bank to host. The contract:
+    #
+    #   estimate(state, groups)
+    #     == combine_estimates(stack([partial_estimate(shard_i, offset_i)
+    #                                 for contiguous shards i in order]))
+    #
+    # bit for bit on integer-exact float64 coarse estimates (see "Shardable
+    # decomposition" in repro.core.estimate), with partial_estimate returning
+    # a FIXED shape independent of the shard so partials stack/all_gather.
+    shardable_estimate: bool = False
+
+    def partial_estimate(self, state, *, offset, r: int, groups: int = 9):
+        """Per-shard partial reduction over the contiguous estimator slice
+        ``[offset, offset + r_local)`` of an r-estimator bank. ``offset`` may
+        be a traced scalar (``axis_index * r_local`` on device shards)."""
+        raise NotImplementedError(
+            f"scheme {self.name!r} has no shardable estimate stage"
+        )
+
+    def combine_estimates(self, partials, *, r: int, groups: int = 9):
+        """Final estimate from ``(n_shards, ...)`` stacked partials, reduced
+        in shard-index order (the fixed combine order every mesh layout
+        shares)."""
+        raise NotImplementedError(
+            f"scheme {self.name!r} has no shardable estimate stage"
+        )
+
     def validate(self, r: int) -> None:
         """Raise ValueError if this scheme cannot run with ``r`` estimators.
 
@@ -160,12 +203,19 @@ class GlobalScheme(EstimatorScheme):
     """The paper's query: one global triangle count per tenant (Thm 3.4)."""
 
     name = "global"
+    shardable_estimate = True  # group sums factor over contiguous shards
 
     def chunk_update(self, state, Ws, n_valids, key, step0=0):
         return bulk_update_chunk(state, Ws, n_valids, key, step0)
 
     def estimate(self, state, groups: int = 9) -> jax.Array:
         return estimate(state, groups)
+
+    def partial_estimate(self, state, *, offset, r: int, groups: int = 9):
+        return partial_group_sums(coarse_estimates(state), offset, r, groups)
+
+    def combine_estimates(self, partials, *, r: int, groups: int = 9):
+        return combine_group_sums(partials, r, groups)
 
 
 class NaiveScheme(GlobalScheme):
@@ -216,20 +266,26 @@ class LocalScheme(EstimatorScheme):
                 f"n_pools={self.n_pools}"
             )
 
-    def estimate(self, state, groups: int = 9) -> jax.Array:
-        del groups  # see class docstring: pool mean, not median-of-means
-        r = state.chi.shape[0]
-        self.validate(r)
-        r_pool = r // self.n_pools
+    shardable_estimate = True  # the attribution scatter is shard-local
 
-        x = coarse_estimates(state)  # (r,) f64, E[X] = tau per estimator
+    def _attribution_sums(self, state, offset, r: int) -> jax.Array:
+        """(n_vertices,) float64 pool-local attribution sums over the
+        contiguous estimator slice held in ``state`` (global indices
+        ``offset + i`` — pool membership is a function of the global index,
+        so a shard straddling a pool boundary attributes each estimator to
+        its own pool regardless of where the shard cut falls)."""
+        r_pool = r // self.n_pools
+        x = coarse_estimates(state)  # (r_local,) f64, E[X] = tau each
         u, v = state.f1[:, 0], state.f1[:, 1]
         a, b = state.f2[:, 0], state.f2[:, 1]
         # the sampled triangle's third vertex: f2's endpoint not shared with f1
         o2 = jnp.where((a == u) | (a == v), b, a)
-        tri = jnp.stack([u, v, o2])  # (3, r) — the triangle's vertex ids
+        tri = jnp.stack([u, v, o2])  # (3, r_local) — the triangle's vertices
 
-        pool = jnp.arange(r, dtype=jnp.int32) // r_pool
+        r_local = state.chi.shape[0]
+        pool = (
+            (offset + jnp.arange(r_local, dtype=jnp.int32)) // r_pool
+        ).astype(jnp.int32)
         closed = state.has_f3 & (u >= 0) & (a >= 0)
         take = (
             closed[None, :]
@@ -238,14 +294,27 @@ class LocalScheme(EstimatorScheme):
             & (vertex_pool(tri, self.n_pools) == pool[None, :])
         )
         vert = jnp.where(take, tri, self.n_vertices)  # out of bounds -> drop
-        sums = (
+        return (
             jnp.zeros((self.n_vertices,), jnp.float64)
             .at[vert]
             .add(jnp.where(take, x[None, :], 0.0), mode="drop")
         )
+
+    def estimate(self, state, groups: int = 9) -> jax.Array:
+        del groups  # see class docstring: pool mean, not median-of-means
+        r = state.chi.shape[0]
+        self.validate(r)
         # vertex v's pool contributes exactly r_pool estimators (pools are
         # contiguous index blocks), so the unbiased estimate is sum / r_pool
-        return sums / r_pool
+        return self._attribution_sums(state, 0, r) / (r // self.n_pools)
+
+    def partial_estimate(self, state, *, offset, r: int, groups: int = 9):
+        del groups
+        return self._attribution_sums(state, offset, r)
+
+    def combine_estimates(self, partials, *, r: int, groups: int = 9):
+        del groups
+        return jnp.sum(partials, axis=0) / (r // self.n_pools)
 
 
 # ---------------------------------------------------------------------------

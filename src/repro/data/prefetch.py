@@ -37,7 +37,15 @@ class PrefetchQueue:
         self.deadline_s = deadline_s
         self.backup = None
         self.stale_steps = 0
+        self.late_drops = 0  # late batches discarded after a backup stood in
+        # stand-ins whose awaited item turned out to be end-of-stream (the
+        # straggling next() raised StopIteration instead of yielding): the
+        # consumer already ingested one batch the source never produced.
+        # Unavoidable — at miss time "slow item" and "slow end" are
+        # indistinguishable — but recorded so the drift is observable.
+        self.unmatched_standins = 0
         self.done = False
+        self._drop_next = 0  # pending late items to discard on arrival
         self._thread = threading.Thread(
             target=self._produce, args=(source,), daemon=True
         )
@@ -52,19 +60,56 @@ class PrefetchQueue:
             self.q.put(_DONE)
 
     def get(self):
-        """Next batch, or the backup batch on deadline miss (stale += 1)."""
-        try:
-            item = self.q.get(timeout=self.deadline_s)
-        except queue.Empty:
-            if self.backup is None:
-                item = self.q.get()  # first batch: nothing to fall back on
-            else:
-                self.stale_steps += 1
-                return self.backup, True
-        if item is _DONE:
-            raise StopIteration
-        self.backup = item
-        return item, False
+        """Next batch, or the backup batch on deadline miss (stale += 1).
+
+        A deadline miss substitutes the backup batch *in place of* the late
+        one, so when the late item finally lands in the queue it is a
+        duplicate the stream already accounted for — it is dropped on
+        arrival (``late_drops``). Without the drop the consumer would ingest
+        the backup AND later replay the real batch, so the stream position
+        (``m_seen``) would drift one batch long per miss.
+
+        At most ONE stand-in per late item: while a dropped-on-arrival item
+        is still outstanding, the next ``get`` waits for it without a
+        deadline instead of echoing the backup again — consecutive misses
+        are all gated on the SAME straggler, and re-echoing would mint
+        stand-ins for source items that may not exist (an unbounded drift at
+        end of stream). Staleness per source item is therefore bounded by
+        one backup batch, and total batches delivered (real + stale) equals
+        the source length whenever the awaited item actually arrives. The
+        one unfixable corner: a miss whose "late item" turns out to be the
+        END of the stream (the final ``next()`` was slow to raise
+        StopIteration) has already delivered a stand-in for an item that
+        never existed — that +1 drift is counted in ``unmatched_standins``
+        (surfaced as ``StreamReport.phantom_batches`` by the service loop).
+        """
+        while True:
+            try:
+                # no deadline while a late item is outstanding: its stand-in
+                # was already delivered, so there is nothing fresh to echo
+                timeout = self.deadline_s if not self._drop_next else None
+                item = self.q.get(timeout=timeout)
+            except queue.Empty:
+                if self.backup is None:
+                    item = self.q.get()  # first batch: nothing to fall back on
+                else:
+                    self.stale_steps += 1
+                    self._drop_next += 1  # the late item is now a duplicate
+                    return self.backup, True
+            if item is _DONE:
+                if self._drop_next:
+                    # the awaited "late item" was actually end-of-stream:
+                    # its stand-in counted a batch the source never produced
+                    self.unmatched_standins += self._drop_next
+                    self._drop_next = 0
+                raise StopIteration
+            if self._drop_next:
+                # the backup already stood in for this batch — discard it
+                self._drop_next -= 1
+                self.late_drops += 1
+                continue
+            self.backup = item
+            return item, False
 
 
 def stack_batches(
@@ -114,8 +159,18 @@ def superbatches(
 def work_stealing_shards(
     shard_fns: list[Callable[[], Iterator]],
 ) -> Iterator:
-    """Round-robin over per-file shard iterators, skipping exhausted/slow ones
-    (host-level work stealing over file shards)."""
+    """Strict round-robin over per-file shard iterators, dropping a shard
+    from the rotation only when it is **exhausted** (``StopIteration``).
+
+    This is *exhaustion-only* skipping, not latency-based work stealing: a
+    slow shard is still waited on every rotation (``next()`` blocks), so one
+    straggling file gates the merged stream. Wrap the merged iterator in
+    ``PrefetchQueue(deadline_s=...)`` for bounded-staleness straggler
+    tolerance; this helper only load-balances shard *lengths* (short shards
+    leave the rotation early and the rest keep yielding). The pinned
+    behavior — interleaving order and blocking on slow shards — is
+    ``tests/test_prefetch.py::TestWorkStealing``.
+    """
     iters = [fn() for fn in shard_fns]
     live = list(range(len(iters)))
     while live:

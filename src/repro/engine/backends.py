@@ -40,7 +40,12 @@ Every plan is **scheme-generic**: the builders resolve
 ``EngineConfig.scheme`` through ``repro.core.schemes`` and jit the scheme's
 own update, with state shardings derived from the scheme's axis roles
 (``repro.core.distributed.scheme_state_sharding``) — no plan references state
-fields by name. The one restriction: ``shardmap``'s routed-multisearch kernel
+fields by name. Sharded plans also carry a ``build_estimate`` builder — the
+device-resident query program (``make_banked_estimate`` /
+``make_sharded_estimate``) the engine prefers over gathering the bank to
+host; it is None exactly when the scheme has no shardable estimate stage
+(or r does not divide the mesh), in which case ``estimate()`` keeps the
+gather path. The one restriction: ``shardmap``'s routed-multisearch kernel
 hardcodes the paper's NBSI update, so schemes with a different update
 (``update_kind != "nbsi"``, i.e. ``naive``) fall back to ``pjit_coordinated``
 under "auto" and are rejected when named explicitly.
@@ -86,6 +91,12 @@ class BackendPlan:
     # sharded plans upload host->shards once instead of host->device 0->reshard
     batch_w_sharding: Optional[Callable] = None
     chunk_w_sharding: Optional[Callable] = None
+    # (config, mesh) -> jitted device-resident query (state -> estimates), or
+    # None when this (plan, scheme, shape) combination must answer queries by
+    # gathering the bank to host. Sharded plans set it so estimate() runs
+    # where the state lives (repro.core.distributed.make_banked_estimate /
+    # make_sharded_estimate); the gather path stays available as the oracle.
+    build_estimate: Optional[Callable] = None
 
 
 def _tenant_axis(config) -> str:
@@ -184,6 +195,34 @@ def _banked_chunk_w_sharding(w_mode: str):
     return f
 
 
+def _build_banked_estimate(config, mesh) -> Optional[Callable]:
+    from repro.core.distributed import make_banked_estimate
+
+    scheme = config_scheme(config)
+    if not scheme.shardable_estimate:
+        return None  # estimate() falls back to the gather-to-host oracle
+    return make_banked_estimate(
+        mesh,
+        config.r,
+        tenant_axis=_tenant_axis(config),
+        scheme=scheme,
+        groups=config.groups,
+    )
+
+
+def _build_sharded_estimate(config, mesh) -> Optional[Callable]:
+    from repro.core.distributed import make_sharded_estimate
+
+    scheme = config_scheme(config)
+    # the pjit plans tolerate r not dividing the mesh (XLA pads); the
+    # shard_map query does not — gather-to-host covers that corner
+    if not scheme.shardable_estimate or config.r % _mesh_size(mesh):
+        return None
+    return make_sharded_estimate(
+        mesh, config.r, scheme=scheme, groups=config.groups
+    )
+
+
 def _build_shardmap(config, mesh) -> Callable:
     from repro.core.distributed import make_coordinated_update
 
@@ -206,6 +245,7 @@ def _banked_plan(w_mode: str) -> BackendPlan:
         bank_sharding=_banked_sharding,
         batch_w_sharding=_banked_batch_w_sharding(w_mode),
         chunk_w_sharding=_banked_chunk_w_sharding(w_mode),
+        build_estimate=_build_banked_estimate,
     )
 
 
@@ -214,12 +254,17 @@ _PLANS = {
         "single", True, False, _build_single, _build_single_chunk
     ),
     "pjit_independent": BackendPlan(
-        "pjit_independent", False, False, _build_pjit("independent")
+        "pjit_independent", False, False, _build_pjit("independent"),
+        build_estimate=_build_sharded_estimate,
     ),
     "pjit_coordinated": BackendPlan(
-        "pjit_coordinated", False, False, _build_pjit("coordinated_xla")
+        "pjit_coordinated", False, False, _build_pjit("coordinated_xla"),
+        build_estimate=_build_sharded_estimate,
     ),
-    "shardmap": BackendPlan("shardmap", False, True, _build_shardmap),
+    "shardmap": BackendPlan(
+        "shardmap", False, True, _build_shardmap,
+        build_estimate=_build_sharded_estimate,
+    ),
     "banked_pjit_independent": _banked_plan("independent"),
     "banked_pjit_coordinated": _banked_plan("coordinated_xla"),
 }

@@ -7,7 +7,13 @@ one-shot script:
   * ``ingest(W)`` incorporates one batch of edges (fixed batch shape -> one
     compiled program for the whole stream, however long it runs).
   * ``estimate()`` answers a rolling median-of-means query at any point
-    mid-stream without disturbing ingestion state.
+    mid-stream without disturbing ingestion state. On sharded plans the
+    query runs **device-resident** (per-shard partial reductions + a
+    fixed-order combine — only the O(T) answer reaches host, never the
+    O(T * r) bank); ``estimate(gather=True)`` forces the gather-to-host
+    oracle it is asserted bit-identical against. Answers are cached per
+    ``step`` so repeated queries between ingests cost one dispatch total;
+    ingest and restore invalidate the cache.
   * ``snapshot()`` / ``restore()`` round-trip the complete engine state
     (estimators + RNG cursor) through host memory or a CheckpointManager, so
     a killed process resumes bit-for-bit.
@@ -162,6 +168,12 @@ class EngineDiagnostics:
     overflow_batches: int = 0  # shardmap batches that reported bucket overflow
     capacity_escalations: int = 0  # recompiles triggered by overflow
     backend: str = ""
+    queries_answered: int = 0  # estimate() calls (any path)
+    query_cache_hits: int = 0  # answered from the per-step estimate cache
+    # overflow scalars from a pre-restore stream discarded by restore() —
+    # they describe batches the restored state never saw, so draining them
+    # would trigger a bogus capacity escalation (and recompile)
+    pending_overflow_dropped: int = 0
 
 
 class SnapshotMismatch(ValueError):
@@ -207,11 +219,25 @@ class TriangleCountEngine:
             [jax.random.PRNGKey(s) for s in config.tenant_seeds()]
         )
         self._state = self._init_bank()
-        # per-tenant estimate under one jit; groups is static
+        # per-tenant estimate under one jit; groups is static. This is the
+        # gather-to-host path: always built, because it is the ORACLE the
+        # device-resident query is asserted against (estimate(gather=True))
+        # and the only path for unsharded plans / unshardable schemes.
         scheme, groups = self.scheme, config.groups
         self._estimate = jax.jit(
             jax.vmap(lambda st: scheme.estimate(st, groups=groups))
         )
+        # device-resident query: answers where the state lives (None when the
+        # plan is unsharded or the scheme's estimate cannot shard)
+        self._estimate_device = (
+            self.plan.build_estimate(config, mesh)
+            if self.plan.build_estimate is not None
+            else None
+        )
+        # per-step estimate cache: {step: (n_tenants, ...) ndarray}. Repeated
+        # queries between ingests (serving: many tenants polling one bank
+        # state) cost one dispatch total; any ingest/restore invalidates.
+        self._est_cache: dict = {}
 
     # -- construction -------------------------------------------------------
     def _init_bank(self):
@@ -321,6 +347,7 @@ class TriangleCountEngine:
         else:
             self._state = out
         self._step += 1
+        self._est_cache = {}  # the bank changed: cached answers are stale
         self.diag.batches_ingested += 1
         self.diag.edges_ingested += int(np.max(nv))
 
@@ -413,6 +440,7 @@ class TriangleCountEngine:
             self._state, c.Wb, c.nv, self._root_keys, self._step
         )
         self._step += K
+        self._est_cache = {}  # the bank changed: cached answers are stale
         self.diag.batches_ingested += K
         self.diag.edges_ingested += c.edges
 
@@ -459,27 +487,63 @@ class TriangleCountEngine:
         jax.block_until_ready(self._state)
 
     # -- queries ------------------------------------------------------------
-    def estimate(self) -> np.ndarray:
+    def estimate(self, *, gather: bool = False) -> np.ndarray:
         """Rolling per-tenant estimates: shape ``(n_tenants,)`` for scalar
         schemes (the paper's Thm 3.4 median-of-means), ``(n_tenants, ...)``
-        for vector schemes (e.g. ``local``: per-vertex counts)."""
+        for vector schemes (e.g. ``local``: per-vertex counts).
+
+        On a sharded plan the query runs **device-resident** (the plan's
+        ``build_estimate`` program: per-shard partial reductions + a
+        fixed-order combine — ``repro.core.distributed.make_banked_estimate``
+        / ``make_sharded_estimate``), so only the O(T) answer crosses to
+        host, never the O(T * r) bank. ``gather=True`` forces the
+        gather-to-host oracle — the pre-sharding program the device path is
+        asserted bit-identical against (``tests/_bank_driver.py``); it
+        bypasses the cache so it always recomputes.
+
+        Answers are cached per ``step``: repeated queries between ingests
+        (the serving pattern — many tenants polling one bank state) cost one
+        device dispatch total. Any ingest or restore invalidates the cache.
+        """
         self._drain_overflow()
-        st = self._state
-        if not self.plan.banked:
-            st = jax.tree.map(lambda x: x[None], st)
-        elif self.plan.bank_sharding is not None:
-            # gather the bank to host and answer on the default device: the
-            # query then runs the same program as an unsharded engine, so the
-            # estimate is bit-identical across mesh shapes (float reduction
-            # order never depends on the layout). O(T*r) bytes per query —
-            # cheap next to ingest.
-            st = jax.tree.map(np.asarray, st)
-        return np.asarray(self._estimate(st))
+        if not gather:
+            cached = self._est_cache.get(self._step)
+            if cached is not None:
+                self.diag.queries_answered += 1
+                self.diag.query_cache_hits += 1
+                return cached
+        if not gather and self._estimate_device is not None:
+            out = np.asarray(self._estimate_device(self._state))
+            if not self.plan.banked:
+                out = out[None]
+        else:
+            st = self._state
+            if not self.plan.banked:
+                st = jax.tree.map(lambda x: x[None], st)
+            elif self.plan.bank_sharding is not None:
+                # the gather-to-host oracle: materialize the bank and answer
+                # on the default device — the same program as an unsharded
+                # engine, bit-identical across mesh shapes, O(T*r) bytes
+                # per query
+                st = jax.tree.map(np.asarray, st)
+            out = np.asarray(self._estimate(st))
+        self.diag.queries_answered += 1
+        if not gather:
+            self._est_cache = {self._step: out}
+        return out
 
     def estimate_tenant(self, tenant: int = 0):
-        """One tenant's estimate: a float for scalar schemes, else an array."""
+        """One tenant's estimate: a float for scalar schemes, else an array.
+        Served from the per-step cache, so polling T tenants between two
+        ingests costs one query dispatch, not T."""
         e = self.estimate()[tenant]
         return float(e) if np.ndim(e) == 0 else e
+
+    def estimate_tenants(self, tenants: Iterable[int]) -> np.ndarray:
+        """Batched multi-tenant query: rows of ``estimate()`` for the given
+        tenant ids, answered from ONE (cached) bank query."""
+        ests = self.estimate()
+        return ests[np.asarray(list(tenants), dtype=np.int64)]
 
     # -- snapshot / restore -------------------------------------------------
     def snapshot(self) -> dict:
@@ -544,6 +608,14 @@ class TriangleCountEngine:
             bank = self._place_bank(host)
         else:
             bank = jax.tree.map(jnp.asarray, host)
+        # undrained overflow scalars describe PRE-restore batches; draining
+        # them after the state swap would escalate capacity (and recompile)
+        # for a stream the restored engine never ingested — discard them,
+        # counted in diag.pending_overflow_dropped
+        if self._pending_overflow:
+            self.diag.pending_overflow_dropped += len(self._pending_overflow)
+            self._pending_overflow = []
+        self._est_cache = {}  # cached answers describe the pre-restore bank
         self._state = bank
         self._root_keys = jnp.asarray(snap["root_keys"])
         self._step = int(snap["step"])

@@ -16,9 +16,14 @@ Pipeline
     chunk's compute; reports and checkpoints then land at chunk granularity,
     while ``engine.step`` keeps counting batches;
   * ``report_every`` invokes ``on_report(step, estimates, edges_seen)``
-    mid-stream with the rolling per-tenant estimates — the "serve" path
-    answers queries from the same loop without stalling ingestion more than
-    one estimate() dispatch (plus a bank gather on sharded plans).
+    mid-stream with the rolling per-tenant estimates — ONE batched
+    multi-tenant query per report step. On sharded plans that query runs
+    device-resident (per-shard partial reductions + fixed-order combine; see
+    "Device-resident queries" in ``docs/scaling.md``), so serving never
+    gathers the bank to host; and because the engine caches the answer per
+    step, every further query at the same step — ``estimate_tenant`` calls
+    from a callback, the interactive loop in ``launch.stream_serve``, the
+    final post-stream report — is a cache hit, not a second dispatch.
 
 Checkpoint / resume contract
 ----------------------------
@@ -56,6 +61,11 @@ class StreamReport:
     seconds: float = 0.0
     resumed_from: int = 0  # engine step restored from a checkpoint, 0 if fresh
     stale_batches: int = 0
+    # stale stand-ins whose awaited late batch turned out to be end-of-stream
+    # (the source never produced it): m_seen ran this many batches long —
+    # see PrefetchQueue.get; 0 whenever the stream ends with a real batch
+    phantom_batches: int = 0
+    queries: int = 0  # batched multi-tenant report queries answered mid-stream
 
     @property
     def edges_per_s(self) -> float:
@@ -139,7 +149,10 @@ def run_stream(
         rep.batches += n_batches
         rep.edges += n_edges
         if report_every and engine.step % report_every == 0 and on_report:
+            # one batched multi-tenant query; callbacks re-querying the same
+            # step (estimate_tenant etc.) hit the engine's per-step cache
             on_report(engine.step, engine.estimate(), engine.edges_seen())
+            rep.queries += 1
         if ckpt and ckpt_every and rep.batches % ckpt_every == 0:
             ckpt.save(
                 engine.step,
@@ -187,6 +200,7 @@ def run_stream(
             after_ingest(K, pending.edges)
     engine.sync()  # async dispatches must land before the throughput clock stops
     rep.seconds = time.time() - t0
+    rep.phantom_batches = pf.unmatched_standins
     if ckpt:
         ckpt.wait()
         ckpt.save(

@@ -56,9 +56,19 @@ def multisearch_counts(
     with anything (results for the pad tail are discarded). A query equal to
     +INF would count the key padding in count_le, so count_le is clamped to n
     (count_lt needs no clamp: nothing is < the padding).
+
+    Empty inputs short-circuit: with ``n == 0`` the key grid would have zero
+    chunks, the kernel would never run, and the output buffers would be
+    returned **uninitialized** (the ``le`` clamp would mask only half of
+    that); every insertion point into an empty structure is 0, so both
+    counts are returned as zeros without launching. ``q == 0`` is symmetric
+    (nothing to answer).
     """
     n = sorted_keys.shape[0]
     q = queries.shape[0]
+    if n == 0 or q == 0:
+        zeros = jnp.zeros((q,), jnp.int32)
+        return zeros, zeros
     maxval = jnp.array(jnp.iinfo(sorted_keys.dtype).max, sorted_keys.dtype)
     n_pad = pl.cdiv(n, k_block) * k_block
     q_pad = pl.cdiv(q, q_block) * q_block

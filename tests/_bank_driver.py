@@ -9,6 +9,14 @@ scheme axis the issue-4 acceptance requires). Checks, against a
     scalars for global, per-vertex vectors for local), for the pure tenant
     mesh, the 2-D (tenants, estimators) mesh, and the chunked (fused
     multi-batch) path on a sharded bank;
+  * the device-resident query path answers **without gathering the bank**:
+    on every sharded plan/mesh shape, estimate() (the sharded
+    partial-reduction + fixed-order combine) is bit-identical to
+    estimate(gather=True) — the gather-to-host oracle — AND to the `single`
+    reference (the issue-5 acceptance: two mesh shapes per scheme);
+  * the per-step estimate cache on a sharded bank: a repeat query is a cache
+    hit, ingest invalidates, and the post-ingest answer re-agrees with the
+    oracle;
   * snapshots round-trip across mesh shapes: 2-D mesh -> no mesh -> different
     mesh, continuing the stream bit-identically after every reshard;
   * select_backend's auto policy picks the documented plan per mesh shape
@@ -77,12 +85,32 @@ def main(scheme: str = "global"):
     for mesh, backend, want in plans:
         eng = TriangleCountEngine(cfg(scheme, backend=backend), mesh=mesh)
         assert eng.plan.name == want, (eng.plan.name, want)
+        # the device-resident query program must exist on every sharded plan
+        # for these schemes (shardable_estimate) — no silent gather fallback
+        assert eng._estimate_device is not None, (scheme, want)
         for W, nv in its:
             eng.ingest(W, nv)
         assert_same_bank(ref_snap, eng.bank_snapshot(),
                          f"{want}@{dict(mesh.shape)}")
-        np.testing.assert_array_equal(ref_est, eng.estimate())
-        print(f"{scheme}/{want} on {dict(mesh.shape)} bit-identical OK")
+        dev = eng.estimate()  # device-resident: partials + fixed combine
+        oracle = eng.estimate(gather=True)  # gather-to-host program
+        np.testing.assert_array_equal(
+            dev, oracle, err_msg=f"device vs oracle {want}@{dict(mesh.shape)}"
+        )
+        np.testing.assert_array_equal(ref_est, dev)
+        print(f"{scheme}/{want} on {dict(mesh.shape)} bit-identical OK "
+              "(incl. device-resident query == gather oracle)")
+
+    # --- the per-step estimate cache on a sharded bank ---
+    eng = TriangleCountEngine(cfg(scheme), mesh=mesh_2d)
+    eng.ingest(*its[0])
+    first = eng.estimate()
+    assert eng.estimate() is first, "repeat query must hit the cache"
+    assert eng.diag.query_cache_hits == 1
+    eng.ingest(*its[1])
+    assert eng._est_cache == {}, "ingest must invalidate the cache"
+    np.testing.assert_array_equal(eng.estimate(), eng.estimate(gather=True))
+    print(f"{scheme}/sharded estimate cache invalidation OK")
 
     # --- chunked (scan-fused) ingest on a sharded bank ---
     chunked = TriangleCountEngine(cfg(scheme, chunk_size=3), mesh=mesh_2d)

@@ -84,9 +84,12 @@ def main():
         mesh=mesh,
     )
     assert eng.plan.name == "shardmap", eng.plan.name
+    assert eng._estimate_device is not None  # device-resident query built
     for W, nv in batches(edges, s):
         eng.ingest(W, nv)
     assert eng.diag.overflow_batches == 0, eng.diag
+    # device-resident query == gather-to-host oracle on the shardmap plan
+    np.testing.assert_array_equal(eng.estimate(), eng.estimate(gather=True))
     snap = eng.snapshot()
     st = EstimatorState(
         *[np.asarray(snap[f][0]) for f in EstimatorState._fields]
@@ -162,6 +165,11 @@ def main():
     for W, nv in batches(edges, s):
         loc_eng.ingest(W, nv)
     assert loc_eng.diag.overflow_batches == 0, loc_eng.diag
+    # per-vertex device-resident query (pool-local attribution partials)
+    # matches the gathered oracle bit for bit
+    np.testing.assert_array_equal(
+        loc_eng.estimate(), loc_eng.estimate(gather=True)
+    )
     est_vec = loc_eng.estimate()[0]
     assert est_vec.shape == (20,), est_vec.shape
     snap = loc_eng.snapshot()

@@ -260,6 +260,120 @@ class TestChunkedIngest:
             )
 
 
+class TestQueryCache:
+    """The per-step estimate cache: repeated queries between ingests cost one
+    dispatch; any ingest or restore invalidates; gather=True (the oracle)
+    always recomputes."""
+
+    def test_cache_hit_between_ingests_and_invalidation_on_ingest(self):
+        edges = erdos_renyi_stream(25, 120, seed=1)
+        its = list(batches(edges, 16))
+        eng = TriangleCountEngine(
+            EngineConfig(r=64, batch_size=16, n_tenants=3)
+        )
+        eng.ingest(*its[0])
+        a = eng.estimate()
+        b = eng.estimate()
+        assert b is a  # same object: answered from the cache
+        assert eng.diag.queries_answered == 2
+        assert eng.diag.query_cache_hits == 1
+        # estimate_tenant / estimate_tenants read through the same cache
+        assert eng.estimate_tenant(1) == float(a[1])
+        np.testing.assert_array_equal(
+            eng.estimate_tenants([2, 0]), a[[2, 0]]
+        )
+        assert eng.diag.query_cache_hits == 3
+        # ingest invalidates: the next query recomputes against the new bank
+        eng.ingest(*its[1])
+        assert eng._est_cache == {}
+        c = eng.estimate()
+        assert c is not a
+        # the oracle path never serves from (or populates) the cache
+        d = eng.estimate(gather=True)
+        np.testing.assert_array_equal(c, d)
+        assert d is not c
+
+    def test_restore_invalidates_cache(self):
+        edges = erdos_renyi_stream(25, 120, seed=2)
+        its = list(batches(edges, 16))
+        eng = TriangleCountEngine(EngineConfig(r=64, batch_size=16))
+        eng.ingest(*its[0])
+        snap = eng.snapshot()
+        eng.ingest(*its[1])
+        stale = eng.estimate()
+        eng.restore(snap)
+        assert eng._est_cache == {}
+        fresh = eng.estimate()
+        assert not np.array_equal(stale, fresh) or eng.step == 1
+        # the restored answer matches a never-restored engine at that step
+        ref = TriangleCountEngine(EngineConfig(r=64, batch_size=16))
+        ref.ingest(*its[0])
+        np.testing.assert_array_equal(fresh, ref.estimate())
+
+
+class TestRestoreClearsPendingOverflow:
+    def test_restore_drops_prerestore_overflow_scalars(self):
+        """Regression: restore() used to leave _pending_overflow populated,
+        so overflow scalars from the PRE-restore stream could trigger a bogus
+        capacity escalation (and recompile) on the restored engine. The
+        shardmap plan is the only overflow-reporting plan; a 1-device mesh
+        exercises it hermetically."""
+        mesh = jax.make_mesh((1,), ("data",))
+        eng = TriangleCountEngine(
+            EngineConfig(r=64, batch_size=16, seeds=(0,), backend="shardmap"),
+            mesh=mesh,
+        )
+        assert eng.plan.name == "shardmap" and eng.plan.reports_overflow
+        edges = erdos_renyi_stream(20, 64, seed=4)
+        its = list(batches(edges, 16))
+        for W, nv in its[:2]:
+            eng.ingest(W, nv)
+        snap = eng.snapshot()
+        eng.ingest(*its[2])
+        assert eng._pending_overflow  # undrained device scalars in flight
+        # simulate a hot-vertex stream: a nonzero overflow count is pending
+        eng._pending_overflow.append(np.int64(5))
+        escalations_before = eng.diag.capacity_escalations
+        eng.restore(snap)
+        assert eng._pending_overflow == []
+        assert eng.diag.pending_overflow_dropped >= 2
+        # the next drain (sync / estimate / snapshot) must not escalate
+        eng.sync()
+        assert eng.diag.capacity_escalations == escalations_before
+        # and the restored engine continues the stream normally
+        eng.ingest(*its[2])
+        assert eng.step == 3
+
+
+class TestDeadlineMissAccounting:
+    def test_m_seen_equals_stream_length_under_forced_misses(self):
+        """Regression for the prefetch late-duplicate replay: with the backup
+        batch standing in for a late one, the engine must still ingest
+        exactly len(stream) edges — the late duplicate is dropped, not
+        replayed (PrefetchQueue.get)."""
+        import time
+
+        edges = erdos_renyi_stream(30, 128, seed=7)
+        its = list(batches(edges, 32))
+        assert len(its) == 4 and all(nv == 32 for _, nv in its)
+
+        eng = TriangleCountEngine(EngineConfig(r=64, batch_size=32))
+
+        def slow_iter():
+            yield from its[:3]
+            # hold the last batch back until the consumer's deadline fired
+            # and the backup stood in for it (step hits 4 only via the
+            # stale ingest) — a deterministic miss, immune to compile time
+            while eng.step < 4:
+                time.sleep(0.005)
+            yield its[3]
+
+        rep = run_stream(eng, slow_iter(), deadline_s=0.15)
+        assert rep.stale_batches == 1
+        assert rep.batches == len(its)
+        assert int(eng.edges_seen()[0]) == len(edges)
+
+
 class TestBackendSelection:
     def test_auto_without_mesh_is_single(self):
         cfg = EngineConfig(r=64, batch_size=16)

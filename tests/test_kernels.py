@@ -68,6 +68,12 @@ class TestMultisearch:
         np.testing.assert_array_equal(np.asarray(lt), np.asarray(elt))
         np.testing.assert_array_equal(np.asarray(le), np.asarray(ele))
 
+    # the block-boundary / empty-structure / INF64-query regression sweep
+    # for multisearch_counts lives in tests/test_multisearch_edges.py — that
+    # module is deliberately NOT gated on the hypothesis dev dep, so the
+    # n == 0 uninitialized-output bugfix coverage runs in base installs
+    # where this whole module skips
+
 
 class TestBitonic:
     @pytest.mark.parametrize("n", [1, 100, 1024, 2500, 4096])

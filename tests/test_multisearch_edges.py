@@ -1,0 +1,54 @@
+"""Multisearch kernel edge-shape parity: block boundaries, empty inputs,
+INF64 sentinel queries.
+
+Deliberately hypothesis-free (unlike tests/test_kernels.py, which gates on
+the dev dep at module level): this is the regression coverage for the
+``n == 0`` uninitialized-kernel-output bugfix, and it must run in a base
+install — a container without requirements-dev must not silently skip it.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels.ref import multisearch_counts_ref
+
+
+class TestMultisearchEdgeShapes:
+    # block-boundary sweep: q/n at exact multiples and +-1 of the blocks
+    # (q_block=32, k_block=64 below), plus the empty-structure degenerate —
+    # n == 0 used to return `lt` from a never-launched kernel uninitialized
+    @pytest.mark.parametrize(
+        "n,q",
+        [
+            (0, 1), (0, 5), (0, 33),   # empty keys: every count is 0
+            (1, 0), (64, 0), (0, 0),   # empty queries: empty outputs
+            (63, 31), (64, 32), (65, 33),      # exactly one block +-1
+            (127, 63), (128, 64), (129, 65),   # two blocks +-1
+            (64, 96), (192, 32),               # mixed multiples
+        ],
+    )
+    def test_block_boundaries_and_empty(self, n, q):
+        rng = np.random.default_rng(7 * n + q)
+        keys = jnp.sort(jnp.asarray(rng.integers(0, 200, n), jnp.int64))
+        qs = jnp.asarray(rng.integers(-5, 205, q), jnp.int64)
+        lt, le = ops.multisearch_counts_op(keys, qs, q_block=32, k_block=64)
+        elt, ele = multisearch_counts_ref(keys, qs)
+        assert lt.shape == le.shape == (q,)
+        np.testing.assert_array_equal(np.asarray(lt), np.asarray(elt))
+        np.testing.assert_array_equal(np.asarray(le), np.asarray(ele))
+
+    @pytest.mark.parametrize("n", [0, 63, 64, 65])
+    def test_inf64_queries(self, n):
+        """INF64 sentinel queries (the routed-multisearch padding value) must
+        count key padding in neither bound: le clamps to n, and with n == 0
+        the short-circuit keeps both counts zero instead of garbage."""
+        inf64 = np.iinfo(np.int64).max
+        rng = np.random.default_rng(n)
+        keys = jnp.sort(jnp.asarray(rng.integers(0, 100, n), jnp.int64))
+        qs = jnp.asarray(np.array([inf64, 0, inf64, 50], np.int64))
+        lt, le = ops.multisearch_counts_op(keys, qs, q_block=32, k_block=64)
+        elt, ele = multisearch_counts_ref(keys, qs)
+        np.testing.assert_array_equal(np.asarray(lt), np.asarray(elt))
+        np.testing.assert_array_equal(np.asarray(le), np.asarray(ele))
+        assert int(le[0]) == n  # every real key is <= INF64

@@ -1,0 +1,101 @@
+"""PrefetchQueue deadline-miss accounting and work-stealing behavior pins.
+
+Deliberately hypothesis-free (unlike tests/test_substrate.py, which gates on
+the dev dep at module level): these are the regression tests for the
+prefetch late-duplicate drift bugfix, and they must run in a base install —
+a container without requirements-dev must not silently skip them.
+"""
+import time
+
+import pytest
+
+from repro.data.prefetch import PrefetchQueue, work_stealing_shards
+
+
+class TestDeadlineMissAccounting:
+    def test_deadline_miss_drops_late_duplicate(self):
+        """After a backup stands in for a late batch, the late batch must be
+        discarded when it finally arrives — otherwise the consumer ingests
+        the backup twice AND replays the real batch, and the stream position
+        drifts one batch long per miss. Total batches out (real + stale)
+        equals the source length exactly."""
+        def src():
+            yield 1
+            yield 2
+            time.sleep(0.3)
+            yield 3
+            yield 4
+
+        pf = PrefetchQueue(src(), depth=1, deadline_s=0.15)
+        out = [pf.get(), pf.get(), pf.get()]  # third: miss -> backup
+        time.sleep(0.4)  # let the late item 3 land in the queue
+        out.append(pf.get())  # late 3 is dropped on arrival; 4 comes through
+        assert [v for v, _ in out] == [1, 2, 2, 4]  # 2 stood in for late 3
+        assert [s for _, s in out] == [False, False, True, False]
+        assert pf.stale_steps == 1 and pf.late_drops == 1
+        assert pf.unmatched_standins == 0  # the late item did arrive
+        with pytest.raises(StopIteration):
+            pf.get()  # exactly len(source) batches came out, no replay
+
+    def test_one_standin_per_late_item(self):
+        """Consecutive deadline misses are all gated on the SAME straggler:
+        after one backup stands in, the next get waits for the late item
+        instead of echoing again — otherwise a single slow final batch mints
+        stand-ins for source items that don't exist and the delivered count
+        (hence m_seen) drifts past the stream length."""
+        def src():
+            yield 1
+            yield 2
+            time.sleep(0.5)
+            yield 3
+
+        pf = PrefetchQueue(src(), depth=1, deadline_s=0.15)
+        out = [pf.get(), pf.get(), pf.get()]  # third: miss -> backup once
+        with pytest.raises(StopIteration):
+            pf.get()  # waits for late 3, drops it, hits end of stream
+        assert [v for v, _ in out] == [1, 2, 2]
+        assert pf.stale_steps == 1 and pf.late_drops == 1  # NOT 3 stales
+        assert pf.unmatched_standins == 0
+
+    def test_end_of_stream_standin_is_counted(self):
+        """A miss whose 'late item' turns out to be the END of the stream
+        (slow final next() raising StopIteration) has already delivered one
+        stand-in for a batch that never existed; that unavoidable +1 drift
+        must be observable, not silent."""
+        def src():
+            yield 1
+            yield 2
+            time.sleep(0.5)  # slow tail: ends instead of yielding
+
+        pf = PrefetchQueue(src(), depth=1, deadline_s=0.15)
+        out = [pf.get(), pf.get(), pf.get()]  # third: miss -> stand-in
+        with pytest.raises(StopIteration):
+            pf.get()  # the awaited item is end-of-stream
+        assert [v for v, _ in out] == [1, 2, 2]
+        assert pf.stale_steps == 1 and pf.late_drops == 0
+        assert pf.unmatched_standins == 1  # recorded: m_seen ran 1 long
+
+
+class TestWorkStealing:
+    def test_is_exhaustion_only_round_robin(self):
+        """Pins the documented behavior: strict rotation order, shards leave
+        the rotation only on exhaustion, and a *slow* shard still blocks its
+        turn (no latency-based skipping — see the docstring)."""
+        shards = [
+            lambda: iter([1, 2]),
+            lambda: iter([10]),
+            lambda: iter([100, 200, 300]),
+        ]
+        assert list(work_stealing_shards(shards)) == [1, 10, 100, 2, 200, 300]
+
+        def slow():
+            yield "slow-a"
+            time.sleep(0.3)
+            yield "slow-b"
+
+        t0 = time.time()
+        out = list(work_stealing_shards([slow, lambda: iter(["fast"])]))
+        # the slow shard's second item is waited on in rotation order: the
+        # merged stream is gated on it rather than skipping ahead
+        assert out == ["slow-a", "fast", "slow-b"]
+        assert time.time() - t0 >= 0.25
