@@ -9,7 +9,11 @@ Checks:
   3. every registered estimator scheme (``repro.core.schemes.SCHEMES``)
      appears backticked in BOTH docs/scaling.md (the plan table's scheme
      column) and docs/paper_map.md (the scheme section) — registering a
-     scheme is a documentation contract.
+     scheme is a documentation contract;
+  4. the query path is documented: docs/scaling.md and docs/engine.md must
+     both describe the device-resident query (and the ``gather=True``
+     oracle/cache semantics) — the serving surface must not drift from the
+     handbook.
 
   PYTHONPATH=src python tools/check_docs.py
 """
@@ -77,8 +81,33 @@ def check_scheme_coverage() -> list[str]:
     return errors
 
 
+def check_query_path_coverage() -> list[str]:
+    """Both the handbook and the API doc must describe the device-resident
+    query path: the builder names, the oracle escape hatch, and the cache."""
+    required = {
+        "scaling.md": ("`make_banked_estimate`", "`make_sharded_estimate`",
+                       "device-resident", "`gather=True`", "cache"),
+        "engine.md": ("`build_estimate`", "device-resident",
+                      "`gather=True`", "cache"),
+    }
+    errors = []
+    for doc, tokens in required.items():
+        text = (ROOT / "docs" / doc).read_text()
+        errors += [
+            f"docs/{doc}: query-path docs are missing {tok}"
+            for tok in tokens
+            if tok not in text
+        ]
+    return errors
+
+
 def main() -> int:
-    errors = check_links() + check_backend_coverage() + check_scheme_coverage()
+    errors = (
+        check_links()
+        + check_backend_coverage()
+        + check_scheme_coverage()
+        + check_query_path_coverage()
+    )
     for e in errors:
         print(e, file=sys.stderr)
     if not errors:
