@@ -1,5 +1,11 @@
 """Paper Table 2 analogue: mean deviation (MD%) of the estimate vs the number
-of estimators r, across datasets, over multiple trials."""
+of estimators r, across datasets, over multiple trials.
+
+``python -m benchmarks.accuracy --json BENCH_streaming.json [--smoke]`` runs
+the *dynamic* grid instead — MD% of the turnstile estimator vs the oracle's
+live count as a function of the delete rate (plus a sliding-window row) —
+and merges it under the ``dynamic`` key without touching any other section.
+"""
 from __future__ import annotations
 
 import jax
@@ -7,13 +13,22 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import csv_row
-from repro.core import bulk_update_all_jit, estimate, init_state
+from repro.core import (
+    bulk_delete_update_jit,
+    bulk_update_all_jit,
+    estimate,
+    init_state,
+)
 from repro.core.sequential import count_triangles
 from repro.data.graph_stream import (
     barabasi_albert_stream,
     batches,
+    churn_stream,
     erdos_renyi_stream,
+    live_edges,
     planted_triangle_stream,
+    signed_batches,
+    windowed_stream,
 )
 
 
@@ -25,6 +40,80 @@ def run_once(edges, r, batch, seed):
             state, jnp.asarray(W), jnp.int32(nv), jax.random.fold_in(key, i)
         )
     return float(estimate(state, groups=9))
+
+
+def run_once_signed(stream, r, batch, seed):
+    """One turnstile run: insert batches advance the RNG cursor, delete
+    batches apply the deletion kernel (the engine's convention)."""
+    state = init_state(r)
+    key = jax.random.PRNGKey(seed)
+    i = 0
+    for W, nv, sign in signed_batches(stream, batch):
+        if sign < 0:
+            state = bulk_delete_update_jit(state, jnp.asarray(W), jnp.int32(nv))
+        else:
+            state = bulk_update_all_jit(
+                state, jnp.asarray(W), jnp.int32(nv), jax.random.fold_in(key, i)
+            )
+            i += 1
+    return float(estimate(state, groups=9))
+
+
+def dynamic_grid(smoke: bool = False) -> list[dict]:
+    """Accuracy vs delete rate (plus one sliding-window row): MD% of the
+    turnstile estimate against the exact LIVE triangle count."""
+    # deletions fragment the stream into sign runs, so a churned stream costs
+    # far more dispatches than its length suggests — sized well below the
+    # insertion-only grids on purpose
+    if smoke:
+        edges = erdos_renyi_stream(120, 1200, seed=2)
+        r, batch, trials = 2_000, 256, 1
+    else:
+        edges = erdos_renyi_stream(250, 5000, seed=2)
+        r, batch, trials = 10_000, 512, 3
+    streams = {}
+    for rate in (0.0, 0.2, 0.5):
+        streams[f"del{rate}"] = (churn_stream(edges, rate, seed=3), rate, 0)
+    w = len(edges) // 4
+    streams[f"win{w}"] = (windowed_stream(edges, w), 0.0, w)
+
+    rows = []
+    for name, (stream, rate, window) in streams.items():
+        tau = count_triangles(live_edges(stream))
+        devs = []
+        for t in range(trials):
+            est = run_once_signed(stream, r, batch, seed=100 + t)
+            devs.append(abs(est - tau) / max(tau, 1))
+        rows.append({
+            "name": f"er/{name}",
+            "delete_rate": rate,
+            "window": window,
+            "r": r,
+            "batch": batch,
+            "m": int(len(edges)),
+            "signed": int(len(stream)),
+            "tau_live": int(tau),
+            "md_pct": round(100 * float(np.mean(devs)), 2),
+            "trials": trials,
+            "smoke": smoke,
+        })
+        print(csv_row(f"dynamic/{rows[-1]['name']}", 0.0,
+                      f"MD%={rows[-1]['md_pct']};tau_live={tau}"), flush=True)
+    return rows
+
+
+def merge_dynamic(path: str, smoke: bool) -> None:
+    """Merge the dynamic grid under BENCH_streaming.json's ``dynamic`` key;
+    every other section's committed rows survive verbatim (the shared
+    merge_section contract, proven by tests/test_dynamic.py)."""
+    from benchmarks.common import merge_section, section_meta
+
+    rows = dynamic_grid(smoke=smoke)
+    merge_section(
+        path, "dynamic", rows,
+        lambda row: (row["name"], bool(row.get("smoke", False))),
+        section_meta(smoke),
+    )
 
 
 def main(trials: int = 5) -> list[str]:
@@ -51,4 +140,15 @@ def main(trials: int = 5) -> list[str]:
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="",
+                    help="merge the dynamic (delete-rate) accuracy grid "
+                         "under this trajectory JSON's `dynamic` key")
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    if args.json:
+        merge_dynamic(args.json, args.smoke)
+    else:
+        main()

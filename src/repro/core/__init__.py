@@ -2,6 +2,10 @@
 from repro.core.state import EstimatorState, init_state
 from repro.core.rank import rank_all, RankStructure
 from repro.core.bulk import (
+    bulk_delete_chunk,
+    bulk_delete_chunk_jit,
+    bulk_delete_update,
+    bulk_delete_update_jit,
     bulk_update_all,
     bulk_update_all_jit,
     bulk_update_chunk,
@@ -29,6 +33,10 @@ __all__ = [
     "init_state",
     "rank_all",
     "RankStructure",
+    "bulk_delete_chunk",
+    "bulk_delete_chunk_jit",
+    "bulk_delete_update",
+    "bulk_delete_update_jit",
     "bulk_update_all",
     "bulk_update_all_jit",
     "bulk_update_chunk",

@@ -33,7 +33,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.rank import RankStructure, rank_all
+from repro.core.rank import INF64, RankStructure, rank_all
 from repro.core.state import EstimatorState
 from repro.primitives.search import multisearch_bounds
 from repro.primitives.sort import pack2
@@ -243,3 +243,127 @@ def bulk_update_chunk(
 
 
 bulk_update_chunk_jit = jax.jit(bulk_update_chunk, donate_argnums=(0,))
+
+
+# ---------------------------------------------------------------------------
+# turnstile deletions (CoCoS-style liveness patching, arXiv:1802.04249)
+# ---------------------------------------------------------------------------
+def delete_keys(D: jax.Array, n_valid: jax.Array) -> jax.Array:
+    """Sorted canonical int64 keys of a deletion batch.
+
+    D: (s, 2) int32; the first ``n_valid`` rows are edges to delete (order
+    within a deletion batch is irrelevant — deletion is a set operation).
+    Padding rows map to the INF64 sentinel so they can never match a state
+    key; real keys are pack2(min, max) of non-negative vertex ids.
+    """
+    n_valid = jnp.asarray(n_valid, dtype=jnp.int32)
+    dmin = jnp.minimum(D[:, 0], D[:, 1])
+    dmax = jnp.maximum(D[:, 0], D[:, 1])
+    key = jnp.where(
+        jnp.arange(D.shape[0], dtype=jnp.int32) < n_valid,
+        pack2(dmin, dmax),
+        INF64,
+    )
+    return jnp.sort(key)
+
+
+def bulk_delete_update(
+    state: EstimatorState, D: jax.Array, n_valid: jax.Array
+) -> EstimatorState:
+    """Process one batch of edge DELETIONS into all estimators.
+
+    The turnstile extension of the NBSI state (the CoCoS correction,
+    arXiv:1802.04249, mapped onto this paper's two-level sample): an
+    estimator's sample is patched so that no dead edge can ever contribute to
+    the coarse estimate, while every sampling decision that was made remains
+    exactly the insertion-only one:
+
+      * f1 deleted   -> full reset of the slot (f1 = -1, chi = 0, f2 = -1,
+        has_f3 = False): the level-1 sample is gone, and everything below it
+        was conditioned on f1.
+      * f2 deleted   -> drop the level-2 edge and the closing flag, keep f1
+        and chi (chi counts arrivals after f1, a pure insertion statistic).
+      * the wedge's closing edge deleted -> clear has_f3 (the wedge is open
+        again; a future re-insertion closes it through step 3 as usual).
+
+    ``m_seen`` is NOT decremented: it is the estimator's importance weight
+    (total insertion arrivals), and the reservoir/resampling draws in steps
+    1-2 are functions of that insertion counter alone. Unbiasedness for the
+    *live* graph follows: for a triangle whose three edges are live at query
+    time, none of its edges ever appears in a deletion batch, so the
+    probability that an estimator tracks it — P(f1 = e1) * P(f2 = e2 | f1)
+    * 1{e3 after e2} = 1/(m * chi) — is untouched by this patch (kills only
+    fire on estimators whose sample already held a dead edge, i.e. paths
+    that could not have detected the live triangle); and every dead
+    copy-triple's contribution is zeroed by one of the three rules above.
+    Hence E[chi * m_seen * 1{has_f3}] = tau_live exactly, per Lemma 3.2's
+    argument. Contract: at most one live copy per edge key (delete-then-
+    reinsert is fine — batches are processed in arrival order and the new
+    copy re-enters sampling; deleting one copy of a key while another is
+    still live is not, since the key match cannot tell copies apart).
+
+    Deterministic (no RNG, no step counter): deleting never advances the
+    stream cursor, which is what keeps all-insertion turnstile streams
+    bit-identical to the insertion-only path.
+    """
+    dkey = delete_keys(D, n_valid)
+
+    u, v = state.f1[:, 0], state.f1[:, 1]
+    have_f1 = u >= 0
+    a, b = state.f2[:, 0], state.f2[:, 1]
+    have_f2 = have_f1 & (a >= 0)
+    # the wedge's closing edge joins the two non-shared endpoints (step 3)
+    u_shared = (u == a) | (u == b)
+    o1 = jnp.where(u_shared, v, u)
+    a_shared = (a == u) | (a == v)
+    o2 = jnp.where(a_shared, b, a)
+
+    # one fused multisearch answers all three membership tests; unset slots
+    # (-1 endpoints) pack to negative keys that cannot match a real (or
+    # sentinel) delete key, and are masked besides (belt + braces)
+    q = jnp.concatenate(
+        [
+            pack2(jnp.minimum(u, v), jnp.maximum(u, v)),
+            pack2(jnp.minimum(a, b), jnp.maximum(a, b)),
+            pack2(jnp.minimum(o1, o2), jnp.maximum(o1, o2)),
+        ]
+    )
+    lt, le = multisearch_bounds(dkey, q)
+    hit = le > lt
+    r = u.shape[0]
+    hit_f1 = hit[:r] & have_f1
+    hit_f2 = hit[r : 2 * r] & have_f2
+    hit_f3 = hit[2 * r :] & have_f2
+
+    f1 = jnp.where(hit_f1[:, None], jnp.int32(-1), state.f1)
+    chi = jnp.where(hit_f1, 0, state.chi)
+    f2 = jnp.where((hit_f1 | hit_f2)[:, None], jnp.int32(-1), state.f2)
+    has_f3 = state.has_f3 & ~(hit_f1 | hit_f2 | hit_f3)
+    return EstimatorState(
+        f1=f1, chi=chi, f2=f2, has_f3=has_f3, m_seen=state.m_seen
+    )
+
+
+bulk_delete_update_jit = jax.jit(bulk_delete_update, donate_argnums=(0,))
+
+
+def bulk_delete_chunk(
+    state: EstimatorState, Ds: jax.Array, n_valids: jax.Array
+) -> EstimatorState:
+    """Fold a stack of K deletion batches into the state under ONE dispatch.
+
+    Ds: (K, s, 2); n_valids: (K,). Deletion batches commute and carry no RNG,
+    so this is trivially bit-identical to K sequential ``bulk_delete_update``
+    calls — the scan exists purely to amortize dispatch overhead on
+    high-churn streams (the deletion arm of the chunked ingest pipeline).
+    """
+
+    def step(st, xs):
+        D, nv = xs
+        return bulk_delete_update(st, D, nv), None
+
+    state, _ = jax.lax.scan(step, state, (Ds, n_valids))
+    return state
+
+
+bulk_delete_chunk_jit = jax.jit(bulk_delete_chunk, donate_argnums=(0,))

@@ -314,6 +314,57 @@ def make_banked_pjit_chunk_update(
 
 
 # --------------------------------------------------------------------------
+# turnstile deletion paths
+# --------------------------------------------------------------------------
+def make_pjit_delete(mesh, scheme: EstimatorScheme = GLOBAL):
+    """jit-compiled deletion update with mesh shardings.
+
+    ``f(state, D (s,2), n_valid) -> state``. The deletion kernel is
+    elementwise per estimator (one fused multisearch against the replicated
+    deletion batch, no collectives, no RNG), so ONE builder serves the
+    ``pjit_independent``, ``pjit_coordinated``, *and* ``shardmap`` plans: the
+    same jitted program shards correctly under any estimator layout. D and
+    n_valid are replicated — deletion batches are small relative to the r
+    axis, and every shard must test its own samples against the full batch.
+    """
+    scheme = resolve_scheme(scheme)
+    axes = tuple(mesh.axis_names)
+    rep = NamedSharding(mesh, P())
+    state_sh = scheme_state_sharding(mesh, scheme, axes)
+    return jax.jit(
+        scheme.delete_update,
+        in_shardings=(state_sh, rep, rep),
+        out_shardings=state_sh,
+        donate_argnums=(0,),
+    )
+
+
+def make_banked_delete(
+    mesh, tenant_axis: str = "tenants", scheme: EstimatorScheme = GLOBAL
+):
+    """Tenant-sharded bank deletion: jit(vmap(scheme.delete_update)).
+
+    Signature matches the engine's banked call convention minus the RNG:
+    ``f(state_bank, Db (T,s,2), n_valid (T,)) -> state_bank``. Each tenant's
+    deletion batch lands on that tenant's shard group (P(t, None, None) —
+    same layout as the independent ingest path); the estimator-dim patch is
+    elementwise, so no within-group gather is needed and both banked w_modes
+    share this one builder.
+    """
+    scheme = resolve_scheme(scheme)
+    state_sh = banked_state_sharding(mesh, tenant_axis, scheme)
+    t = tenant_axis
+    d_in = NamedSharding(mesh, P(t, None, None))
+    t_only = NamedSharding(mesh, P(t))
+    return jax.jit(
+        jax.vmap(scheme.delete_update),
+        in_shardings=(state_sh, d_in, t_only),
+        out_shardings=state_sh,
+        donate_argnums=(0,),
+    )
+
+
+# --------------------------------------------------------------------------
 # device-resident query path (sharded estimates)
 # --------------------------------------------------------------------------
 def _estimate_out_ndim(scheme: EstimatorScheme, r: int, groups: int) -> int:

@@ -75,7 +75,12 @@ from typing import Callable, Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.bulk import bulk_update_all, bulk_update_chunk
+from repro.core.bulk import (
+    bulk_delete_chunk,
+    bulk_delete_update,
+    bulk_update_all,
+    bulk_update_chunk,
+)
 from repro.core.estimate import (
     coarse_estimates,
     combine_group_sums,
@@ -149,6 +154,34 @@ class EstimatorScheme:
 
         state, _ = jax.lax.scan(step, state, (Ws, n_valids, steps))
         return state
+
+    # -- turnstile deletions / window expiry --------------------------------
+    # The fully-dynamic extension (CoCoS, arXiv:1802.04249): a deletion batch
+    # patches the sample so dead edges can never contribute, without touching
+    # any sampling decision (m_seen stays the insertion counter, no RNG is
+    # consumed, no step advances). Both the turnstile `delete` path and the
+    # sliding-window/decay `expire` path are the SAME state transition — the
+    # engine merely differs in who authored the deletion batch (the stream vs
+    # the window clock) — so `expire` aliases `delete_update` here and
+    # schemes override only if their semantics diverge. For the `local`
+    # scheme the default is already pool-local: attribution happens at
+    # estimate time from the patched sample, and the patch itself is
+    # elementwise per estimator (REPT's deletion scatter, arXiv:1811.09136).
+    def delete_update(self, state, D, n_valid):
+        """Fold one batch of edge deletions into the state (no RNG; see
+        ``repro.core.bulk.bulk_delete_update`` for the unbiasedness
+        argument and the single-live-copy contract)."""
+        return bulk_delete_update(state, D, n_valid)
+
+    def delete_chunk_update(self, state, Ds, n_valids):
+        """K stacked deletion batches under one dispatch; bit-equal to K
+        sequential ``delete_update`` calls (deletions carry no RNG)."""
+        return bulk_delete_chunk(state, Ds, n_valids)
+
+    def expire(self, state, D, n_valid):
+        """Window/decay expiry: identical transition to ``delete_update``
+        (an expired edge is a deletion authored by the window clock)."""
+        return self.delete_update(state, D, n_valid)
 
     def axis_roles(self):
         """Pytree with the state's structure, each leaf a role string."""

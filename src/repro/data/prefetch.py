@@ -46,6 +46,11 @@ class PrefetchQueue:
         self.unmatched_standins = 0
         self.done = False
         self._drop_next = 0  # pending late items to discard on arrival
+        # producer-thread exception, re-raised from get(): without this, a
+        # source that crashes mid-stream (e.g. on its ragged final batch)
+        # looks exactly like a clean end of stream and the consumer silently
+        # truncates — the daemon thread's traceback goes nowhere
+        self._error: Optional[BaseException] = None
         self._thread = threading.Thread(
             target=self._produce, args=(source,), daemon=True
         )
@@ -55,6 +60,8 @@ class PrefetchQueue:
         try:
             for item in source:
                 self.q.put(item)
+        except BaseException as e:  # noqa: BLE001 — forwarded, not swallowed
+            self._error = e
         finally:
             self.done = True
             self.q.put(_DONE)
@@ -97,6 +104,8 @@ class PrefetchQueue:
                     self._drop_next += 1  # the late item is now a duplicate
                     return self.backup, True
             if item is _DONE:
+                if self._error is not None:
+                    raise self._error  # producer crashed: not end-of-stream
                 if self._drop_next:
                     # the awaited "late item" was actually end-of-stream:
                     # its stand-in counted a batch the source never produced

@@ -19,7 +19,7 @@ from repro.engine.engine import (
     StagedChunk,
     TriangleCountEngine,
 )
-from repro.engine.service import StreamReport, run_stream
+from repro.engine.service import StreamReport, run_signed_stream, run_stream
 
 __all__ = [
     "BACKENDS",
@@ -31,6 +31,7 @@ __all__ = [
     "StagedChunk",
     "StreamReport",
     "TriangleCountEngine",
+    "run_signed_stream",
     "run_stream",
     "select_backend",
 ]

@@ -97,6 +97,12 @@ class BackendPlan:
     # where the state lives (repro.core.distributed.make_banked_estimate /
     # make_sharded_estimate); the gather path stays available as the oracle.
     build_estimate: Optional[Callable] = None
+    # (config, mesh) -> jitted deletion update (the turnstile path). Banked
+    # plans: f(state_bank, Db (T,s,2), n_valid (T,)); unbanked plans:
+    # f(state, D (s,2), n_valid). The deletion kernel is elementwise per
+    # estimator and carries no RNG, so every plan supports it — shardmap
+    # included (it shares the pjit builder; no routed collectives needed).
+    build_delete: Optional[Callable] = None
 
 
 def _tenant_axis(config) -> str:
@@ -163,6 +169,25 @@ def _build_banked_pjit_chunk(w_mode: str):
         )
 
     return build
+
+
+def _build_single_delete(config, mesh) -> Callable:
+    scheme = config_scheme(config)
+    return jax.jit(jax.vmap(scheme.delete_update), donate_argnums=(0,))
+
+
+def _build_pjit_delete(config, mesh) -> Callable:
+    from repro.core.distributed import make_pjit_delete
+
+    return make_pjit_delete(mesh, scheme=config_scheme(config))
+
+
+def _build_banked_delete(config, mesh) -> Callable:
+    from repro.core.distributed import make_banked_delete
+
+    return make_banked_delete(
+        mesh, tenant_axis=_tenant_axis(config), scheme=config_scheme(config)
+    )
 
 
 def _banked_sharding(config, mesh):
@@ -246,24 +271,29 @@ def _banked_plan(w_mode: str) -> BackendPlan:
         batch_w_sharding=_banked_batch_w_sharding(w_mode),
         chunk_w_sharding=_banked_chunk_w_sharding(w_mode),
         build_estimate=_build_banked_estimate,
+        build_delete=_build_banked_delete,
     )
 
 
 _PLANS = {
     "single": BackendPlan(
-        "single", True, False, _build_single, _build_single_chunk
+        "single", True, False, _build_single, _build_single_chunk,
+        build_delete=_build_single_delete,
     ),
     "pjit_independent": BackendPlan(
         "pjit_independent", False, False, _build_pjit("independent"),
         build_estimate=_build_sharded_estimate,
+        build_delete=_build_pjit_delete,
     ),
     "pjit_coordinated": BackendPlan(
         "pjit_coordinated", False, False, _build_pjit("coordinated_xla"),
         build_estimate=_build_sharded_estimate,
+        build_delete=_build_pjit_delete,
     ),
     "shardmap": BackendPlan(
         "shardmap", False, True, _build_shardmap,
         build_estimate=_build_sharded_estimate,
+        build_delete=_build_pjit_delete,
     ),
     "banked_pjit_independent": _banked_plan("independent"),
     "banked_pjit_coordinated": _banked_plan("coordinated_xla"),

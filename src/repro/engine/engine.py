@@ -30,7 +30,8 @@ scheme's axis roles, and the snapshot walks the state pytree's own field
 names. Two service-surface assumptions remain on the state shape: it must be
 a NamedTuple exposing an ``m_seen`` stream-length leaf (``edges_seen()`` and
 the CLIs read it), and its field names must avoid the snapshot's reserved
-keys (``root_keys``/``step``/``config``/``scheme``). Every NBSI-state scheme
+keys (``root_keys``/``step``/``dyn_step``/``config``/``scheme``/
+``window_edges``/``window_expiry``/``window_len``). Every NBSI-state scheme
 satisfies both by construction; a scheme with a novel state pytree must too.
 Schemes with the NBSI update (``global``/``local``) share compiled programs
 and are bit-identical in state for equal seeds.
@@ -73,11 +74,18 @@ Snapshot format
 ``snapshot()`` / ``bank_snapshot()`` return a flat dict of **host numpy**
 arrays: the state fields above (always with the leading tenant axis, even
 for unbanked plans), ``root_keys (T, 2)``, ``step ()`` int64 (the batch
-cursor), ``config`` = [r, batch_size, n_tenants] int64, and ``scheme`` (the
-scheme name as a 0-d str array) for the restore handshake — restoring into an
-engine running a different scheme raises ``SnapshotMismatch``; snapshots
-written before the scheme layer existed lack the key and restore as
-``global``. The format carries no mesh or chunking information — restore
+cursor), ``dyn_step ()`` int64 (the signed-batch cursor; pre-dynamic
+snapshots lack it and restore as ``step``), ``config`` = [r, batch_size,
+n_tenants] int64, and ``scheme`` (the scheme name as a 0-d str array) for the
+restore handshake — restoring into an engine running a different scheme
+raises ``SnapshotMismatch``; snapshots written before the scheme layer
+existed lack the key and restore as ``global``. Window/decay engines add the
+fixed-capacity live-edge ring: ``window_edges (T, C, 2)`` int32,
+``window_expiry (T, C)`` int64 (-1 padding), ``window_len (T,)`` int64, with
+``C`` = the window length (or the decay TTL cap) — restoring a windowed
+engine from a snapshot without them (or with a different capacity) raises
+``SnapshotMismatch``. The format carries no mesh or chunking information —
+restore
 device_puts the bank through the *target* engine's plan sharding, so a
 snapshot taken on a 4-device 2-D mesh restores onto one device, a different
 mesh shape, or a different tenants-per-device split, bit-identically
@@ -126,6 +134,19 @@ class EngineConfig:
     # granularity — state and RNG stream are identical for any K, so snapshots
     # restore across engines with different chunk_size.
     chunk_size: int = 1
+    # fully-dynamic modes (mutually exclusive). window=N keeps only the most
+    # recent N inserted edges per tenant live (count-based sliding window):
+    # the engine tracks insertions in a host-side ring and authors expiry
+    # deletion batches through scheme.expire as the window slides. decay=D
+    # (> 1) gives each inserted edge an independent geometric lifetime with
+    # mean D batches-of-one-edge (exponential decay), deterministically
+    # derived from (tenant seed, insertion position) so restores and the test
+    # oracle reproduce identical lifetimes. Both modes assume each edge key
+    # is inserted at most once while a previous copy is live (the turnstile
+    # single-live-copy contract). 0 / 0.0 = insertion-only (the default; the
+    # ingest path is bit-identical to pre-dynamic engines).
+    window: int = 0
+    decay: float = 0.0
 
     def __post_init__(self):
         if isinstance(self.scheme_params, dict):
@@ -136,6 +157,17 @@ class EngineConfig:
             raise ValueError(
                 f"groups must be >= 1, got {self.groups}; estimate() uses "
                 "effective_groups(r, groups) so no estimator is ever dropped"
+            )
+        if self.window < 0:
+            raise ValueError(f"window must be >= 0, got {self.window}")
+        if self.decay != 0.0 and self.decay <= 1.0:
+            raise ValueError(
+                f"decay must be > 1 (mean edge lifetime), got {self.decay}"
+            )
+        if self.window and self.decay:
+            raise ValueError(
+                "window and decay are mutually exclusive dynamic modes; "
+                f"got window={self.window}, decay={self.decay}"
             )
 
     def resolved_scheme(self) -> EstimatorScheme:
@@ -170,6 +202,9 @@ class EngineDiagnostics:
     backend: str = ""
     queries_answered: int = 0  # estimate() calls (any path)
     query_cache_hits: int = 0  # answered from the per-step estimate cache
+    delete_batches: int = 0  # explicit turnstile deletion batches applied
+    edges_deleted: int = 0  # max-over-tenants valid edges in those batches
+    window_expired: int = 0  # edges expired by the window/decay clock
     # overflow scalars from a pre-restore stream discarded by restore() —
     # they describe batches the restored state never saw, so draining them
     # would trigger a bogus capacity escalation (and recompile)
@@ -190,6 +225,10 @@ class StagedChunk:
     Wb: Any  # (n_tenants, K, s, 2) int32 device array
     nv: Any  # (n_tenants, K) int32 device array
     edges: int  # host-side max-over-tenants total valid edges (for diag)
+    # host-side copies kept for the window clock (None when the engine runs
+    # insertion-only — no host memory spent on static streams)
+    W_host: Any = None  # (n_tenants, K, s, 2) int32
+    nv_host: Any = None  # (n_tenants, K) int64
 
 
 def _snapshot_config(snap: dict) -> tuple:
@@ -214,6 +253,20 @@ class TriangleCountEngine:
         )
         self.diag = EngineDiagnostics(backend=self.plan.name)
         self._step = 0  # batches ingested so far (the RNG fold_in counter)
+        # dyn_step counts EXTERNAL signed batches (insert + delete); it is
+        # the resume cursor for signed streams, where `step` alone (inserts
+        # only, the RNG cursor) cannot name a position
+        self._dyn_step = 0
+        self._delete = None  # jitted deletion program, built on first use
+        # the window/decay clock: per-tenant total insertions, maintained
+        # host-side so expiry checks never sync on device m_seen (equal to it
+        # by construction; rebuilt from the snapshot's m_seen on restore)
+        self._inserted = np.zeros((config.n_tenants,), np.int64)
+        # per-tenant FIFO of live (u, v, expire_at) triples; only populated
+        # in window/decay mode. expire_at = insert position + window (or the
+        # edge's deterministic TTL); an edge is dead once expire_at < clock.
+        self._dynamic = bool(config.window or config.decay)
+        self._win: list[list] = [[] for _ in range(config.n_tenants)]
         self._pending_overflow: list = []  # device scalars, drained lazily
         self._root_keys = jnp.stack(
             [jax.random.PRNGKey(s) for s in config.tenant_seeds()]
@@ -267,8 +320,17 @@ class TriangleCountEngine:
 
     @property
     def step(self) -> int:
-        """Number of batches ingested (also the RNG fold_in cursor)."""
+        """Number of INSERT batches ingested (also the RNG fold_in cursor).
+        Deletions never advance it — that is what keeps all-insertion
+        turnstile streams bit-identical to the insertion-only path."""
         return self._step
+
+    @property
+    def dyn_step(self) -> int:
+        """Number of external signed batches applied (inserts + deletions).
+        The resume cursor for signed streams; equals ``step`` on
+        insertion-only streams."""
+        return self._dyn_step
 
     def edges_seen(self) -> np.ndarray:
         """(n_tenants,) int64: stream length ingested per tenant."""
@@ -320,6 +382,7 @@ class TriangleCountEngine:
         else:
             raise ValueError(f"W must be (s,2) or (T,s,2), got {W.shape}")
 
+        Wb_host, nv_host = Wb, nv  # window clock reads these after dispatch
         keys = jax.vmap(jax.random.fold_in, in_axes=(0, None))(
             self._root_keys, self._step
         )
@@ -347,9 +410,12 @@ class TriangleCountEngine:
         else:
             self._state = out
         self._step += 1
+        self._dyn_step += 1
         self._est_cache = {}  # the bank changed: cached answers are stale
         self.diag.batches_ingested += 1
-        self.diag.edges_ingested += int(np.max(nv))
+        self.diag.edges_ingested += int(np.max(nv_host))
+        self._track_inserts(Wb_host, nv_host)
+        self._flush_expired()
 
     def _drain_overflow(self) -> None:
         if not self._pending_overflow:
@@ -423,7 +489,13 @@ class TriangleCountEngine:
         # sequential ingest() calls would accumulate into diag.edges_ingested
         edges = int(nv_host.max(axis=0).sum())
         nv = jnp.asarray(nv_host, dtype=jnp.int32)
-        return StagedChunk(Wb=Wb, nv=nv, edges=edges)
+        return StagedChunk(
+            Wb=Wb,
+            nv=nv,
+            edges=edges,
+            W_host=Wb_host if self._dynamic else None,
+            nv_host=np.asarray(nv_host, np.int64),
+        )
 
     def ingest_chunk(self, Ws, n_valids=None) -> None:
         """Incorporate ``chunk_size`` batches in ONE device dispatch.
@@ -440,9 +512,23 @@ class TriangleCountEngine:
             self._state, c.Wb, c.nv, self._root_keys, self._step
         )
         self._step += K
+        self._dyn_step += K
         self._est_cache = {}  # the bank changed: cached answers are stale
         self.diag.batches_ingested += K
         self.diag.edges_ingested += c.edges
+        if c.W_host is not None:
+            for k in range(K):
+                self._track_inserts(c.W_host[:, k], c.nv_host[:, k])
+        else:
+            self._inserted += c.nv_host.sum(axis=1)
+        # one expiry flush per chunk, not per fused batch: within a chunk the
+        # window clock advances K batches before dead edges are patched out.
+        # Statistically harmless — a dead edge lingering in a sample is
+        # always wiped when its deletion lands (the patch rules key on the
+        # edge itself, not on when it died), so the post-flush state has the
+        # same unbiasedness as per-batch flushing — but it is why windowed
+        # chunked ingest is oracle-equal, not bit-equal, to per-batch.
+        self._flush_expired()
 
     def ingest_stream(
         self, batch_iter: Iterable[tuple[np.ndarray, int]]
@@ -485,6 +571,191 @@ class TriangleCountEngine:
         """Block until all dispatched ingest work has completed on device."""
         self._drain_overflow()
         jax.block_until_ready(self._state)
+
+    # -- turnstile deletions / windowed expiry ------------------------------
+    def _delete_program(self):
+        """The plan's jitted deletion update, built on first use (insertion-
+        only streams never pay its compile)."""
+        if self._delete is None:
+            if self.plan.build_delete is None:
+                raise ValueError(
+                    f"backend {self.plan.name!r} has no deletion path"
+                )
+            self._delete = self.plan.build_delete(self.config, self.mesh)
+        return self._delete
+
+    def _apply_delete(self, Db: np.ndarray, nv: np.ndarray) -> None:
+        """Dispatch one (T, s, 2) deletion batch through the plan's deletion
+        program. Internal: does not advance ``dyn_step`` or touch the window
+        buffers — both the explicit ``delete()`` path and the window clock's
+        expiry flush funnel through here."""
+        fn = self._delete_program()
+        if not self.plan.banked:
+            self._state = fn(
+                self._state, jnp.asarray(Db[0]), jnp.int32(int(nv[0]))
+            )
+        else:
+            self._state = fn(
+                self._state, jnp.asarray(Db), jnp.asarray(nv, dtype=jnp.int32)
+            )
+        self._est_cache = {}  # the bank changed: cached answers are stale
+
+    def delete(self, D: np.ndarray, n_valid: Optional[Any] = None) -> None:
+        """Turnstile-delete one batch of edges from every tenant.
+
+        Shape conventions mirror ``ingest``: ``(<=s, 2)`` broadcast to all
+        tenants or ``(n_tenants, <=s, 2)`` per-tenant. Each deleted edge must
+        be live (previously inserted, not yet deleted/expired) — the
+        single-live-copy contract ``repro.core.bulk.bulk_delete_update``
+        documents. Deletions consume no RNG and never advance ``step``, so
+        a signed stream containing zero deletions leaves the engine
+        bit-identical to the insertion-only path.
+        """
+        D = np.asarray(D)
+        T = self.n_tenants
+        if D.ndim == 2:
+            Dp, n = self._pad(D)
+            nv = np.full((T,), n if n_valid is None else int(n_valid), np.int32)
+            Db = np.broadcast_to(Dp[None], (T,) + Dp.shape)
+        elif D.ndim == 3:
+            if D.shape[0] != T:
+                raise ValueError(
+                    f"got {D.shape[0]} tenant batches for {T} tenants"
+                )
+            padded = [self._pad(D[t]) for t in range(T)]
+            Db = np.stack([p[0] for p in padded])
+            if n_valid is None:
+                nv = np.array([p[1] for p in padded], np.int32)
+            else:
+                nv = np.broadcast_to(np.asarray(n_valid, np.int32), (T,)).copy()
+        else:
+            raise ValueError(f"D must be (s,2) or (T,s,2), got {D.shape}")
+        self._apply_delete(Db, nv)
+        if self._dynamic:
+            self._forget_window(Db, nv)
+        self._dyn_step += 1
+        self.diag.delete_batches += 1
+        self.diag.edges_deleted += int(np.max(nv))
+
+    def ingest_signed_stream(self, batch_iter: Iterable) -> int:
+        """Drain a signed batch iterator (``graph_stream.signed_batches``).
+
+        Items are ``(W, n_valid)`` pairs (inserts) or ``(W, n_valid, sign)``
+        triples with sign +1/-1. Consecutive insert runs are fed through
+        ``ingest_stream`` — chunked ingest, staging, and the RNG cursor
+        behave exactly as on an unsigned stream, so an all-insertion signed
+        stream is structurally the same code path and therefore bit-identical
+        to ``ingest_stream``. Deletion batches apply between runs in stream
+        order. Returns the number of batches applied (= dyn_step delta).
+        """
+        it = iter(batch_iter)
+        lookahead: list = []  # holds the deletion that ended an insert run
+
+        def insert_run():
+            while True:
+                if lookahead:
+                    item = lookahead.pop()
+                else:
+                    try:
+                        item = next(it)
+                    except StopIteration:
+                        return
+                if len(item) > 2 and int(item[2]) < 0:
+                    lookahead.append(item)
+                    return
+                yield item[0], item[1]
+
+        n = 0
+        while True:
+            n += self.ingest_stream(insert_run())
+            if not lookahead:
+                return n
+            W, nv, _sign = lookahead.pop()
+            self.delete(W, nv)
+            n += 1
+
+    def _window_capacity(self) -> int:
+        """Max live entries a tenant's window buffer can hold after a flush
+        (and the snapshot's fixed window-array width): the window length, or
+        the decay TTL cap."""
+        if self.config.window:
+            return self.config.window
+        from repro.data.graph_stream import decay_cap
+
+        return decay_cap(self.config.decay)
+
+    def _track_inserts(self, W: np.ndarray, nv: np.ndarray) -> None:
+        """Advance the per-tenant insertion clock past one applied batch; in
+        window/decay mode also record each edge's expiry position."""
+        nv = np.asarray(nv, np.int64).reshape(-1)
+        if not self._dynamic:
+            self._inserted += nv
+            return
+        from repro.data.graph_stream import decay_ttls
+
+        seeds = self.config.tenant_seeds()
+        for t in range(self.n_tenants):
+            n = int(nv[t])
+            start = int(self._inserted[t])
+            if n == 0:
+                continue
+            pos = start + np.arange(n, dtype=np.int64)
+            if self.config.window:
+                exp = pos + self.config.window
+            else:
+                exp = pos + decay_ttls(seeds[t], start, n, self.config.decay)
+            rows, buf = W[t], self._win[t]
+            for j in range(n):
+                buf.append((int(rows[j, 0]), int(rows[j, 1]), int(exp[j])))
+            self._inserted[t] = start + n
+
+    def _flush_expired(self) -> None:
+        """Author expiry deletion batches for every edge the window clock has
+        slid past (``expire_at < inserted``) and patch them out of the bank.
+        No-op when nothing expired; loops when more than one batch width of
+        edges expired at once (chunked ingest, decay bursts)."""
+        if not self._dynamic:
+            return
+        T, s = self.n_tenants, self.config.batch_size
+        expired: list[list] = []
+        total = 0
+        for t in range(T):
+            clock = int(self._inserted[t])
+            buf = self._win[t]
+            dead = [e for e in buf if e[2] < clock]
+            if dead:
+                self._win[t] = [e for e in buf if e[2] >= clock]
+            expired.append(dead)
+            total += len(dead)
+        if total == 0:
+            return
+        self.diag.window_expired += total
+        while any(expired):
+            Db = np.zeros((T, s, 2), np.int32)
+            nv = np.zeros((T,), np.int32)
+            for t in range(T):
+                take, expired[t] = expired[t][:s], expired[t][s:]
+                nv[t] = len(take)
+                for j, (u, v, _) in enumerate(take):
+                    Db[t, j] = (u, v)
+            self._apply_delete(Db, nv)
+
+    def _forget_window(self, Db: np.ndarray, nv: np.ndarray) -> None:
+        """Drop explicitly deleted edges from the window buffers so the
+        window clock cannot author a second deletion for them later."""
+        for t in range(self.n_tenants):
+            n = int(nv[t])
+            if n == 0:
+                continue
+            gone = {
+                (min(int(Db[t, j, 0]), int(Db[t, j, 1])),
+                 max(int(Db[t, j, 0]), int(Db[t, j, 1])))
+                for j in range(n)
+            }
+            self._win[t] = [
+                e for e in self._win[t]
+                if (min(e[0], e[1]), max(e[0], e[1])) not in gone
+            ]
 
     # -- queries ------------------------------------------------------------
     def estimate(self, *, gather: bool = False) -> np.ndarray:
@@ -555,17 +826,35 @@ class TriangleCountEngine:
         ``repro.train.checkpoint.CheckpointManager`` unchanged.
         """
         self._drain_overflow()
+        self._flush_expired()  # no dead edge may outlive the snapshot
         st = self._state
         if not self.plan.banked:
             st = jax.tree.map(lambda x: x[None], st)
         snap = {f: np.asarray(getattr(st, f)) for f in st._fields}
         snap["root_keys"] = np.asarray(self._root_keys)
         snap["step"] = np.int64(self._step)
+        snap["dyn_step"] = np.int64(self._dyn_step)
         snap["config"] = np.array(
             [self.config.r, self.config.batch_size, self.config.n_tenants],
             np.int64,
         )
         snap["scheme"] = np.array(self.scheme.name)
+        if self._dynamic:
+            # fixed-capacity window arrays (CheckpointManager restores into a
+            # template of EXACT shapes, so the width is the structural bound
+            # _window_capacity guarantees, not the current fill level)
+            T, C = self.n_tenants, self._window_capacity()
+            we = np.zeros((T, C, 2), np.int32)
+            wx = np.full((T, C), -1, np.int64)
+            wl = np.zeros((T,), np.int64)
+            for t, buf in enumerate(self._win):
+                wl[t] = len(buf)
+                for j, (u, v, x) in enumerate(buf):
+                    we[t, j] = (u, v)
+                    wx[t, j] = x
+            snap["window_edges"] = we
+            snap["window_expiry"] = wx
+            snap["window_len"] = wl
         return snap
 
     # mesh-portability contract: bank_snapshot gathers to host, bank_restore
@@ -619,6 +908,42 @@ class TriangleCountEngine:
         self._state = bank
         self._root_keys = jnp.asarray(snap["root_keys"])
         self._step = int(snap["step"])
+        # pre-dynamic snapshots carry no dyn_step: insertion-only streams
+        # have dyn_step == step by construction
+        self._dyn_step = int(snap.get("dyn_step", snap["step"]))
+        # the window clock equals the device insertion counter (deletions
+        # never touch m_seen), so it restores from the state itself
+        self._inserted = self.edges_seen().astype(np.int64).copy()
+        T = self.n_tenants
+        if self._dynamic:
+            if "window_edges" not in snap:
+                raise SnapshotMismatch(
+                    "engine runs a window/decay mode but the snapshot has no "
+                    "window state (taken by an insertion-only engine?) — the "
+                    "live-edge ring cannot be reconstructed"
+                )
+            we = np.asarray(snap["window_edges"])
+            wx = np.asarray(snap["window_expiry"])
+            wl = np.asarray(snap["window_len"])
+            want_shape = (T, self._window_capacity(), 2)
+            if we.shape != want_shape:
+                raise SnapshotMismatch(
+                    f"snapshot window state {we.shape} != engine capacity "
+                    f"{want_shape}: the snapshot was taken under a different "
+                    "window/decay configuration"
+                )
+            self._win = [
+                [
+                    (int(we[t, j, 0]), int(we[t, j, 1]), int(wx[t, j]))
+                    for j in range(int(wl[t]))
+                ]
+                for t in range(T)
+            ]
+        else:
+            # a windowed snapshot restoring into an insertion-only engine is
+            # legal — the bank is a valid patched state; edges simply stop
+            # expiring from here on
+            self._win = [[] for _ in range(T)]
 
     bank_restore = restore
 

@@ -76,6 +76,57 @@ QueryCallback = Callable[[int, np.ndarray, np.ndarray], None]
 # (engine_step, per-tenant estimates, per-tenant edges_seen) -> None
 
 
+def _restore_latest(
+    engine: TriangleCountEngine, ckpt_dir: Optional[str]
+) -> tuple[Optional[CheckpointManager], bool]:
+    """Open ``ckpt_dir`` and restore the newest complete checkpoint into
+    ``engine``. Returns (manager or None, whether a state was restored).
+
+    Keys the engine's snapshot template grew over time (``scheme``, then
+    ``dyn_step``) are popped from the template when the saved manifest
+    predates them — ``engine.restore`` defaults both. The window-state keys
+    are NOT optional: a window/decay engine restoring from a checkpoint
+    without them must fail (the live-edge ring cannot be reconstructed), and
+    the KeyError surfaces as SnapshotMismatch here."""
+    if ckpt_dir is None:
+        return None, False
+    ckpt = CheckpointManager(ckpt_dir, async_save=True)
+    template = engine.snapshot()
+    saved = ckpt.manifest()
+    if saved is not None and "keys" in saved:
+        # manifest keys are tree_flatten_with_path names: a top-level snapshot
+        # entry 'dyn_step' is recorded as "['dyn_step']", not "dyn_step"
+        names = set(saved["keys"])
+        for optional in ("scheme", "dyn_step"):
+            if optional not in names and f"[{optional!r}]" not in names:
+                template.pop(optional, None)
+    try:
+        restored, _manifest = ckpt.restore(template)
+    except (AssertionError, KeyError) as e:
+        raise SnapshotMismatch(
+            f"checkpoint in {ckpt_dir!r} does not fit this engine "
+            f"(r={engine.config.r}, tenants={engine.config.n_tenants}); "
+            "point --ckpt-dir at a fresh directory or match the saved "
+            f"config. Underlying error: {e}"
+        ) from e
+    if restored is None:
+        return ckpt, False
+    # the resume skip counts BATCHES, so resuming under a different
+    # batch_size would mis-position the stream (skip the wrong edges)
+    ckpt_bs = int(np.asarray(restored["config"])[1])
+    if ckpt_bs != engine.config.batch_size:
+        raise SnapshotMismatch(
+            f"checkpoint in {ckpt_dir!r} was written with "
+            f"batch_size={ckpt_bs}, engine has "
+            f"{engine.config.batch_size}; the stream loops resume by "
+            "skipping whole batches, so the sizes must match "
+            "(re-batching needs manual engine.restore + stream "
+            "positioning)"
+        )
+    engine.restore(restored)
+    return ckpt, True
+
+
 def run_stream(
     engine: TriangleCountEngine,
     batch_iter: Iterable,
@@ -101,39 +152,9 @@ def run_stream(
     skipping is unaffected).
     """
     rep = StreamReport()
-    ckpt = None
-    if ckpt_dir is not None:
-        ckpt = CheckpointManager(ckpt_dir, async_save=True)
-        template = engine.snapshot()
-        saved = ckpt.manifest()
-        if saved is not None and "keys" in saved and "scheme" not in saved["keys"]:
-            # pre-scheme-layer checkpoint: restore without the scheme leaf;
-            # engine.restore defaults the handshake to "global"
-            template.pop("scheme", None)
-        try:
-            restored, manifest = ckpt.restore(template)
-        except (AssertionError, KeyError) as e:
-            raise SnapshotMismatch(
-                f"checkpoint in {ckpt_dir!r} does not fit this engine "
-                f"(r={engine.config.r}, tenants={engine.config.n_tenants}); "
-                "point --ckpt-dir at a fresh directory or match the saved "
-                f"config. Underlying error: {e}"
-            ) from e
-        if restored is not None:
-            # the skip below counts BATCHES, so resuming under a different
-            # batch_size would mis-position the stream (skip the wrong edges)
-            ckpt_bs = int(np.asarray(restored["config"])[1])
-            if ckpt_bs != engine.config.batch_size:
-                raise SnapshotMismatch(
-                    f"checkpoint in {ckpt_dir!r} was written with "
-                    f"batch_size={ckpt_bs}, engine has "
-                    f"{engine.config.batch_size}; run_stream resumes by "
-                    "skipping whole batches, so the sizes must match "
-                    "(re-batching needs manual engine.restore + stream "
-                    "positioning)"
-                )
-            engine.restore(restored)
-            rep.resumed_from = engine.step
+    ckpt, restored = _restore_latest(engine, ckpt_dir)
+    if restored:
+        rep.resumed_from = engine.step
 
     pf = PrefetchQueue(iter(batch_iter), depth=prefetch_depth, deadline_s=deadline_s)
     meta = {
@@ -205,6 +226,85 @@ def run_stream(
         ckpt.wait()
         ckpt.save(
             engine.step,
+            engine.snapshot(),
+            {"config_hash": config_hash(meta), **meta},
+        )
+        ckpt.wait()
+    return rep
+
+
+def run_signed_stream(
+    engine: TriangleCountEngine,
+    batch_iter: Iterable,
+    *,
+    ckpt_dir: Optional[str] = None,
+    ckpt_every: int = 0,
+    report_every: int = 0,
+    on_report: Optional[QueryCallback] = None,
+    prefetch_depth: int = 4,
+    deadline_s: Optional[float] = None,
+) -> StreamReport:
+    """Drain a SIGNED batch iterator into ``engine`` (the turnstile loop).
+
+    Items are ``(W, n_valid)`` pairs (inserts) or ``(W, n_valid, sign)``
+    triples with sign +1/-1 (``repro.data.graph_stream.signed_batches``).
+    The service surface mirrors ``run_stream`` — prefetch overlap,
+    checkpoint/resume, rolling report queries — with every cursor keyed on
+    ``engine.dyn_step`` (the signed-batch position) instead of ``step``,
+    because deletion batches advance the stream without advancing the RNG
+    cursor. Resume skips ``dyn_step`` items of the iterator and checkpoints
+    are saved under the dyn_step index, so a killed churn stream continues
+    bit-for-bit. Chunked ingest does not apply here (deletions break insert
+    runs at arbitrary points); drive ``engine.ingest_signed_stream`` directly
+    when dispatch fusion matters more than checkpoints.
+    """
+    rep = StreamReport()
+    ckpt, restored = _restore_latest(engine, ckpt_dir)
+    if restored:
+        rep.resumed_from = engine.dyn_step
+
+    pf = PrefetchQueue(
+        iter(batch_iter), depth=prefetch_depth, deadline_s=deadline_s
+    )
+    meta = {
+        "r": engine.config.r,
+        "batch": engine.config.batch_size,
+        "tenants": engine.config.n_tenants,
+    }
+    skip = engine.dyn_step  # signed batches already folded into the state
+    t0 = time.time()
+    seen = 0
+    while True:
+        try:
+            item, stale = pf.get()
+        except StopIteration:
+            break
+        rep.stale_batches += int(stale)
+        seen += 1
+        if seen <= skip:
+            continue
+        if len(item) > 2 and int(item[2]) < 0:
+            engine.delete(item[0], item[1])
+        else:
+            engine.ingest(item[0], item[1])
+        rep.batches += 1
+        rep.edges += int(np.max(np.asarray(item[1])))
+        if report_every and engine.dyn_step % report_every == 0 and on_report:
+            on_report(engine.dyn_step, engine.estimate(), engine.edges_seen())
+            rep.queries += 1
+        if ckpt and ckpt_every and rep.batches % ckpt_every == 0:
+            ckpt.save(
+                engine.dyn_step,
+                engine.snapshot(),
+                {"config_hash": config_hash(meta), **meta},
+            )
+    engine.sync()
+    rep.seconds = time.time() - t0
+    rep.phantom_batches = pf.unmatched_standins
+    if ckpt:
+        ckpt.wait()
+        ckpt.save(
+            engine.dyn_step,
             engine.snapshot(),
             {"config_hash": config_hash(meta), **meta},
         )

@@ -32,10 +32,18 @@ from repro.core.sequential import count_triangles, local_triangle_counts
 from repro.data.graph_stream import (
     barabasi_albert_stream,
     batches,
+    churn_stream,
+    dynamic_live_edges,
     erdos_renyi_stream,
     planted_triangle_stream,
+    signed_batches,
 )
-from repro.engine import EngineConfig, TriangleCountEngine, run_stream
+from repro.engine import (
+    EngineConfig,
+    TriangleCountEngine,
+    run_signed_stream,
+    run_stream,
+)
 from repro.launch.mesh import make_stream_mesh
 
 
@@ -77,6 +85,8 @@ def build_engine(args) -> TriangleCountEngine:
             backend=args.backend,
             tenant_axis=getattr(args, "tenant_axis", "tenants"),
             chunk_size=getattr(args, "chunk", 1),
+            window=getattr(args, "window", 0),
+            decay=getattr(args, "decay", 0.0),
             **scheme_args(args),
         ),
         mesh=mesh,
@@ -84,6 +94,36 @@ def build_engine(args) -> TriangleCountEngine:
     if mesh is not None:
         print(f"mesh: {dict(mesh.shape)} -> plan {engine.plan.name}", flush=True)
     return engine
+
+
+def add_dynamic_flags(ap) -> None:
+    """Turnstile/window flags shared by the stream drivers."""
+    ap.add_argument("--deletions", type=float, default=0.0,
+                    help="turnstile churn: each edge is deleted later in the "
+                         "stream with this probability (0 = insertion-only)")
+    ap.add_argument("--window", type=int, default=0,
+                    help="count-based sliding window: keep only the most "
+                         "recent N inserted edges live (0 = unbounded)")
+    ap.add_argument("--decay", type=float, default=0.0,
+                    help="exponential decay: mean edge lifetime in "
+                         "insertions, > 1 (0 = off; excludes --window)")
+
+
+def make_dynamic_stream(args, edges):
+    """(signed stream, live edge set) for the dynamic flags; the live set is
+    the exact ground truth after windows/decay — what the estimate chases."""
+    if args.deletions:
+        stream = churn_stream(edges, args.deletions, seed=args.seed + 1)
+    else:  # window/decay only: all-insert signed stream
+        import numpy as np
+
+        stream = np.concatenate(
+            [edges, np.ones((len(edges), 1), np.int32)], axis=1
+        )
+    live = dynamic_live_edges(
+        stream, window=args.window, decay=args.decay, seed=args.seed
+    )
+    return stream, live
 
 
 def add_scheme_flags(ap) -> None:
@@ -144,6 +184,11 @@ def main():
     ap.add_argument("--backend", default="auto",
                     help="auto or any name in repro.engine.backends.BACKENDS")
     add_scheme_flags(ap)
+    add_dynamic_flags(ap)
+    ap.add_argument("--assert-rel-err", type=float, default=0.0,
+                    help="exit nonzero unless tenant 0's estimate lands "
+                         "within this relative error of the true (live) "
+                         "count — the CI smoke check")
     ap.add_argument("--mesh", default="",
                     help="device mesh spec, e.g. '8' or 'tenants=2,estimators=4' "
                          "(see repro.launch.mesh.make_stream_mesh and "
@@ -158,24 +203,46 @@ def main():
     args = ap.parse_args()
 
     edges, tau = make_stream(args)
-    print(f"stream: m={len(edges)} tau={tau}")
+    dynamic = bool(args.deletions or args.window or args.decay)
+    truth_edges = edges
+    if dynamic:
+        stream, live = make_dynamic_stream(args, edges)
+        truth_edges = live
+        tau = count_triangles(live) if len(live) <= 2_000_000 else None
+        print(f"stream: m={len(edges)} signed={len(stream)} "
+              f"live={len(live)} tau_live={tau}")
+    else:
+        print(f"stream: m={len(edges)} tau={tau}")
 
     engine = build_engine(args)
-    rep = run_stream(
-        engine,
-        batches(edges, args.batch),
-        ckpt_dir=args.ckpt_dir if args.ckpt_every else None,
-        ckpt_every=args.ckpt_every,
-    )
+    if args.deletions:
+        # deletion batches break insert runs, so drive the signed service loop
+        rep = run_signed_stream(
+            engine,
+            signed_batches(stream, args.batch),
+            ckpt_dir=args.ckpt_dir if args.ckpt_every else None,
+            ckpt_every=args.ckpt_every,
+        )
+    else:
+        rep = run_stream(
+            engine,
+            batches(edges, args.batch),
+            ckpt_dir=args.ckpt_dir if args.ckpt_every else None,
+            ckpt_every=args.ckpt_every,
+        )
     dt = max(rep.seconds, 1e-9)
-    print(f"processed {len(edges)} edges in {dt:.2f}s "
-          f"({len(edges)/dt/1e6:.2f}M edges/s, r={args.estimators})")
+    print(f"processed {rep.edges} edges in {dt:.2f}s "
+          f"({rep.edges/dt/1e6:.2f}M edges/s, r={args.estimators})")
+    if dynamic:
+        print(f"dynamic: deletes={engine.diag.delete_batches} batches "
+              f"expired={engine.diag.window_expired} edges "
+              f"(dyn_step={engine.dyn_step})")
     ests = engine.estimate()
     if args.scheme == "local":
         true_counts = None
         if tau is not None:
             n_vertices = args.vertices or args.nodes
-            true_counts = local_triangle_counts(edges, n_vertices)
+            true_counts = local_triangle_counts(truth_edges, n_vertices)
         for t in range(args.tenants):
             print_local_estimates(ests[t], t, true_counts)
         return
@@ -186,6 +253,14 @@ def main():
         e = float(ests[t])
         print(f"estimate[tenant {t}]: {e:.1f}" + (
             f"  rel.err: {abs(e-tau)/max(tau,1):.3%}" if tau else ""))
+    if args.assert_rel_err:
+        if tau is None:
+            sys.exit("--assert-rel-err needs a computable true count")
+        err = abs(est - tau) / max(tau, 1)
+        if err > args.assert_rel_err:
+            sys.exit(f"estimate {est:.1f} misses true {tau} by {err:.3%} "
+                     f"(> {args.assert_rel_err:.3%})")
+        print(f"rel.err {err:.3%} within {args.assert_rel_err:.3%} OK")
 
 
 if __name__ == "__main__":

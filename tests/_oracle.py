@@ -1,0 +1,125 @@
+"""Brute-force oracles the dynamic-stream tests compare the engine against.
+
+Everything here is deliberately naive and independent of ``repro.core``'s
+vectorized kernels: hash-set triangle counting, O(m) rank scans, and a plain
+dict replay of signed streams. The one shared dependency is
+``repro.data.graph_stream.decay_ttls`` — the deterministic TTL hash is part
+of the decay-mode *contract* (engine and oracle must derive identical
+lifetimes), not an implementation detail to re-derive.
+
+Oracle surface:
+  * ``brute_rank(W, x, y)``           — paper Definition 4.2 (moved here from
+    ``test_core`` so every brute-force helper lives in one module).
+  * ``oracle_live_edges(stream, ...)``— replay a signed (u, v, sign) stream
+    (turnstile deletes honored) and apply the window/decay expiry rule.
+  * ``oracle_triangles(edges)``       — exact triangle count.
+  * ``oracle_count(stream, ...)``     — the composition: exact triangle count
+    of the live graph a dynamic engine should be estimating.
+``tests/test_oracle.py`` pins all of these against hand-computed graphs.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data.graph_stream import decay_ttls
+
+
+def brute_rank(W: np.ndarray, x: int, y: int) -> int:
+    """Paper Definition 4.2, brute force."""
+    pos = None
+    for i, (a, b) in enumerate(W):
+        if {int(a), int(b)} == {x, y}:
+            pos = i
+            break
+    if pos is not None:
+        return sum(
+            1 for j in range(pos + 1, len(W)) if x in (int(W[j, 0]), int(W[j, 1]))
+        )
+    return sum(1 for a, b in W if x in (int(a), int(b)))
+
+
+def as_signed(edges: np.ndarray) -> np.ndarray:
+    """Insert-only (m, 2) edge stream as an (m, 3) all-(+1) signed stream."""
+    edges = np.asarray(edges, dtype=np.int32).reshape(-1, 2)
+    return np.concatenate(
+        [edges, np.ones((len(edges), 1), np.int32)], axis=1
+    )
+
+
+def oracle_live_edges(
+    stream: np.ndarray, window: int = 0, decay: float = 0.0, seed: int = 0
+) -> np.ndarray:
+    """Live (k, 2) edge set after a signed stream, dict replay.
+
+    Deletions (sign -1) must name a live edge (KeyError otherwise — the
+    single-live-copy contract, surfaced loudly). ``window``/``decay`` apply
+    the engine's expiry rule on top: an edge inserted at position ``pos``
+    (counting inserts only) is expired iff ``pos + lifetime < total_inserts``
+    where lifetime is the window length or the edge's deterministic TTL.
+    """
+    stream = np.asarray(stream, dtype=np.int32).reshape(-1, 3)
+    live: dict[tuple[int, int], int] = {}  # canonical key -> insert position
+    inserts = 0
+    for u, v, s in stream:
+        key = (min(int(u), int(v)), max(int(u), int(v)))
+        if s >= 0:
+            live[key] = inserts
+            inserts += 1
+        else:
+            del live[key]
+    out = []
+    for (a, b), pos in live.items():
+        if window and pos + window < inserts:
+            continue
+        if decay:
+            ttl = int(decay_ttls(seed, pos, 1, decay)[0])
+            if pos + ttl < inserts:
+                continue
+        out.append((a, b))
+    return np.array(sorted(out), dtype=np.int32).reshape(-1, 2)
+
+
+def oracle_triangles(edges: np.ndarray) -> int:
+    """Exact triangle count, adjacency-set brute force."""
+    edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    adj: dict[int, set[int]] = {}
+    keys = set()
+    for u, v in edges:
+        u, v = int(u), int(v)
+        if u == v:
+            continue
+        keys.add((min(u, v), max(u, v)))
+        adj.setdefault(u, set()).add(v)
+        adj.setdefault(v, set()).add(u)
+    return sum(len(adj[u] & adj[v]) for u, v in keys) // 3
+
+
+def oracle_local_triangles(edges: np.ndarray, n_vertices: int) -> np.ndarray:
+    """Exact per-vertex incident-triangle counts, (n_vertices,) int64."""
+    edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    adj: dict[int, set[int]] = {}
+    keys = set()
+    for u, v in edges:
+        u, v = int(u), int(v)
+        if u == v:
+            continue
+        keys.add((min(u, v), max(u, v)))
+        adj.setdefault(u, set()).add(v)
+        adj.setdefault(v, set()).add(u)
+    counts = np.zeros((n_vertices,), np.int64)
+    for u, v in keys:
+        for w in adj[u] & adj[v]:
+            # each triangle {u, v, w} is visited once per edge; crediting the
+            # opposite vertex w credits each corner exactly once overall
+            if 0 <= w < n_vertices:
+                counts[w] += 1
+    return counts
+
+
+def oracle_count(
+    stream: np.ndarray, window: int = 0, decay: float = 0.0, seed: int = 0
+) -> int:
+    """Exact triangle count of the live graph a dynamic engine estimates."""
+    return oracle_triangles(
+        oracle_live_edges(stream, window=window, decay=decay, seed=seed)
+    )

@@ -21,18 +21,8 @@ from repro.data.graph_stream import (
 )
 
 
-def brute_rank(W: np.ndarray, x: int, y: int) -> int:
-    """Paper Definition 4.2, brute force."""
-    pos = None
-    for i, (a, b) in enumerate(W):
-        if {int(a), int(b)} == {x, y}:
-            pos = i
-            break
-    if pos is not None:
-        return sum(
-            1 for j in range(pos + 1, len(W)) if x in (int(W[j, 0]), int(W[j, 1]))
-        )
-    return sum(1 for a, b in W if x in (int(a), int(b)))
+# the paper-definition brute forces live beside the dynamic-stream oracle now
+from _oracle import brute_rank  # noqa: E402
 
 
 def run_stream(edges, r, batch_size, seed=0):

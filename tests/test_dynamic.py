@@ -1,0 +1,403 @@
+"""Fully-dynamic stream tests: turnstile deletions, sliding windows, and
+exponential decay against the brute-force oracle (tests/_oracle.py).
+
+Three layers of guarantees, in order of strictness:
+  * bit-identity — an all-insertion signed stream must leave the engine in
+    EXACTLY the state of the insertion-only path, for every scheme, chunked
+    or not (the dynamic machinery is free when unused);
+  * exactness — destroying every triangle deterministically zeroes the
+    estimate (deletion clears chi / has_f3, never just damps them);
+  * unbiasedness — on random churn/window streams the mean coarse estimate
+    lands within a 5-sigma CI of the oracle's live count (CoCoS argument:
+    m_seen stays the insertion-count weight through deletions).
+
+Distributed plans are swept by the ``slow`` subprocess driver at the bottom
+(tests/_dynamic_driver.py); everything else here runs on the single backend.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _oracle import (
+    as_signed,
+    oracle_count,
+    oracle_live_edges,
+    oracle_local_triangles,
+)
+from repro.core import EstimatorState, coarse_estimates
+from repro.data.graph_stream import (
+    batches,
+    churn_stream,
+    erdos_renyi_stream,
+    signed_batches,
+)
+from repro.engine import (
+    EngineConfig,
+    SnapshotMismatch,
+    TriangleCountEngine,
+    run_signed_stream,
+)
+
+BS = 16
+SCHEME_PARAMS = {"local": (("n_pools", 4), ("n_vertices", 64))}
+
+
+def make_cfg(scheme="global", r=2048, **kw):
+    return EngineConfig(
+        r=r, batch_size=BS, scheme=scheme,
+        scheme_params=SCHEME_PARAMS.get(scheme), **kw
+    )
+
+
+def assert_snapshots_equal(sa: dict, sb: dict, msg=""):
+    assert set(sa) == set(sb), msg
+    for k in sa:
+        np.testing.assert_array_equal(sa[k], sb[k], err_msg=f"{msg}:{k}")
+
+
+def tenant_coarse(engine, t=0) -> np.ndarray:
+    """(r,) coarse per-estimator estimates for one tenant, from a snapshot."""
+    s = engine.snapshot()
+    state = EstimatorState(
+        f1=jnp.asarray(s["f1"][t]), chi=jnp.asarray(s["chi"][t]),
+        f2=jnp.asarray(s["f2"][t]), has_f3=jnp.asarray(s["has_f3"][t]),
+        m_seen=jnp.asarray(s["m_seen"][t]),
+    )
+    return np.asarray(coarse_estimates(state))
+
+
+def assert_within_ci(x: np.ndarray, tau: float, what=""):
+    """Mean coarse estimate within 5 sigma of the oracle count (plus a small
+    relative slack for the CI's own estimation noise) — the same bound the
+    insertion-only statistics suite uses."""
+    se = x.std() / np.sqrt(len(x))
+    assert abs(x.mean() - tau) < 5 * se + 0.05 * tau + 1.0, (
+        what, x.mean(), tau, se,
+    )
+
+
+class TestAllInsertBitIdentity:
+    """Regression: signed streams with no deletions are the insertion path."""
+
+    @pytest.mark.parametrize("scheme", ("global", "naive", "local"))
+    def test_per_batch(self, scheme):
+        edges = erdos_renyi_stream(30, 200, seed=3)
+        a = TriangleCountEngine(make_cfg(scheme))
+        for W, nv in batches(edges, BS):
+            a.ingest(W, nv)
+        b = TriangleCountEngine(make_cfg(scheme))
+        b.ingest_signed_stream(signed_batches(as_signed(edges), BS))
+        assert b.dyn_step == a.step
+        assert_snapshots_equal(a.snapshot(), b.snapshot(), scheme)
+        np.testing.assert_array_equal(a.estimate(), b.estimate())
+
+    def test_chunked(self):
+        edges = erdos_renyi_stream(30, 200, seed=4)
+        a = TriangleCountEngine(make_cfg(chunk_size=3))
+        a.ingest_stream(batches(edges, BS))
+        b = TriangleCountEngine(make_cfg(chunk_size=3))
+        b.ingest_signed_stream(signed_batches(as_signed(edges), BS))
+        assert_snapshots_equal(a.snapshot(), b.snapshot(), "chunk=3")
+
+
+class TestExactDeletion:
+    def test_destroying_every_triangle_zeroes_the_estimate(self):
+        # one triangle + pendant; deleting edge (1,2) leaves a triangle-free
+        # live graph, so EVERY coarse estimator must read exactly 0 — chi
+        # survives only with its closing edge, f2 only with f1
+        eng = TriangleCountEngine(make_cfg(r=4096))
+        eng.ingest(np.array([[0, 1], [0, 2], [1, 2], [2, 3]], np.int32), 4)
+        eng.delete(np.array([[1, 2]], np.int32), 1)
+        assert float(eng.estimate()[0]) == 0.0
+        assert (tenant_coarse(eng) == 0.0).all()
+        assert eng.diag.delete_batches == 1
+        assert eng.diag.edges_deleted == 1
+        assert eng.dyn_step == 2  # one insert batch + one delete batch
+
+    def test_reinsert_recovers(self):
+        eng = TriangleCountEngine(make_cfg(r=8192))
+        eng.ingest(np.array([[0, 1], [0, 2], [1, 2], [2, 3]], np.int32), 4)
+        eng.delete(np.array([[1, 2]], np.int32), 1)
+        eng.ingest(np.array([[1, 2]], np.int32), 1)
+        assert_within_ci(tenant_coarse(eng), 1.0, "reinsert")
+
+
+class TestTurnstileAccuracy:
+    @pytest.mark.parametrize("scheme", ("global", "naive"))
+    def test_churn_matches_oracle(self, scheme):
+        edges = erdos_renyi_stream(24, 150, seed=11)
+        stream = churn_stream(edges, 0.3, seed=12)
+        tau = oracle_count(stream)
+        assert tau > 0
+        eng = TriangleCountEngine(make_cfg(scheme, r=20_000))
+        eng.ingest_signed_stream(signed_batches(stream, BS))
+        assert_within_ci(tenant_coarse(eng), tau, scheme)
+
+    def test_churn_chunked_matches_oracle(self):
+        edges = erdos_renyi_stream(24, 150, seed=13)
+        stream = churn_stream(edges, 0.4, seed=14)
+        tau = oracle_count(stream)
+        eng = TriangleCountEngine(make_cfg(r=20_000, chunk_size=3))
+        eng.ingest_signed_stream(signed_batches(stream, BS))
+        assert_within_ci(tenant_coarse(eng), tau, "chunk=3")
+
+    def test_local_scheme_pool_deletion(self):
+        # REPT-style pool-local deletion: per-vertex totals track the oracle
+        edges = erdos_renyi_stream(24, 150, seed=15)
+        stream = churn_stream(edges, 0.3, seed=16)
+        tau = oracle_count(stream)
+        assert tau > 0
+        eng = TriangleCountEngine(make_cfg("local", r=20_000))
+        eng.ingest_signed_stream(signed_batches(stream, BS))
+        est = np.asarray(eng.estimate()[0], dtype=np.float64)
+        loc = oracle_local_triangles(oracle_live_edges(stream), 64)
+        # the global cross-check (sum/3) and an L1 sanity bound on the vector
+        assert abs(est.sum() / 3 - tau) < 0.5 * tau + 2.0
+        assert np.abs(est - loc).sum() / max(loc.sum(), 1) < 1.0
+
+
+class TestWindowedAccuracy:
+    def test_window_matches_oracle(self):
+        edges = erdos_renyi_stream(24, 160, seed=21)
+        W = 64
+        tau = oracle_count(as_signed(edges), window=W)
+        assert tau > 0
+        eng = TriangleCountEngine(make_cfg(r=20_000, window=W))
+        for Wb, nv in batches(edges, BS):
+            eng.ingest(Wb, nv)
+        assert eng.diag.window_expired == len(edges) - W
+        assert_within_ci(tenant_coarse(eng), tau, f"window={W}")
+
+    def test_window_chunked_matches_oracle(self):
+        # chunked windowed ingest flushes expiry once per chunk: oracle-equal
+        # at chunk boundaries (stream length divisible by chunk*batch here),
+        # not bit-equal to the per-batch path
+        edges = erdos_renyi_stream(24, 160, seed=21)
+        W = 64
+        tau = oracle_count(as_signed(edges), window=W)
+        eng = TriangleCountEngine(make_cfg(r=20_000, window=W, chunk_size=2))
+        eng.ingest_stream(batches(edges, BS))
+        assert_within_ci(tenant_coarse(eng), tau, f"window={W} chunked")
+
+    def test_decay_matches_oracle(self):
+        edges = erdos_renyi_stream(24, 160, seed=22)
+        eng = TriangleCountEngine(make_cfg(r=20_000, decay=48.0))
+        tau = oracle_count(
+            as_signed(edges), decay=48.0,
+            seed=eng.config.tenant_seeds()[0],
+        )
+        assert tau > 0
+        for Wb, nv in batches(edges, BS):
+            eng.ingest(Wb, nv)
+        assert_within_ci(tenant_coarse(eng), tau, "decay=48")
+
+    def test_churn_plus_window_matches_oracle(self):
+        # turnstile deletes and window expiry interact (_forget_window must
+        # drop deleted edges from the expiry buffer, not double-delete them)
+        edges = erdos_renyi_stream(24, 160, seed=23)
+        stream = churn_stream(edges, 0.25, seed=24)
+        W = 64
+        tau = oracle_count(stream, window=W)
+        eng = TriangleCountEngine(make_cfg(r=20_000, window=W))
+        eng.ingest_signed_stream(signed_batches(stream, BS))
+        assert_within_ci(tenant_coarse(eng), tau, f"churn+window={W}")
+
+
+class TestDynamicSnapshot:
+    def test_midwindow_roundtrip_bitforbit(self):
+        edges = erdos_renyi_stream(30, 200, seed=31)
+        its = list(batches(edges, BS))
+        half = len(its) // 2
+        cfg = make_cfg(r=1024, window=48, n_tenants=2)
+
+        a = TriangleCountEngine(cfg)
+        for W, nv in its[:half]:
+            a.ingest(W, nv)
+        snap = a.snapshot()
+        assert {"window_edges", "window_expiry", "window_len",
+                "dyn_step"} <= set(snap)
+        for W, nv in its[half:]:
+            a.ingest(W, nv)
+
+        b = TriangleCountEngine(cfg)
+        b.restore(snap)
+        assert b.dyn_step == half  # window clock intact, not restarted
+        for W, nv in its[half:]:
+            b.ingest(W, nv)
+        assert_snapshots_equal(a.snapshot(), b.snapshot(), "mid-window")
+
+    def test_window_engine_rejects_windowless_snapshot(self):
+        plain = TriangleCountEngine(make_cfg(r=512))
+        plain.ingest(np.array([[0, 1]], np.int32), 1)
+        windowed = TriangleCountEngine(make_cfg(r=512, window=8))
+        with pytest.raises(SnapshotMismatch):
+            windowed.restore(plain.snapshot())
+
+    def test_window_capacity_mismatch_rejected(self):
+        a = TriangleCountEngine(make_cfg(r=512, window=8))
+        a.ingest(np.array([[0, 1]], np.int32), 1)
+        b = TriangleCountEngine(make_cfg(r=512, window=16))
+        with pytest.raises(SnapshotMismatch):
+            b.restore(a.snapshot())
+
+    def test_windowed_snapshot_into_plain_engine_is_legal(self):
+        # documented downgrade: edges simply stop expiring
+        a = TriangleCountEngine(make_cfg(r=512, window=8))
+        a.ingest(np.array([[0, 1], [1, 2]], np.int32), 2)
+        b = TriangleCountEngine(make_cfg(r=512))
+        b.restore(a.snapshot())
+        assert b.step == 1 and b.dyn_step == 1
+
+    def test_config_validation(self):
+        with pytest.raises(ValueError):
+            make_cfg(window=8, decay=4.0)  # mutually exclusive
+        with pytest.raises(ValueError):
+            make_cfg(decay=0.5)  # decay means mean lifetime, must be > 1
+
+
+class TestSignedStreamResume:
+    """run_signed_stream checkpoint/resume must skip by dyn_step, not step.
+
+    Regression: manifest ``keys`` are tree_flatten_with_path spellings
+    ("['dyn_step']"), so _restore_latest's predates-this-key check used to
+    match nothing, drop dyn_step from the restore template, and resume from
+    ``step`` (insert batches only) — re-ingesting every delete run's worth
+    of stream on top of the restored state."""
+
+    def _signed(self):
+        stream = churn_stream(
+            erdos_renyi_stream(30, 160, seed=41), delete_rate=0.4, seed=42
+        )
+        return list(signed_batches(stream, BS))
+
+    def test_full_resume_skips_everything(self, tmp_path):
+        items = self._signed()
+        a = TriangleCountEngine(make_cfg(r=512))
+        rep1 = run_signed_stream(a, items, ckpt_dir=str(tmp_path),
+                                 ckpt_every=3)
+        assert a.dyn_step > a.step  # churn: the two cursors MUST differ
+
+        b = TriangleCountEngine(make_cfg(r=512))
+        rep2 = run_signed_stream(b, items, ckpt_dir=str(tmp_path),
+                                 ckpt_every=3)
+        assert rep2.resumed_from == a.dyn_step  # not a.step — the bug
+        assert rep2.batches == 0 and rep2.edges == 0
+        assert rep1.batches == len(items)
+        assert_snapshots_equal(a.snapshot(), b.snapshot(), "full resume")
+
+    def test_midstream_resume_continues_bitforbit(self, tmp_path):
+        import shutil
+
+        items = self._signed()
+        a = TriangleCountEngine(make_cfg(r=512))
+        run_signed_stream(a, items, ckpt_dir=str(tmp_path), ckpt_every=3)
+        # drop the newest checkpoints: simulate a run killed mid-stream
+        for d in sorted(tmp_path.glob("step_*"))[-2:]:
+            shutil.rmtree(d)
+
+        b = TriangleCountEngine(make_cfg(r=512))
+        rep = run_signed_stream(b, items, ckpt_dir=str(tmp_path),
+                                ckpt_every=3)
+        assert 0 < rep.batches < len(items)
+        assert rep.resumed_from + rep.batches == len(items)
+        assert b.dyn_step == a.dyn_step
+        assert_snapshots_equal(a.snapshot(), b.snapshot(), "tail resume")
+
+
+class TestBatchesTailContract:
+    """The documented contract: every edge lands in exactly one batch, the
+    ragged tail is PADDED (never dropped), and degenerate inputs are legal."""
+
+    def test_empty_stream_yields_no_batches(self):
+        assert list(batches(np.zeros((0, 2), np.int32), 4)) == []
+        assert list(batches([], 4)) == []
+
+    def test_single_edge(self):
+        out = list(batches(np.array([[3, 5]], np.int32), 4))
+        assert len(out) == 1
+        W, nv = out[0]
+        assert W.shape == (4, 2) and nv == 1
+        assert W[0].tolist() == [3, 5]
+
+    def test_batch_larger_than_stream(self):
+        edges = erdos_renyi_stream(10, 7, seed=1)
+        out = list(batches(edges, 100))
+        assert len(out) == 1
+        W, nv = out[0]
+        assert W.shape == (100, 2) and nv == len(edges)
+
+    def test_ragged_tail_padded_not_dropped(self):
+        edges = erdos_renyi_stream(20, 37, seed=2)  # 37 % 8 != 0
+        out = list(batches(edges, 8))
+        assert sum(nv for _, nv in out) == 37
+        assert all(W.shape == (8, 2) for W, _ in out)
+        flat = np.concatenate([W[:nv] for W, nv in out])
+        np.testing.assert_array_equal(flat, edges)
+
+    def test_list_input_normalized(self):
+        out = list(batches([(0, 1), (2, 3), (4, 5)], 2))
+        assert [nv for _, nv in out] == [2, 1]
+        assert out[0][0].dtype == np.int32
+
+    def test_bad_batch_size_rejected(self):
+        with pytest.raises(ValueError):
+            list(batches(np.array([[0, 1]], np.int32), 0))
+
+
+class TestBenchMergeNonClobber:
+    def test_dynamic_section_preserves_foreign_keys(self, tmp_path):
+        sys.path.insert(0, "/root/repo")
+        try:
+            from benchmarks.common import merge_section
+        finally:
+            sys.path.pop(0)
+        path = str(tmp_path / "bench.json")
+        prior = {
+            "schema": "repro/streaming-throughput/v1",
+            "results": [{"scheme": "global", "r": 512}],
+            "multistream": {"smoke": False, "results": [{"tenants": 2}]},
+        }
+        with open(path, "w") as f:
+            json.dump(prior, f)
+
+        rows = [{"name": "dyn/churn-0.3", "md_pct": 1.0}]
+        merge_section(path, "dynamic", rows, lambda r: r["name"],
+                      {"smoke": True})
+        with open(path) as f:
+            got = json.load(f)
+        # every pre-existing top-level key survives verbatim
+        assert got["results"] == prior["results"]
+        assert got["multistream"] == prior["multistream"]
+        assert got["dynamic"]["results"] == rows
+
+        # re-merging replaces by row key and keeps other committed rows
+        merge_section(path, "dynamic",
+                      [{"name": "dyn/churn-0.5", "md_pct": 2.0}],
+                      lambda r: r["name"], {"smoke": True})
+        with open(path) as f:
+            got = json.load(f)
+        assert [r["name"] for r in got["dynamic"]["results"]] == [
+            "dyn/churn-0.3", "dyn/churn-0.5"
+        ]
+
+
+@pytest.mark.slow
+def test_dynamic_driver_all_plans():
+    """Oracle-vs-engine sweep over distributed plans (pjit + banked) with
+    deletions and windows, plus a cross-mesh mid-window snapshot restore —
+    in a subprocess so the forced 8-device CPU topology can't leak."""
+    here = os.path.dirname(__file__)
+    src = os.path.abspath(os.path.join(here, "..", "src"))
+    proc = subprocess.run(
+        [sys.executable, os.path.join(here, "_dynamic_driver.py")],
+        capture_output=True, text=True, timeout=900,
+        env={"PYTHONPATH": src, "PATH": "/usr/bin:/bin:/usr/local/bin",
+             "JAX_PLATFORMS": "cpu"},
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "ALL-DYNAMIC-OK" in proc.stdout

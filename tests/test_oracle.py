@@ -1,0 +1,170 @@
+"""Self-tests for the brute-force oracle (tests/_oracle.py) on HAND-COMPUTED
+graphs. The oracle is the ground truth every dynamic-stream test compares the
+engine against, so it gets its own pinning suite: a wrong oracle would let a
+wrong engine pass."""
+import numpy as np
+import pytest
+
+from _oracle import (
+    as_signed,
+    brute_rank,
+    oracle_count,
+    oracle_live_edges,
+    oracle_local_triangles,
+    oracle_triangles,
+)
+from repro.data.graph_stream import (
+    churn_stream,
+    decay_cap,
+    decay_ttls,
+    dynamic_live_edges,
+    live_edges,
+    signed_batches,
+    windowed_stream,
+)
+
+# one triangle 0-1-2 plus a pendant edge; tau = 1, computed by hand
+TRI = np.array([[0, 1], [0, 2], [1, 2], [2, 3]], np.int32)
+# K4 on {0,1,2,3}: 4 triangles, each vertex in 3 of them
+K4 = np.array(
+    [[0, 1], [0, 2], [0, 3], [1, 2], [1, 3], [2, 3]], np.int32
+)
+
+
+class TestTriangleCounts:
+    def test_hand_graphs(self):
+        assert oracle_triangles(TRI) == 1
+        assert oracle_triangles(K4) == 4
+        assert oracle_triangles(np.zeros((0, 2), np.int32)) == 0
+        assert oracle_triangles(np.array([[0, 1]], np.int32)) == 0
+
+    def test_orientation_and_duplicates_ignored(self):
+        flipped = TRI[:, ::-1]
+        assert oracle_triangles(flipped) == 1
+        assert oracle_triangles(np.concatenate([TRI, TRI])) == 1
+
+    def test_local_counts_hand(self):
+        loc = oracle_local_triangles(TRI, 5)
+        assert loc.tolist() == [1, 1, 1, 0, 0]
+        loc4 = oracle_local_triangles(K4, 4)
+        assert loc4.tolist() == [3, 3, 3, 3]
+        # cross-check: per-vertex counts sum to 3 * tau
+        assert loc4.sum() == 3 * oracle_triangles(K4)
+
+
+class TestTurnstileReplay:
+    def test_insert_only_identity(self):
+        got = oracle_live_edges(as_signed(TRI))
+        assert got.tolist() == sorted(TRI.tolist())
+        assert oracle_count(as_signed(TRI)) == 1
+
+    def test_delete_breaks_triangle(self):
+        # insert the triangle, delete one of its edges: tau 1 -> 0
+        stream = np.array(
+            [[0, 1, 1], [0, 2, 1], [1, 2, 1], [2, 3, 1], [1, 2, -1]],
+            np.int32,
+        )
+        assert oracle_count(stream) == 0
+        assert oracle_live_edges(stream).tolist() == [[0, 1], [0, 2], [2, 3]]
+
+    def test_delete_then_reinsert(self):
+        stream = np.array(
+            [[0, 1, 1], [0, 2, 1], [1, 2, 1], [1, 2, -1], [1, 2, 1]],
+            np.int32,
+        )
+        assert oracle_count(stream) == 1
+
+    def test_contract_violation_raises(self):
+        bad = np.array([[0, 1, 1], [0, 2, -1]], np.int32)
+        with pytest.raises(KeyError):
+            oracle_live_edges(bad)
+
+    def test_matches_library_replay(self):
+        # the oracle's dict replay and graph_stream.live_edges (implemented
+        # independently) must agree on generated churn streams
+        from repro.data.graph_stream import erdos_renyi_stream
+
+        edges = erdos_renyi_stream(30, 80, seed=5)
+        ch = churn_stream(edges, 0.5, seed=6)
+        a = oracle_live_edges(ch)
+        b = np.sort(live_edges(ch), axis=1)
+        assert a.tolist() == sorted(b.tolist())
+
+
+class TestWindowedOracle:
+    def test_hand_window(self):
+        # 4 inserts, window 2: only the last two edges stay live
+        got = oracle_live_edges(as_signed(TRI), window=2)
+        assert got.tolist() == [[1, 2], [2, 3]]
+        assert oracle_count(as_signed(TRI), window=2) == 0
+        # window >= stream length keeps everything
+        assert oracle_count(as_signed(TRI), window=4) == 1
+
+    def test_window_matches_explicit_deletions(self):
+        # the implicit expiry rule and windowed_stream's explicit deletions
+        # must produce the same live graph for any window
+        from repro.data.graph_stream import erdos_renyi_stream
+
+        edges = erdos_renyi_stream(25, 60, seed=7)
+        for w in (1, 5, 17, 60, 100):
+            implicit = oracle_live_edges(as_signed(edges), window=w)
+            explicit = oracle_live_edges(windowed_stream(edges, w))
+            assert implicit.tolist() == explicit.tolist(), w
+
+    def test_matches_dynamic_live_edges(self):
+        # oracle vs the library helper the CLIs use (independent code paths)
+        from repro.data.graph_stream import erdos_renyi_stream
+
+        edges = erdos_renyi_stream(25, 60, seed=8)
+        ch = churn_stream(edges, 0.3, seed=9)
+        for kw in ({"window": 13}, {"decay": 9.0, "seed": 4}, {}):
+            a = oracle_live_edges(ch, **kw)
+            b = np.sort(dynamic_live_edges(ch, **kw), axis=1)
+            assert a.tolist() == sorted(b.tolist()), kw
+
+
+class TestDecayContract:
+    def test_ttls_deterministic_and_position_keyed(self):
+        a = decay_ttls(3, 100, 50, 12.0)
+        b = decay_ttls(3, 100, 50, 12.0)
+        assert np.array_equal(a, b)
+        # slicing by position gives the same lifetimes (restartable hash)
+        c = decay_ttls(3, 120, 10, 12.0)
+        assert np.array_equal(a[20:30], c)
+
+    def test_ttl_bounds_and_mean(self):
+        d = 10.0
+        t = decay_ttls(0, 0, 20_000, d)
+        assert t.min() >= 1 and t.max() <= decay_cap(d)
+        # geometric mean lifetime ~ decay (loose 10% band on 20k draws)
+        assert abs(t.mean() - d) < 0.1 * d
+
+
+class TestBruteRank:
+    def test_hand_case(self):
+        W = np.array([[0, 1], [1, 2], [0, 2], [0, 3]], np.int32)
+        # rank of (0,1) w.r.t. endpoint 0: edges after pos 0 touching 0
+        assert brute_rank(W, 0, 1) == 2
+        # edge absent: every edge touching x counts
+        assert brute_rank(W, 5, 0) == 0
+        assert brute_rank(W, 0, 9) == 3
+
+
+class TestSignedBatches:
+    def test_runs_never_mix_signs_and_pad(self):
+        stream = np.array(
+            [[0, 1, 1], [2, 3, 1], [4, 5, 1], [0, 1, -1], [6, 7, 1]],
+            np.int32,
+        )
+        got = list(signed_batches(stream, 2))
+        signs = [s for _, _, s in got]
+        nvs = [nv for _, nv, s in got]
+        assert signs == [1, 1, -1, 1]
+        assert nvs == [2, 1, 1, 1]  # ragged run tails padded, never dropped
+        assert all(W.shape == (2, 2) for W, _, _ in got)
+        # every edge appears exactly once across batches
+        total = sum(nvs)
+        assert total == len(stream)
+
+    def test_empty(self):
+        assert list(signed_batches(np.zeros((0, 3), np.int32), 4)) == []

@@ -76,6 +76,28 @@ class TestDeadlineMissAccounting:
         assert pf.unmatched_standins == 1  # recorded: m_seen ran 1 long
 
 
+class TestProducerErrors:
+    def test_producer_exception_propagates_to_consumer(self):
+        """A crash in the producer thread must surface on get(), not
+        masquerade as a clean end of stream — a signed-stream generator that
+        dies mid-iteration would otherwise silently truncate the stream and
+        the engine would report a shorter stream as success."""
+        def src():
+            yield 1
+            raise RuntimeError("boom mid-stream")
+
+        pf = PrefetchQueue(src(), depth=2)
+        assert pf.get()[0] == 1
+        with pytest.raises(RuntimeError, match="boom mid-stream"):
+            pf.get()
+
+    def test_clean_exhaustion_still_stopiteration(self):
+        pf = PrefetchQueue(iter([1]), depth=2)
+        assert pf.get()[0] == 1
+        with pytest.raises(StopIteration):
+            pf.get()
+
+
 class TestWorkStealing:
     def test_is_exhaustion_only_round_robin(self):
         """Pins the documented behavior: strict rotation order, shards leave

@@ -13,7 +13,12 @@ Checks:
   4. the query path is documented: docs/scaling.md and docs/engine.md must
      both describe the device-resident query (and the ``gather=True``
      oracle/cache semantics) — the serving surface must not drift from the
-     handbook.
+     handbook;
+  5. dynamic streams are documented: docs/engine.md must describe the
+     deletion stages (``delete_update``, ``expire``) and the ``--window``
+     CLI surface, and docs/scaling.md must carry the per-plan
+     ``build_delete`` column — the fully-dynamic path must not drift from
+     the handbook either.
 
   PYTHONPATH=src python tools/check_docs.py
 """
@@ -101,12 +106,33 @@ def check_query_path_coverage() -> list[str]:
     return errors
 
 
+def check_dynamic_coverage() -> list[str]:
+    """Both docs must describe the fully-dynamic path: the deletion stages,
+    the window flag, and the per-plan delete program."""
+    required = {
+        "engine.md": ("`delete_update`", "`expire`", "`--window`",
+                      "`build_delete`", "`--deletions`", "`dyn_step`"),
+        "scaling.md": ("`build_delete`", "`make_banked_delete`",
+                       "`make_pjit_delete`", "`--window`", "`expire`"),
+    }
+    errors = []
+    for doc, tokens in required.items():
+        text = (ROOT / "docs" / doc).read_text()
+        errors += [
+            f"docs/{doc}: dynamic-stream docs are missing {tok}"
+            for tok in tokens
+            if tok not in text
+        ]
+    return errors
+
+
 def main() -> int:
     errors = (
         check_links()
         + check_backend_coverage()
         + check_scheme_coverage()
         + check_query_path_coverage()
+        + check_dynamic_coverage()
     )
     for e in errors:
         print(e, file=sys.stderr)
