@@ -1,0 +1,211 @@
+"""Recovery time and degraded-serving throughput — the robustness benchmark.
+
+Two questions the chaos hardening (docs/robustness.md) makes measurable:
+
+  * **How fast is a crash recovered?** ``restore`` rows time a cold engine
+    restoring + verifying the newest checkpoint and answering its first
+    query, against the replay-from-scratch baseline (re-ingesting the whole
+    stream). The ratio is what keep-k verified checkpoints buy at serve
+    time; checkpoint size is reported alongside because the verify pass
+    rehashes every array.
+  * **What does each degraded answer path cost?** ``queries`` rows measure
+    queries/s of the serving ladder at a fixed bank state: ``stale_cache``
+    (the backpressure path — ``cached_estimate``, no dispatch), ``cached``
+    (same-step repeat through ``estimate()``), ``fresh`` (a forced device
+    dispatch per query), ``gather`` (the O(T*r) oracle every fault/timeout
+    falls back to).
+
+``--json BENCH_streaming.json`` merges rows under the ``recovery`` key —
+its own section keyed by (kind, path, r, batch, tenants, smoke), so reruns
+never clobber the ingest/serving grids.
+
+  PYTHONPATH=src python -m benchmarks.recovery --json BENCH_streaming.json
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+import tempfile
+import time
+
+if __name__ == "__main__":
+    # must run before any jax device query (see repro.launch._env)
+    from repro.launch._env import apply_host_devices
+
+    apply_host_devices(sys.argv)
+
+from repro.data.graph_stream import barabasi_albert_stream, batches
+from repro.engine import EngineConfig, TriangleCountEngine, run_stream
+
+
+def _dir_bytes(d: str) -> int:
+    return sum(
+        f.stat().st_size for f in pathlib.Path(d).rglob("*") if f.is_file()
+    )
+
+
+def _cfg(r: int, bs: int, T: int) -> EngineConfig:
+    return EngineConfig(r=r, batch_size=bs, n_tenants=T, seeds=tuple(range(T)))
+
+
+def bench_restore(r: int, bs: int, T: int, nodes: int, degree: int,
+                  ckpt_every: int, smoke: bool) -> dict:
+    """Cold restore + verify + first answer vs replaying the stream."""
+    edges = barabasi_albert_stream(nodes, degree, seed=0)
+    its = list(batches(edges, bs))
+    with tempfile.TemporaryDirectory() as d:
+        eng = TriangleCountEngine(_cfg(r, bs, T))
+        run_stream(eng, iter(its), ckpt_dir=d, ckpt_every=ckpt_every)
+        eng.estimate()
+        ref = eng.step
+
+        # replay-from-scratch baseline (jit caches are warm: this measures
+        # the stream, not compilation)
+        t0 = time.perf_counter()
+        fresh = TriangleCountEngine(_cfg(r, bs, T))
+        run_stream(fresh, iter(its))
+        fresh.estimate()
+        replay_s = time.perf_counter() - t0
+
+        # checkpoint path: restore the newest verified snapshot into a cold
+        # engine and answer — run_stream with an exhausted iterator exercises
+        # exactly the service resume path (walk-back + checksum verify)
+        t0 = time.perf_counter()
+        cold = TriangleCountEngine(_cfg(r, bs, T))
+        rep = run_stream(cold, iter(its), ckpt_dir=d, ckpt_every=0)
+        cold.estimate()
+        restore_s = time.perf_counter() - t0
+        assert rep.resumed_from > 0 and cold.step == ref
+        row = {
+            "kind": "restore",
+            "r": r,
+            "batch": bs,
+            "tenants": T,
+            "batches": len(its),
+            "ckpt_bytes": _dir_bytes(d),
+            "restore_s": round(restore_s, 6),
+            "replay_s": round(replay_s, 6),
+            "speedup_vs_replay": round(replay_s / restore_s, 2),
+            "smoke": smoke,
+        }
+    print(
+        f"# restore r={r} T={T}: {row['restore_s']*1e3:.0f} ms to serve "
+        f"({row['ckpt_bytes']/1e6:.1f} MB verified) vs "
+        f"{row['replay_s']*1e3:.0f} ms replay — "
+        f"{row['speedup_vs_replay']}x",
+        flush=True,
+    )
+    return row
+
+
+def bench_degraded(r: int, bs: int, T: int, nodes: int, degree: int,
+                   n_queries: int, smoke: bool) -> list[dict]:
+    """queries/s of each answer path of the degraded-serving ladder."""
+    edges = barabasi_albert_stream(nodes, degree, seed=0)
+    its = list(batches(edges, bs))
+    eng = TriangleCountEngine(_cfg(r, bs, T))
+    for W, nv in its[:8]:
+        eng.ingest(W, nv)
+    eng.estimate()  # warm every program + populate the cache
+    eng.estimate(gather=True)
+
+    def fresh():
+        eng._est_cache.clear()  # force a real dispatch per query
+        eng.estimate()
+
+    paths = {
+        "stale_cache": lambda: eng.cached_estimate(),  # backpressure path
+        "cached": lambda: eng.estimate(),  # same-step repeat
+        "fresh": fresh,
+        "gather": lambda: eng.estimate(gather=True),  # fault/timeout fallback
+    }
+    rows = []
+    for path, call in paths.items():
+        n = n_queries if path in ("stale_cache", "cached") else max(
+            n_queries // 10, 10
+        )
+        t0 = time.perf_counter()
+        for _ in range(n):
+            call()
+        dt = time.perf_counter() - t0
+        rows.append({
+            "kind": "queries",
+            "path": path,
+            "r": r,
+            "batch": bs,
+            "tenants": T,
+            "queries": n,
+            "seconds": round(dt, 6),
+            "queries_per_s": round(n / dt, 1),
+            "smoke": smoke,
+        })
+        print(
+            f"# degraded path={path}: {rows[-1]['queries_per_s']:.0f} "
+            f"queries/s (r={r}, T={T})",
+            flush=True,
+        )
+    return rows
+
+
+def bench_grid(*, smoke: bool = False) -> list[dict]:
+    if smoke:
+        r, bs, T, nodes, degree, every, nq = 2048, 256, 2, 2000, 6, 8, 100
+    else:
+        r, bs, T, nodes, degree, every, nq = 16384, 1024, 4, 5000, 8, 8, 400
+    rows = [bench_restore(r, bs, T, nodes, degree, every, smoke)]
+    rows += bench_degraded(r, bs, T, nodes, degree, nq, smoke)
+    return rows
+
+
+def row_key(row: dict) -> tuple:
+    """Identity of a recovery row; smoke participates so CI smoke runs never
+    replace committed full-scale rows."""
+    return (
+        row["kind"],
+        row.get("path", ""),
+        row.get("r", 0),
+        row.get("batch", 0),
+        row.get("tenants", 0),
+        bool(row.get("smoke", False)),
+    )
+
+
+def merge_json(path: str, rows: list[dict], smoke: bool) -> None:
+    """Merge under the ``recovery`` key of the trajectory JSON (every other
+    section — ingest grids, ``query_serve`` — is carried verbatim)."""
+    from benchmarks.common import merge_section, section_meta
+
+    merge_section(path, "recovery", rows, row_key, section_meta(smoke))
+
+
+def main() -> list[str]:
+    """CSV mode for benchmarks.run: smoke-scale recovery numbers."""
+    from benchmarks.common import csv_row
+
+    out = []
+    for row in bench_grid(smoke=True):
+        if row["kind"] == "restore":
+            out.append(csv_row(
+                "recovery/restore", row["restore_s"] * 1e6,
+                f"speedup_vs_replay={row['speedup_vs_replay']};"
+                f"ckpt_mb={row['ckpt_bytes']/1e6:.1f}"))
+        else:
+            out.append(csv_row(
+                f"recovery/{row['path']}", row["seconds"] * 1e6,
+                f"queries_per_s={row['queries_per_s']:.0f}"))
+        print(out[-1], flush=True)
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="",
+                    help="merge the recovery grid into this trajectory JSON")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--host-devices", type=int, default=0,
+                    help="force N CPU host devices (unused; parity flag)")
+    args = ap.parse_args()
+    rows = bench_grid(smoke=args.smoke)
+    if args.json:
+        merge_json(args.json, rows, args.smoke)

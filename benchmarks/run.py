@@ -121,6 +121,7 @@ def main() -> None:
         kernels,
         multistream,
         query_serve,
+        recovery,
         schemes,
         throughput,
     )
@@ -133,6 +134,7 @@ def main() -> None:
         "kernels": kernels.main,        # kernel contracts + bytes
         "multistream": multistream.main,  # engine multi-tenant bank
         "query_serve": query_serve.main,  # queries/s under concurrent ingest
+        "recovery": recovery.main,      # restore time + degraded queries/s
     }
     print("name,us_per_call,derived")
     for name, fn in benches.items():

@@ -13,6 +13,14 @@ assemble K ``(W, n_valid)`` batches into the superbatch unit
 double buffering itself (stage chunk k+1 while chunk k computes) lives in the
 consumers (``engine.service.run_stream``, ``engine.ingest_stream``) via
 ``TriangleCountEngine.stage_chunk``.
+
+Resilience (docs/robustness.md): the producer thread is the
+``prefetch.get`` fault site of ``repro.engine.faults`` — a flaky source can
+be made to raise (optionally ridden out by a ``RetryPolicy``), stall, or
+*redeliver* an item. Every item is tagged with a sequence number on the
+producer side and deduplicated on the consumer side, so at-least-once
+delivery from the source still yields exactly-once ingestion — an estimator
+stream that ingests a replayed batch biases ``m_seen`` forever.
 """
 from __future__ import annotations
 
@@ -32,12 +40,18 @@ class PrefetchQueue:
         source: Iterator,
         depth: int = 4,
         deadline_s: Optional[float] = None,
+        retry=None,  # Optional[repro.engine.faults.RetryPolicy] for the source
     ):
         self.q: queue.Queue = queue.Queue(maxsize=depth)
         self.deadline_s = deadline_s
+        self.retry = retry
         self.backup = None
         self.stale_steps = 0
         self.late_drops = 0  # late batches discarded after a backup stood in
+        self.duplicate_drops = 0  # redelivered items deduped by sequence number
+        self.redelivered = 0  # items the producer enqueued more than once
+        self.retries = 0  # transient source faults ridden out by backoff
+        self._last_seq = -1  # newest sequence number delivered to the consumer
         # stand-ins whose awaited item turned out to be end-of-stream (the
         # straggling next() raised StopIteration instead of yielding): the
         # consumer already ingested one batch the source never produced.
@@ -58,13 +72,35 @@ class PrefetchQueue:
 
     def _produce(self, source):
         try:
+            seq = 0
             for item in source:
-                self.q.put(item)
+                kind = self._source_fault()
+                self.q.put((seq, item))
+                if kind == "duplicate":
+                    # at-least-once source: redeliver the same sequence
+                    # number; the consumer dedups it in get()
+                    self.redelivered += 1
+                    self.q.put((seq, item))
+                seq += 1
         except BaseException as e:  # noqa: BLE001 — forwarded, not swallowed
             self._error = e
         finally:
             self.done = True
             self.q.put(_DONE)
+
+    def _source_fault(self):
+        """Consult the ``prefetch.get`` fault site, riding out transient
+        raises with the configured RetryPolicy (producer-side backoff)."""
+        # lazy import: repro.data sits below repro.engine in the import graph
+        from repro.engine.faults import active_fault_plan, check_fault, with_retries
+
+        if active_fault_plan() is None:
+            return None
+
+        def _count(attempt, exc):
+            self.retries += 1
+
+        return with_retries(self.retry, check_fault, "prefetch.get", on_retry=_count)
 
     def get(self):
         """Next batch, or the backup batch on deadline miss (stale += 1).
@@ -89,21 +125,26 @@ class PrefetchQueue:
         StopIteration) has already delivered a stand-in for an item that
         never existed — that +1 drift is counted in ``unmatched_standins``
         (surfaced as ``StreamReport.phantom_batches`` by the service loop).
+
+        Items redelivered by an at-least-once source (the ``duplicate``
+        fault kind, or any future real source that replays on reconnect)
+        carry an already-seen sequence number and are dropped here
+        (``duplicate_drops``) — ingesting one would bias ``m_seen``.
         """
         while True:
             try:
                 # no deadline while a late item is outstanding: its stand-in
                 # was already delivered, so there is nothing fresh to echo
                 timeout = self.deadline_s if not self._drop_next else None
-                item = self.q.get(timeout=timeout)
+                entry = self.q.get(timeout=timeout)
             except queue.Empty:
                 if self.backup is None:
-                    item = self.q.get()  # first batch: nothing to fall back on
+                    entry = self.q.get()  # first batch: nothing to fall back on
                 else:
                     self.stale_steps += 1
                     self._drop_next += 1  # the late item is now a duplicate
                     return self.backup, True
-            if item is _DONE:
+            if entry is _DONE:
                 if self._error is not None:
                     raise self._error  # producer crashed: not end-of-stream
                 if self._drop_next:
@@ -112,6 +153,12 @@ class PrefetchQueue:
                     self.unmatched_standins += self._drop_next
                     self._drop_next = 0
                 raise StopIteration
+            seq, item = entry
+            if seq <= self._last_seq:
+                # redelivery of an item already handed out (exactly-once dedup)
+                self.duplicate_drops += 1
+                continue
+            self._last_seq = seq
             if self._drop_next:
                 # the backup already stood in for this batch — discard it
                 self._drop_next -= 1
@@ -119,6 +166,12 @@ class PrefetchQueue:
                 continue
             self.backup = item
             return item, False
+
+    def backlog(self) -> int:
+        """Batches currently queued ahead of the consumer — the service
+        loops' backpressure signal (degraded-mode queries kick in when this
+        reaches ``ResilienceConfig.backpressure_depth``)."""
+        return self.q.qsize()
 
 
 def stack_batches(

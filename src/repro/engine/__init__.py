@@ -4,7 +4,9 @@ Sits between ``repro.core`` (the pure batch-update math) and ``repro.launch``
 (CLIs): owns estimator state for N tenant streams, ingests edge batches
 incrementally, answers rolling estimates, and snapshots/restores itself —
 on one device or sharded over a mesh ``tenants`` axis (execution-plan
-handbook: docs/scaling.md).
+handbook: docs/scaling.md). The chaos/resilience layer (fault injection,
+retry/backoff, quarantine, degraded queries) lives in
+``repro.engine.faults`` — contract in docs/robustness.md.
 """
 from repro.engine.backends import (
     BACKENDS,
@@ -19,6 +21,17 @@ from repro.engine.engine import (
     StagedChunk,
     TriangleCountEngine,
 )
+from repro.engine.faults import (
+    FaultInjected,
+    FaultPlan,
+    FaultSpec,
+    ResilienceConfig,
+    RetryPolicy,
+    fault_plan,
+    install_fault_plan,
+    parse_fault_plan,
+    with_retries,
+)
 from repro.engine.service import StreamReport, run_signed_stream, run_stream
 
 __all__ = [
@@ -27,11 +40,20 @@ __all__ = [
     "config_scheme",
     "EngineConfig",
     "EngineDiagnostics",
+    "FaultInjected",
+    "FaultPlan",
+    "FaultSpec",
+    "ResilienceConfig",
+    "RetryPolicy",
     "SnapshotMismatch",
     "StagedChunk",
     "StreamReport",
     "TriangleCountEngine",
+    "fault_plan",
+    "install_fault_plan",
+    "parse_fault_plan",
     "run_signed_stream",
     "run_stream",
     "select_backend",
+    "with_retries",
 ]

@@ -13,7 +13,11 @@ one-shot script:
     O(T * r) bank); ``estimate(gather=True)`` forces the gather-to-host
     oracle it is asserted bit-identical against. Answers are cached per
     ``step`` so repeated queries between ingests cost one dispatch total;
-    ingest and restore invalidate the cache.
+    freshness is keyed on the step (an ingest leaves the previous answer
+    addressable for degraded backpressure serving — ``cached_estimate``),
+    while deletions and restores clear the cache outright. Queries degrade
+    rather than die: a timed-out or faulted device dispatch falls back to
+    the gather oracle (docs/robustness.md).
   * ``snapshot()`` / ``restore()`` round-trip the complete engine state
     (estimators + RNG cursor) through host memory or a CheckpointManager, so
     a killed process resumes bit-for-bit.
@@ -94,6 +98,7 @@ round-trips through ``repro.train.checkpoint.CheckpointManager`` unchanged.
 """
 from __future__ import annotations
 
+import concurrent.futures
 from dataclasses import dataclass, replace
 from typing import Any, Iterable, Optional
 
@@ -104,6 +109,7 @@ import numpy as np
 from repro.core.estimate import effective_groups
 from repro.core.schemes import EstimatorScheme, resolve_scheme
 from repro.engine.backends import BackendPlan, select_backend
+from repro.engine.faults import FaultInjected, check_fault
 
 
 @dataclass(frozen=True)
@@ -209,6 +215,10 @@ class EngineDiagnostics:
     # they describe batches the restored state never saw, so draining them
     # would trigger a bogus capacity escalation (and recompile)
     pending_overflow_dropped: int = 0
+    # -- resilience (docs/robustness.md) -------------------------------
+    query_fallbacks: int = 0  # device-path queries answered by the gather oracle
+    query_timeouts: int = 0  # ... of those, due to the per-query timeout
+    ckpt_corrupt_skipped: int = 0  # torn/corrupt checkpoints walked past on restore
 
 
 class SnapshotMismatch(ValueError):
@@ -289,8 +299,14 @@ class TriangleCountEngine:
         )
         # per-step estimate cache: {step: (n_tenants, ...) ndarray}. Repeated
         # queries between ingests (serving: many tenants polling one bank
-        # state) cost one dispatch total; any ingest/restore invalidates.
+        # state) cost one dispatch total. Freshness is keyed on step, so an
+        # ingest leaves the previous answer in place for degraded
+        # (backpressure) serving via cached_estimate(); deletions and
+        # restores clear it outright because they change the bank without
+        # advancing step.
         self._est_cache: dict = {}
+        # lazily-built single worker for timeout-bounded device queries
+        self._query_pool: Optional[concurrent.futures.ThreadPoolExecutor] = None
 
     # -- construction -------------------------------------------------------
     def _init_bank(self):
@@ -364,6 +380,7 @@ class TriangleCountEngine:
         ``(n_tenants, <=s, 2)`` per-tenant batches. ``n_valid`` overrides the
         inferred count (scalar or per-tenant) when W is pre-padded.
         """
+        check_fault("engine.ingest")  # chaos site: fires before any mutation
         W = np.asarray(W)
         T = self.n_tenants
         if W.ndim == 2:
@@ -411,7 +428,8 @@ class TriangleCountEngine:
             self._state = out
         self._step += 1
         self._dyn_step += 1
-        self._est_cache = {}  # the bank changed: cached answers are stale
+        # the cache is keyed on step, so the old answer is now stale-but-
+        # addressable: kept for degraded backpressure serving (cached_estimate)
         self.diag.batches_ingested += 1
         self.diag.edges_ingested += int(np.max(nv_host))
         self._track_inserts(Wb_host, nv_host)
@@ -470,6 +488,7 @@ class TriangleCountEngine:
             raise ValueError(
                 f"chunk must be (K,s,2) or (T,K,s,2), got {arr.shape}"
             )
+        check_fault("engine.stage_chunk")  # chaos site: before the device put
         if self.plan.chunk_w_sharding is not None:
             # sharded plan: device_put straight through the plan's input
             # sharding — one host->shards copy, no staging hop via the
@@ -506,6 +525,7 @@ class TriangleCountEngine:
         same per-tenant root keys, so snapshots, estimates, and resumes are
         interchangeable between chunked and per-batch ingestion.
         """
+        check_fault("engine.ingest_chunk")  # chaos site: before any mutation
         c = Ws if isinstance(Ws, StagedChunk) else self.stage_chunk(Ws, n_valids)
         K = self.config.chunk_size
         self._state = self._update_chunk(
@@ -513,7 +533,8 @@ class TriangleCountEngine:
         )
         self._step += K
         self._dyn_step += K
-        self._est_cache = {}  # the bank changed: cached answers are stale
+        # step-keyed cache: the pre-chunk answer stays addressable for
+        # degraded backpressure serving (cached_estimate)
         self.diag.batches_ingested += K
         self.diag.edges_ingested += c.edges
         if c.W_host is not None:
@@ -758,7 +779,9 @@ class TriangleCountEngine:
             ]
 
     # -- queries ------------------------------------------------------------
-    def estimate(self, *, gather: bool = False) -> np.ndarray:
+    def estimate(
+        self, *, gather: bool = False, timeout_s: Optional[float] = None
+    ) -> np.ndarray:
         """Rolling per-tenant estimates: shape ``(n_tenants,)`` for scalar
         schemes (the paper's Thm 3.4 median-of-means), ``(n_tenants, ...)``
         for vector schemes (e.g. ``local``: per-vertex counts).
@@ -774,7 +797,15 @@ class TriangleCountEngine:
 
         Answers are cached per ``step``: repeated queries between ingests
         (the serving pattern — many tenants polling one bank state) cost one
-        device dispatch total. Any ingest or restore invalidates the cache.
+        device dispatch total. Freshness is keyed on the step, so the
+        previous answer stays addressable (``cached_estimate``) for degraded
+        backpressure serving; deletions and restores clear the cache.
+
+        ``timeout_s`` bounds the device-resident dispatch: on expiry (or an
+        injected ``engine.estimate`` fault) the query *degrades* to the
+        gather oracle — bit-identical, just O(T*r) slower — instead of
+        failing the serve loop, counted in ``diag.query_fallbacks`` /
+        ``diag.query_timeouts``.
         """
         self._drain_overflow()
         if not gather:
@@ -783,11 +814,20 @@ class TriangleCountEngine:
                 self.diag.queries_answered += 1
                 self.diag.query_cache_hits += 1
                 return cached
+        out = None
         if not gather and self._estimate_device is not None:
-            out = np.asarray(self._estimate_device(self._state))
-            if not self.plan.banked:
-                out = out[None]
-        else:
+            try:
+                out = self._query_device(timeout_s)
+                if not self.plan.banked:
+                    out = out[None]
+            except (FaultInjected, TimeoutError) as e:
+                # graceful degradation: fall through to the gather oracle
+                # below rather than killing the serving loop
+                if isinstance(e, TimeoutError):
+                    self.diag.query_timeouts += 1
+                self.diag.query_fallbacks += 1
+                out = None
+        if out is None:
             st = self._state
             if not self.plan.banked:
                 st = jax.tree.map(lambda x: x[None], st)
@@ -802,6 +842,39 @@ class TriangleCountEngine:
         if not gather:
             self._est_cache = {self._step: out}
         return out
+
+    def _query_device(self, timeout_s: Optional[float]) -> np.ndarray:
+        """Dispatch the device-resident query program, optionally bounded by
+        a wall-clock timeout. The dispatch itself keeps running on a worker
+        thread past the deadline (XLA programs are not cancellable); the
+        caller just stops waiting and serves the degraded answer."""
+
+        def call() -> np.ndarray:
+            check_fault("engine.estimate")  # chaos site: the device dispatch
+            return np.asarray(self._estimate_device(self._state))
+
+        if timeout_s is None:
+            return call()
+        if self._query_pool is None:
+            self._query_pool = concurrent.futures.ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="engine-query"
+            )
+        fut = self._query_pool.submit(call)
+        try:
+            return fut.result(timeout=timeout_s)
+        except concurrent.futures.TimeoutError:
+            raise TimeoutError(f"device query exceeded {timeout_s:.3f}s") from None
+
+    def cached_estimate(self) -> Optional[tuple[int, np.ndarray]]:
+        """The most recent cached answer as ``(answer_step, estimates)``, or
+        None if nothing is cached. This is the degraded serving path: under
+        ingest backpressure the service loops answer reports from here —
+        tagged stale with age ``engine.step - answer_step`` — instead of
+        dispatching a query the backlog can't afford. Never dispatches."""
+        if not self._est_cache:
+            return None
+        s = max(self._est_cache)
+        return s, self._est_cache[s]
 
     def estimate_tenant(self, tenant: int = 0):
         """One tenant's estimate: a float for scalar schemes, else an array.

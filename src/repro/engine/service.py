@@ -25,31 +25,61 @@ Pipeline
     from a callback, the interactive loop in ``launch.stream_serve``, the
     final post-stream report — is a cache hit, not a second dispatch.
 
+Resilience (docs/robustness.md)
+-------------------------------
+Both loops take a ``ResilienceConfig``. By default every batch is validated
+(self-loops, negative/out-of-range ids, sign mixing) and a poisoned batch is
+*quarantined* to a dead-letter buffer — one bad producer record must not
+kill a serving loop. Transient ingest/stage faults are ridden out with
+bounded exponential backoff (``with_retries``); retry exhaustion propagates,
+because at that point the safest state is the last checkpoint. Report
+queries degrade instead of dying: a timed-out/faulted device dispatch falls
+back to the gather oracle inside ``engine.estimate``, and when the prefetch
+backlog passes ``backpressure_depth`` the loop answers from the engine's
+estimate cache — stale, tagged with its age — rather than spending device
+time the ingest path needs.
+
 Checkpoint / resume contract
 ----------------------------
 The engine snapshot (see "Snapshot format" in ``repro.engine.engine``) is
 saved every ``ckpt_every`` batches plus once at the end, through
-``repro.train.checkpoint.CheckpointManager`` (atomic manifest, keep-k,
-async) with metadata {config_hash, r, batch, tenants}. On start the loop
-restores the newest complete manifest and *skips* the already-ingested
-prefix of the iterator by batch count — which is why auto-resume refuses a
-changed ``batch_size`` (the skip would mis-position the stream) even though
+``repro.train.checkpoint.CheckpointManager`` (atomic manifest, checksums,
+keep-k, async) with metadata {config_hash, r, batch, tenants, source_pos}.
+On start the loop walks the saved snapshots newest-first and restores the
+first one that *verifies* — torn or bit-corrupt checkpoints are counted
+(``diag.ckpt_corrupt_skipped``) and skipped, never restored. It then
+*skips* the already-consumed prefix of the iterator: ``source_pos`` records
+the stream position in SOURCE items (ingested + quarantined), so resume
+stays exact even when poisoned batches were quarantined mid-stream. That
+skip counts whole batches, which is why auto-resume refuses a changed
+``batch_size`` (the skip would mis-position the stream) even though
 ``engine.restore`` itself is batch-size independent. Everything else may
 change between runs: mesh shape, execution plan, chunk size. A killed run
 continues bit-for-bit thanks to the counter-based RNG (batch ``i`` always
-folds ``i`` into the root key, regardless of which process replays it).
+folds ``i`` into the root key, regardless of which process replays it) —
+the kill-point chaos matrix in ``tests/test_faults.py`` proves the final
+state matches an unfaulted run exactly (``m_seen``/``dyn_step`` included).
 """
 from __future__ import annotations
 
+import inspect
 import time
-from dataclasses import dataclass
+from collections import deque
+from dataclasses import dataclass, field
 from typing import Callable, Iterable, Optional
 
 import numpy as np
 
 from repro.data.prefetch import PrefetchQueue, superbatches
 from repro.engine.engine import SnapshotMismatch, TriangleCountEngine
-from repro.train.checkpoint import CheckpointManager, config_hash
+from repro.engine.faults import (
+    DeadLetterBuffer,
+    ResilienceConfig,
+    validate_batch,
+    validate_signed_item,
+    with_retries,
+)
+from repro.train.checkpoint import CheckpointCorrupt, CheckpointManager, config_hash
 
 
 @dataclass
@@ -66,6 +96,14 @@ class StreamReport:
     # see PrefetchQueue.get; 0 whenever the stream ends with a real batch
     phantom_batches: int = 0
     queries: int = 0  # batched multi-tenant report queries answered mid-stream
+    # -- resilience accounting (docs/robustness.md) -------------------------
+    retries: int = 0  # ingest/stage attempts retried after transient faults
+    quarantined_batches: int = 0  # invalid batches diverted to dead letters
+    duplicate_batches: int = 0  # redelivered batches deduped by seq number
+    degraded_queries: int = 0  # report queries answered from the stale cache
+    max_staleness: int = 0  # worst stale-answer age, in ingest batches
+    query_fallbacks: int = 0  # device queries that degraded to the gather oracle
+    dead_letters: Optional[DeadLetterBuffer] = field(default=None, repr=False)
 
     @property
     def edges_per_s(self) -> float:
@@ -73,58 +111,87 @@ class StreamReport:
 
 
 QueryCallback = Callable[[int, np.ndarray, np.ndarray], None]
-# (engine_step, per-tenant estimates, per-tenant edges_seen) -> None
+# (answer_step, per-tenant estimates, per-tenant edges_seen) -> None.
+# A callback may additionally declare a ``stale_age`` keyword parameter: it
+# receives 0 for fresh answers and the answer's age in ingest batches when
+# the loop served a cached (degraded) answer under backpressure — in that
+# case answer_step is the step the ANSWER corresponds to, not the current
+# stream position.
 
 
 def _restore_latest(
     engine: TriangleCountEngine, ckpt_dir: Optional[str]
-) -> tuple[Optional[CheckpointManager], bool]:
-    """Open ``ckpt_dir`` and restore the newest complete checkpoint into
-    ``engine``. Returns (manager or None, whether a state was restored).
+) -> tuple[Optional[CheckpointManager], bool, Optional[dict]]:
+    """Open ``ckpt_dir`` and restore the newest VERIFIED checkpoint into
+    ``engine``, walking back through the keep-k snapshots past any torn or
+    corrupt one (counted in ``diag.ckpt_corrupt_skipped``). Returns
+    (manager or None, whether a state was restored, that snapshot's
+    manifest or None).
 
     Keys the engine's snapshot template grew over time (``scheme``, then
     ``dyn_step``) are popped from the template when the saved manifest
     predates them — ``engine.restore`` defaults both. The window-state keys
     are NOT optional: a window/decay engine restoring from a checkpoint
     without them must fail (the live-edge ring cannot be reconstructed), and
-    the KeyError surfaces as SnapshotMismatch here."""
+    the KeyError surfaces as SnapshotMismatch here. Config mismatches are
+    NOT walked past: restoring an older snapshot would silently rewind the
+    stream when the real problem is a wrong --ckpt-dir."""
     if ckpt_dir is None:
-        return None, False
+        return None, False, None
     ckpt = CheckpointManager(ckpt_dir, async_save=True)
-    template = engine.snapshot()
-    saved = ckpt.manifest()
-    if saved is not None and "keys" in saved:
-        # manifest keys are tree_flatten_with_path names: a top-level snapshot
-        # entry 'dyn_step' is recorded as "['dyn_step']", not "dyn_step"
-        names = set(saved["keys"])
-        for optional in ("scheme", "dyn_step"):
-            if optional not in names and f"[{optional!r}]" not in names:
-                template.pop(optional, None)
+    full = engine.snapshot()
+    for step in reversed(ckpt.steps()):
+        try:
+            saved = ckpt.manifest(step)
+        except CheckpointCorrupt:
+            engine.diag.ckpt_corrupt_skipped += 1
+            continue
+        template = dict(full)
+        if saved is not None and "keys" in saved:
+            # manifest keys are tree_flatten_with_path names: a top-level
+            # snapshot entry 'dyn_step' is recorded as "['dyn_step']"
+            names = set(saved["keys"])
+            for optional in ("scheme", "dyn_step"):
+                if optional not in names and f"[{optional!r}]" not in names:
+                    template.pop(optional, None)
+        try:
+            restored, manifest = ckpt.restore(template, step=step)
+        except CheckpointCorrupt:
+            # torn/bit-flipped snapshot: walk back to the previous one
+            # rather than crash — and NEVER restore it
+            engine.diag.ckpt_corrupt_skipped += 1
+            continue
+        except (AssertionError, KeyError) as e:
+            raise SnapshotMismatch(
+                f"checkpoint in {ckpt_dir!r} does not fit this engine "
+                f"(r={engine.config.r}, tenants={engine.config.n_tenants}); "
+                "point --ckpt-dir at a fresh directory or match the saved "
+                f"config. Underlying error: {e}"
+            ) from e
+        # the resume skip counts BATCHES, so resuming under a different
+        # batch_size would mis-position the stream (skip the wrong edges)
+        ckpt_bs = int(np.asarray(restored["config"])[1])
+        if ckpt_bs != engine.config.batch_size:
+            raise SnapshotMismatch(
+                f"checkpoint in {ckpt_dir!r} was written with "
+                f"batch_size={ckpt_bs}, engine has "
+                f"{engine.config.batch_size}; the stream loops resume by "
+                "skipping whole batches, so the sizes must match "
+                "(re-batching needs manual engine.restore + stream "
+                "positioning)"
+            )
+        engine.restore(restored)
+        return ckpt, True, manifest
+    return ckpt, False, None
+
+
+def _wants_stale_age(cb: Optional[QueryCallback]) -> bool:
+    if cb is None:
+        return False
     try:
-        restored, _manifest = ckpt.restore(template)
-    except (AssertionError, KeyError) as e:
-        raise SnapshotMismatch(
-            f"checkpoint in {ckpt_dir!r} does not fit this engine "
-            f"(r={engine.config.r}, tenants={engine.config.n_tenants}); "
-            "point --ckpt-dir at a fresh directory or match the saved "
-            f"config. Underlying error: {e}"
-        ) from e
-    if restored is None:
-        return ckpt, False
-    # the resume skip counts BATCHES, so resuming under a different
-    # batch_size would mis-position the stream (skip the wrong edges)
-    ckpt_bs = int(np.asarray(restored["config"])[1])
-    if ckpt_bs != engine.config.batch_size:
-        raise SnapshotMismatch(
-            f"checkpoint in {ckpt_dir!r} was written with "
-            f"batch_size={ckpt_bs}, engine has "
-            f"{engine.config.batch_size}; the stream loops resume by "
-            "skipping whole batches, so the sizes must match "
-            "(re-batching needs manual engine.restore + stream "
-            "positioning)"
-        )
-    engine.restore(restored)
-    return ckpt, True
+        return "stale_age" in inspect.signature(cb).parameters
+    except (TypeError, ValueError):  # builtins / C callables
+        return False
 
 
 def run_stream(
@@ -137,12 +204,14 @@ def run_stream(
     on_report: Optional[QueryCallback] = None,
     prefetch_depth: int = 4,
     deadline_s: Optional[float] = None,
+    resilience: Optional[ResilienceConfig] = None,
 ) -> StreamReport:
     """Drain ``batch_iter`` ((W, n_valid) pairs) into ``engine``.
 
     If ``ckpt_dir`` is given the engine first restores from the newest
-    complete checkpoint there and *skips* the already-ingested prefix of the
-    iterator, then saves every ``ckpt_every`` batches plus once at the end.
+    checkpoint there that verifies (walking back past torn/corrupt ones) and
+    *skips* the already-consumed prefix of the iterator, then saves every
+    ``ckpt_every`` batches plus once at the end.
 
     With ``engine.config.chunk_size = K > 1`` batches are assembled into
     K-superbatches ingested in one dispatch each, with the next superbatch's
@@ -150,39 +219,88 @@ def run_stream(
     is bit-identical to per-batch ingestion, but reports and checkpoints land
     at chunk granularity (``engine.step`` still counts batches, so resume
     skipping is unaffected).
+
+    ``resilience`` (default: validation on, FaultInjected-only retries,
+    no query timeout, no backpressure) controls quarantine, retry/backoff,
+    and degraded-mode queries — see the module docstring.
     """
+    res = resilience if resilience is not None else ResilienceConfig()
     rep = StreamReport()
-    ckpt, restored = _restore_latest(engine, ckpt_dir)
+    rep.dead_letters = DeadLetterBuffer(res.dead_letter_capacity)
+    ckpt, restored, manifest = _restore_latest(engine, ckpt_dir)
     if restored:
         rep.resumed_from = engine.step
 
-    pf = PrefetchQueue(iter(batch_iter), depth=prefetch_depth, deadline_s=deadline_s)
+    pf = PrefetchQueue(
+        iter(batch_iter),
+        depth=prefetch_depth,
+        deadline_s=deadline_s,
+        retry=res.retry,
+    )
     meta = {
         "r": engine.config.r,
         "batch": engine.config.batch_size,
         "tenants": engine.config.n_tenants,
     }
-    skip = engine.step  # batches already folded into the restored state
+    # resume position in SOURCE items (ingested + quarantined). Checkpoints
+    # since the source_pos field record it exactly; older ones fall back to
+    # engine.step, which is exact when nothing was quarantined.
+    skip = engine.step
+    if manifest is not None and "source_pos" in manifest:
+        skip = int(manifest["source_pos"])
     K = engine.config.chunk_size
+    fallbacks0 = engine.diag.query_fallbacks
+    wants_age = _wants_stale_age(on_report)
     t0 = time.time()
 
+    def _count_retry(attempt, exc):
+        rep.retries += 1
+
+    # committed[0] = source position of the newest INGESTED batch; batches
+    # consumed-but-still-buffered (superbatch assembly, staged chunks) are
+    # deliberately excluded, so a checkpoint never skips an uningested batch
+    committed = [skip]
+    pend: deque = deque()  # source positions of admitted, not-yet-ingested batches
+
+    def _admit(pos: int, W, nv) -> bool:
+        if not res.validate:
+            return True
+        reason = validate_batch(W, nv, max_vertex=res.max_vertex)
+        if reason is None:
+            return True
+        # single-batch quarantine: a poisoned record must not kill the loop
+        rep.quarantined_batches += 1
+        rep.dead_letters.put(reason, pos, (W, nv))
+        return False
+
+    def _emit_report() -> None:
+        astep, ests, age = _answer_query(engine, pf, res, rep, engine.step)
+        if wants_age:
+            on_report(astep, ests, engine.edges_seen(), stale_age=age)
+        else:
+            on_report(astep, ests, engine.edges_seen())
+        rep.queries += 1
+
     def after_ingest(n_batches: int, n_edges: int) -> None:
+        for _ in range(n_batches):
+            if pend:
+                committed[0] = pend.popleft()
         rep.batches += n_batches
         rep.edges += n_edges
         if report_every and engine.step % report_every == 0 and on_report:
             # one batched multi-tenant query; callbacks re-querying the same
             # step (estimate_tenant etc.) hit the engine's per-step cache
-            on_report(engine.step, engine.estimate(), engine.edges_seen())
-            rep.queries += 1
+            _emit_report()
         if ckpt and ckpt_every and rep.batches % ckpt_every == 0:
             ckpt.save(
                 engine.step,
                 engine.snapshot(),
-                {"config_hash": config_hash(meta), **meta},
+                {"config_hash": config_hash(meta), **meta,
+                 "source_pos": committed[0]},
             )
 
     def drained():
-        """Post-skip batches out of the prefetch queue, stale-counted."""
+        """Post-skip (position, batch) pairs out of the prefetch queue."""
         seen = 0
         while True:
             try:
@@ -192,11 +310,19 @@ def run_stream(
             rep.stale_batches += int(stale)
             seen += 1
             if seen > skip:
-                yield batch
+                yield seen, batch
+
+    def admitted():
+        """Validated batches, with their source positions parked in ``pend``
+        until the ingest dispatch that contains them commits."""
+        for pos, (W, nv) in drained():
+            if _admit(pos, W, nv):
+                pend.append(pos)
+                yield W, nv
 
     if K <= 1:
-        for W, nv in drained():
-            engine.ingest(W, nv)
+        for W, nv in admitted():
+            with_retries(res.retry, engine.ingest, W, nv, on_retry=_count_retry)
             after_ingest(1, int(np.asarray(nv).max()))
     else:
         # double buffering: dispatch compute on the staged superbatch (async,
@@ -204,33 +330,73 @@ def run_stream(
         # overlaps the in-flight chunk's compute
         pending = None  # staged-on-device superbatch
         for kind, payload in superbatches(
-            drained(), K, engine.config.batch_size
+            admitted(), K, engine.config.batch_size
         ):
             if pending is not None:
-                engine.ingest_chunk(pending)
+                with_retries(
+                    res.retry, engine.ingest_chunk, pending, on_retry=_count_retry
+                )
                 after_ingest(K, pending.edges)
                 pending = None
             if kind == "chunk":
-                pending = engine.stage_chunk(*payload)
+                pending = with_retries(
+                    res.retry, engine.stage_chunk, *payload, on_retry=_count_retry
+                )
             else:  # ragged tail: per-batch
                 W, nv = payload
-                engine.ingest(W, nv)
+                with_retries(
+                    res.retry, engine.ingest, W, nv, on_retry=_count_retry
+                )
                 after_ingest(1, int(np.asarray(nv).max()))
         if pending is not None:
-            engine.ingest_chunk(pending)
+            with_retries(
+                res.retry, engine.ingest_chunk, pending, on_retry=_count_retry
+            )
             after_ingest(K, pending.edges)
     engine.sync()  # async dispatches must land before the throughput clock stops
     rep.seconds = time.time() - t0
     rep.phantom_batches = pf.unmatched_standins
+    rep.duplicate_batches = pf.duplicate_drops
+    rep.retries += pf.retries
+    rep.query_fallbacks = engine.diag.query_fallbacks - fallbacks0
     if ckpt:
         ckpt.wait()
         ckpt.save(
             engine.step,
             engine.snapshot(),
-            {"config_hash": config_hash(meta), **meta},
+            {"config_hash": config_hash(meta), **meta,
+             "source_pos": committed[0]},
         )
         ckpt.wait()
     return rep
+
+
+def _answer_query(
+    engine: TriangleCountEngine,
+    pf: PrefetchQueue,
+    res: ResilienceConfig,
+    rep: StreamReport,
+    position: int,
+) -> tuple[int, np.ndarray, int]:
+    """One report query: ``(answer_step, estimates, stale_age)``.
+
+    When the prefetch backlog has reached ``res.backpressure_depth`` the
+    answer comes from the engine's estimate cache — possibly stale, tagged
+    with its age in ingest batches — so query latency never steals device
+    time from an ingest path that is already behind. Otherwise it is a fresh
+    ``engine.estimate`` (itself degrading device->gather on fault/timeout).
+    """
+    if res.backpressure_depth and pf.backlog() >= res.backpressure_depth:
+        cached = engine.cached_estimate()
+        if cached is not None:
+            astep, ests = cached
+            age = engine.step - astep
+            if age > 0:
+                rep.degraded_queries += 1
+                rep.max_staleness = max(rep.max_staleness, age)
+                return astep, ests, age
+            return position, ests, 0  # cache is current: a normal hit
+    return position, engine.estimate(timeout_s=res.query_timeout_s), 0
 
 
 def run_signed_stream(
@@ -243,37 +409,54 @@ def run_signed_stream(
     on_report: Optional[QueryCallback] = None,
     prefetch_depth: int = 4,
     deadline_s: Optional[float] = None,
+    resilience: Optional[ResilienceConfig] = None,
 ) -> StreamReport:
     """Drain a SIGNED batch iterator into ``engine`` (the turnstile loop).
 
     Items are ``(W, n_valid)`` pairs (inserts) or ``(W, n_valid, sign)``
     triples with sign +1/-1 (``repro.data.graph_stream.signed_batches``).
     The service surface mirrors ``run_stream`` — prefetch overlap,
-    checkpoint/resume, rolling report queries — with every cursor keyed on
-    ``engine.dyn_step`` (the signed-batch position) instead of ``step``,
-    because deletion batches advance the stream without advancing the RNG
-    cursor. Resume skips ``dyn_step`` items of the iterator and checkpoints
-    are saved under the dyn_step index, so a killed churn stream continues
-    bit-for-bit. Chunked ingest does not apply here (deletions break insert
-    runs at arbitrary points); drive ``engine.ingest_signed_stream`` directly
-    when dispatch fusion matters more than checkpoints.
+    checkpoint/resume with corrupt-snapshot walk-back, quarantine, retries,
+    degraded queries — with every cursor keyed on ``engine.dyn_step`` (the
+    signed-batch position) instead of ``step``, because deletion batches
+    advance the stream without advancing the RNG cursor. Resume skips
+    ``source_pos`` items of the iterator (dyn_step for pre-upgrade
+    checkpoints) and checkpoints are saved under the dyn_step index, so a
+    killed churn stream continues bit-for-bit. Chunked ingest does not apply
+    here (deletions break insert runs at arbitrary points); drive
+    ``engine.ingest_signed_stream`` directly when dispatch fusion matters
+    more than checkpoints.
     """
+    res = resilience if resilience is not None else ResilienceConfig()
     rep = StreamReport()
-    ckpt, restored = _restore_latest(engine, ckpt_dir)
+    rep.dead_letters = DeadLetterBuffer(res.dead_letter_capacity)
+    ckpt, restored, manifest = _restore_latest(engine, ckpt_dir)
     if restored:
         rep.resumed_from = engine.dyn_step
 
     pf = PrefetchQueue(
-        iter(batch_iter), depth=prefetch_depth, deadline_s=deadline_s
+        iter(batch_iter),
+        depth=prefetch_depth,
+        deadline_s=deadline_s,
+        retry=res.retry,
     )
     meta = {
         "r": engine.config.r,
         "batch": engine.config.batch_size,
         "tenants": engine.config.n_tenants,
     }
-    skip = engine.dyn_step  # signed batches already folded into the state
+    skip = engine.dyn_step  # signed items already folded into the state
+    if manifest is not None and "source_pos" in manifest:
+        skip = int(manifest["source_pos"])
+    fallbacks0 = engine.diag.query_fallbacks
+    wants_age = _wants_stale_age(on_report)
     t0 = time.time()
     seen = 0
+    committed = skip  # source position of the newest applied item
+
+    def _count_retry(attempt, exc):
+        rep.retries += 1
+
     while True:
         try:
             item, stale = pf.get()
@@ -283,30 +466,52 @@ def run_signed_stream(
         seen += 1
         if seen <= skip:
             continue
+        if res.validate:
+            reason = validate_signed_item(item, max_vertex=res.max_vertex)
+            if reason is not None:
+                rep.quarantined_batches += 1
+                rep.dead_letters.put(reason, seen, item)
+                continue
         if len(item) > 2 and int(item[2]) < 0:
-            engine.delete(item[0], item[1])
+            with_retries(
+                res.retry, engine.delete, item[0], item[1], on_retry=_count_retry
+            )
         else:
-            engine.ingest(item[0], item[1])
+            with_retries(
+                res.retry, engine.ingest, item[0], item[1], on_retry=_count_retry
+            )
+        committed = seen
         rep.batches += 1
         rep.edges += int(np.max(np.asarray(item[1])))
         if report_every and engine.dyn_step % report_every == 0 and on_report:
-            on_report(engine.dyn_step, engine.estimate(), engine.edges_seen())
+            astep, ests, age = _answer_query(
+                engine, pf, res, rep, engine.dyn_step
+            )
+            if wants_age:
+                on_report(astep, ests, engine.edges_seen(), stale_age=age)
+            else:
+                on_report(astep, ests, engine.edges_seen())
             rep.queries += 1
         if ckpt and ckpt_every and rep.batches % ckpt_every == 0:
             ckpt.save(
                 engine.dyn_step,
                 engine.snapshot(),
-                {"config_hash": config_hash(meta), **meta},
+                {"config_hash": config_hash(meta), **meta,
+                 "source_pos": committed},
             )
     engine.sync()
     rep.seconds = time.time() - t0
     rep.phantom_batches = pf.unmatched_standins
+    rep.duplicate_batches = pf.duplicate_drops
+    rep.retries += pf.retries
+    rep.query_fallbacks = engine.diag.query_fallbacks - fallbacks0
     if ckpt:
         ckpt.wait()
         ckpt.save(
             engine.dyn_step,
             engine.snapshot(),
-            {"config_hash": config_hash(meta), **meta},
+            {"config_hash": config_hash(meta), **meta,
+             "source_pos": committed},
         )
         ckpt.wait()
     return rep

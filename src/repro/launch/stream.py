@@ -40,7 +40,11 @@ from repro.data.graph_stream import (
 )
 from repro.engine import (
     EngineConfig,
+    ResilienceConfig,
+    RetryPolicy,
     TriangleCountEngine,
+    install_fault_plan,
+    parse_fault_plan,
     run_signed_stream,
     run_stream,
 )
@@ -126,6 +130,104 @@ def make_dynamic_stream(args, edges):
     return stream, live
 
 
+def add_resilience_flags(ap) -> None:
+    """Chaos/resilience flags shared by both stream drivers
+    (docs/robustness.md)."""
+    ap.add_argument("--fault-plan", default="",
+                    help="inject deterministic faults: comma-joined "
+                         "site:kind@AT[xTIMES][~DELAY_S] specs, e.g. "
+                         "'engine.ingest:raise@3x2,checkpoint.write:torn@1' "
+                         "(sites/kinds: repro.engine.faults)")
+    ap.add_argument("--max-retries", type=int, default=3,
+                    help="bounded retries (exponential backoff + jitter) for "
+                         "transient source/ingest/stage faults")
+    ap.add_argument("--retry-base", type=float, default=0.02,
+                    help="base backoff seconds (doubles per attempt)")
+    ap.add_argument("--query-timeout", type=float, default=0.0,
+                    help="per-query wall-clock bound on the device-resident "
+                         "estimate; on expiry the answer degrades to the "
+                         "gather oracle (0 = unbounded)")
+    ap.add_argument("--backpressure", type=int, default=0,
+                    help="answer report queries from the (stale, tagged) "
+                         "estimate cache when the prefetch backlog reaches "
+                         "this depth (0 = always query fresh)")
+    ap.add_argument("--no-validate", action="store_true",
+                    help="skip batch validation/quarantine (trusted source)")
+    ap.add_argument("--diag-json", default="",
+                    help="dump engine diag + resilience counters to this "
+                         "JSON file at exit (the CI chaos artifact)")
+
+
+def resilience_from_args(args) -> ResilienceConfig:
+    return ResilienceConfig(
+        retry=RetryPolicy(
+            max_retries=args.max_retries,
+            base_s=args.retry_base,
+            seed=args.seed,
+        ),
+        validate=not args.no_validate,
+        query_timeout_s=args.query_timeout or None,
+        backpressure_depth=args.backpressure,
+    )
+
+
+def install_cli_fault_plan(args) -> None:
+    """Parse and install --fault-plan process-wide (no-op when empty)."""
+    plan = parse_fault_plan(args.fault_plan, seed=args.seed)
+    if plan is not None:
+        install_fault_plan(plan)
+        print(f"fault plan installed: {args.fault_plan}", flush=True)
+
+
+def write_diag_json(path: str, engine, rep) -> None:
+    """Engine diag + StreamReport resilience counters as one JSON artifact."""
+    if not path:
+        return
+    import dataclasses
+    import json
+
+    from repro.engine.faults import active_fault_plan
+
+    plan = active_fault_plan()
+    payload = {
+        "diag": dataclasses.asdict(engine.diag),
+        "report": {
+            "batches": rep.batches,
+            "edges": rep.edges,
+            "resumed_from": rep.resumed_from,
+            "retries": rep.retries,
+            "quarantined_batches": rep.quarantined_batches,
+            "duplicate_batches": rep.duplicate_batches,
+            "degraded_queries": rep.degraded_queries,
+            "max_staleness": rep.max_staleness,
+            "query_fallbacks": rep.query_fallbacks,
+            "dead_letter_reasons": rep.dead_letters.reasons()
+            if rep.dead_letters else [],
+        },
+        "fault_plan": plan.summary() if plan else None,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"diag written to {path}", flush=True)
+
+
+def print_resilience_summary(engine, rep) -> None:
+    """One line of resilience accounting whenever anything non-trivial
+    happened (silent on the happy path)."""
+    d = engine.diag
+    if not any((rep.retries, rep.quarantined_batches, rep.duplicate_batches,
+                rep.degraded_queries, rep.query_fallbacks,
+                d.ckpt_corrupt_skipped)):
+        return
+    print(f"resilience: retries={rep.retries} "
+          f"quarantined={rep.quarantined_batches} "
+          f"duplicates={rep.duplicate_batches} "
+          f"degraded_queries={rep.degraded_queries} "
+          f"(max_staleness={rep.max_staleness}) "
+          f"query_fallbacks={rep.query_fallbacks} "
+          f"ckpt_corrupt_skipped={d.ckpt_corrupt_skipped}", flush=True)
+
+
 def add_scheme_flags(ap) -> None:
     ap.add_argument("--scheme", default="global",
                     help="estimator scheme: any name in repro.core.SCHEMES "
@@ -185,6 +287,7 @@ def main():
                     help="auto or any name in repro.engine.backends.BACKENDS")
     add_scheme_flags(ap)
     add_dynamic_flags(ap)
+    add_resilience_flags(ap)
     ap.add_argument("--assert-rel-err", type=float, default=0.0,
                     help="exit nonzero unless tenant 0's estimate lands "
                          "within this relative error of the true (live) "
@@ -214,6 +317,8 @@ def main():
     else:
         print(f"stream: m={len(edges)} tau={tau}")
 
+    install_cli_fault_plan(args)
+    res = resilience_from_args(args)
     engine = build_engine(args)
     if args.deletions:
         # deletion batches break insert runs, so drive the signed service loop
@@ -222,6 +327,7 @@ def main():
             signed_batches(stream, args.batch),
             ckpt_dir=args.ckpt_dir if args.ckpt_every else None,
             ckpt_every=args.ckpt_every,
+            resilience=res,
         )
     else:
         rep = run_stream(
@@ -229,10 +335,13 @@ def main():
             batches(edges, args.batch),
             ckpt_dir=args.ckpt_dir if args.ckpt_every else None,
             ckpt_every=args.ckpt_every,
+            resilience=res,
         )
     dt = max(rep.seconds, 1e-9)
     print(f"processed {rep.edges} edges in {dt:.2f}s "
           f"({rep.edges/dt/1e6:.2f}M edges/s, r={args.estimators})")
+    print_resilience_summary(engine, rep)
+    write_diag_json(args.diag_json, engine, rep)
     if dynamic:
         print(f"dynamic: deletes={engine.diag.delete_batches} batches "
               f"expired={engine.diag.window_expired} edges "

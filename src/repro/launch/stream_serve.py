@@ -9,7 +9,15 @@ Two query surfaces:
     estimates (machine-parseable ``query step=.. tenant=.. ..`` lines).
   * ``--interactive``: additionally read queries from stdin while ingesting —
     a tenant id (``0``), ``all``, or ``quit``; each answers from the live
-    state between batches.
+    state between batches. A closed or errored stdin is *reported* and
+    interactive mode disabled — it never kills the serve loop (only an
+    explicit ``quit`` does).
+
+Failure posture (docs/robustness.md): a crashing stream source is caught,
+the final state is still reported, and the process exits nonzero; under
+``--backpressure`` report queries degrade to the stale estimate cache
+(printed with ``stale_age=N``); ``--fault-plan`` injects deterministic
+chaos for drills.
 
   PYTHONPATH=src python -m repro.launch.stream_serve --graph ba --nodes 5000 \
       --tenants 4 --estimators 32768 --batch 4096 --report-every 4
@@ -36,34 +44,55 @@ from repro.data.graph_stream import batches, signed_batches
 from repro.engine import run_signed_stream, run_stream
 from repro.launch.stream import (
     add_dynamic_flags,
+    add_resilience_flags,
     add_scheme_flags,
     build_engine,
     format_topk,
+    install_cli_fault_plan,
     make_dynamic_stream,
     make_stream,
+    print_resilience_summary,
+    resilience_from_args,
+    write_diag_json,
 )
 
+# out-of-band markers the stdin thread posts so the serve loop can tell
+# "stdin went away" (keep serving, say so) from an actual quit request
+_STDIN_CLOSED = "__stdin_closed__"
+_STDIN_ERROR = "__stdin_error__"
 
-def _print_rolling(step, ests, edges_seen, tau=None):
+
+def _print_rolling(step, ests, edges_seen, tau=None, stale_age=0):
+    # stale_age > 0: a degraded (backpressure) answer — `step` is the step
+    # the ANSWER corresponds to, and the tag makes the staleness explicit
+    tag = f" stale_age={stale_age}" if stale_age else ""
     for t, e in enumerate(ests):
         if np.ndim(e) > 0:  # vector scheme (local): summarize per tenant
             line = (f"query step={step} tenant={t} m={int(edges_seen[t])} "
                     f"sum/3={float(np.sum(e)) / 3:.1f} "
-                    f"top={format_topk(e, top=3)}")
+                    f"top={format_topk(e, top=3)}{tag}")
         else:
             line = (f"query step={step} tenant={t} m={int(edges_seen[t])} "
-                    f"estimate={float(e):.1f}")
-            if tau:
+                    f"estimate={float(e):.1f}{tag}")
+            if tau and not stale_age:
                 line += f" rel.err={abs(float(e)-tau)/max(tau,1):.3%}"
         print(line, flush=True)
 
 
 def _stdin_queries(q: queue.Queue):
-    for line in sys.stdin:
-        q.put(line.strip())
-        if line.strip() == "quit":
-            return
-    q.put("quit")
+    """Forward stdin lines to the query queue. stdin closing (EOF) or
+    erroring must NOT look like a quit: the serve loop keeps ingesting and
+    answering --report-every queries; only the marker is posted so the loop
+    can report that interactive queries are gone."""
+    try:
+        for line in sys.stdin:
+            q.put(line.strip())
+            if line.strip() == "quit":
+                return
+    except Exception as e:  # stdin torn down (closed fd, decode error, ...)
+        q.put((_STDIN_ERROR, repr(e)))
+        return
+    q.put(_STDIN_CLOSED)
 
 
 def main():
@@ -83,6 +112,7 @@ def main():
     ap.add_argument("--backend", default="auto")
     add_scheme_flags(ap)
     add_dynamic_flags(ap)
+    add_resilience_flags(ap)
     ap.add_argument("--mesh", default="",
                     help="device mesh spec, e.g. 'tenants=2,estimators=4' "
                          "(docs/scaling.md)")
@@ -114,6 +144,7 @@ def main():
     else:
         print(f"stream: m={len(edges)} tau={tau} tenants={args.tenants}",
               flush=True)
+    install_cli_fault_plan(args)
     engine = build_engine(args)
 
     qq: queue.Queue = queue.Queue()
@@ -121,23 +152,38 @@ def main():
         threading.Thread(target=_stdin_queries, args=(qq,), daemon=True).start()
 
     stop = False
+    interactive_down = False
 
-    def on_report(step, ests, seen):
-        nonlocal stop
-        _print_rolling(step, ests, seen, tau)
+    def on_report(step, ests, seen, stale_age=0):
+        nonlocal stop, interactive_down
+        _print_rolling(step, ests, seen, tau, stale_age)
         # drain the stdin queue, then answer the commands IN ORDER from one
         # batched multi-tenant query: every pending query sees the same bank
         # state and (the report above populated the engine's per-step cache)
         # the whole drain costs zero extra device dispatches, while each
         # request keeps exactly one response in arrival order
-        cmds: list[str] = []
+        cmds: list = []
         while not qq.empty():
             cmds.append(qq.get_nowait())
-        if any(c != "quit" for c in cmds):
+        queries = [
+            c for c in cmds
+            if isinstance(c, str) and c not in ("quit", _STDIN_CLOSED)
+        ]
+        if queries:
             answers = engine.estimate()  # cached batched query
         for cmd in cmds:
             if cmd == "quit":
                 stop = True
+            elif cmd == _STDIN_CLOSED:
+                if not interactive_down:
+                    print("serve: stdin closed — interactive queries "
+                          "disabled, still serving", flush=True)
+                interactive_down = True
+            elif isinstance(cmd, tuple) and cmd[0] == _STDIN_ERROR:
+                if not interactive_down:
+                    print(f"serve: stdin error {cmd[1]} — interactive "
+                          "queries disabled, still serving", flush=True)
+                interactive_down = True
             elif cmd == "all" or cmd == "":
                 _print_rolling(step, answers, engine.edges_seen(), tau)
             else:
@@ -172,6 +218,8 @@ def main():
     # dyn_step); window/decay-only streams stay on the plain loop — the
     # engine's window clock authors the expiries itself
     runner = run_signed_stream if signed is not None else run_stream
+    rep = None
+    failed = None
     try:
         rep = runner(
             engine,
@@ -180,15 +228,23 @@ def main():
             ckpt_every=args.ckpt_every,
             report_every=max(args.report_every, 1),
             on_report=on_report,
+            resilience=resilience_from_args(args),
         )
     except KeyboardInterrupt:
-        rep = None
         print("serve: stopped by query loop", flush=True)
+    except Exception as e:  # feed()/ingest failure: report state, exit nonzero
+        failed = e
+        print(f"serve: ingest loop failed: {e!r} — reporting final state",
+              flush=True)
     _print_rolling(engine.step, engine.estimate(), engine.edges_seen(), tau)
     if rep is not None:
         print(f"served {rep.edges} edges in {rep.seconds:.2f}s "
               f"({rep.edges_per_s/1e6:.2f}M edges/s x {args.tenants} tenants)",
               flush=True)
+        print_resilience_summary(engine, rep)
+        write_diag_json(args.diag_json, engine, rep)
+    if failed is not None:
+        sys.exit(1)
 
 
 if __name__ == "__main__":

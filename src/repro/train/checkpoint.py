@@ -4,12 +4,24 @@ Design for 1000+ nodes (DESIGN.md §7):
   * Each host writes only its own shard file (here: one host). A checkpoint is
     a directory step_<N>/ of .npz shard files plus manifest.json written LAST
     via atomic rename — a manifest's existence implies a complete checkpoint.
+  * The manifest carries a per-array sha256 checksum; ``restore`` verifies
+    them and raises ``CheckpointCorrupt`` on any mismatch or unreadable file,
+    so a bit-flipped shard can never be silently restored into estimator
+    state (the stream service walks back to an older snapshot instead —
+    docs/robustness.md).
   * Restart scans for the newest complete manifest; torn checkpoints (no
-    manifest) are ignored and garbage-collected.
+    manifest) are ignored and their staging dirs swept — at manager startup
+    and on every GC, since the single-writer contract means any ``.tmp``
+    dir seen outside an in-flight ``_write`` is an orphan.
   * Async mode hands the (host-copied) pytree to a writer thread so the train
-    loop never blocks on disk.
+    loop never blocks on disk; a writer-thread error is re-raised on the next
+    ``wait()`` rather than vanishing with the daemon thread.
   * The manifest records step, config hash, mesh shape and RNG state; elastic
     restarts re-shard from the saved global arrays (repro.train.elastic).
+
+``checkpoint.write`` is a chaos-harness fault site (repro.engine.faults):
+kind ``torn_write`` crashes the writer between shard write and the atomic
+rename, leaking a staging dir exactly as a mid-write kill would.
 """
 from __future__ import annotations
 
@@ -23,6 +35,19 @@ from typing import Any, Optional
 
 import jax
 import numpy as np
+
+
+class CheckpointCorrupt(RuntimeError):
+    """A checkpoint's data does not match its manifest (torn/corrupt write),
+    or its files cannot be read at all."""
+
+
+def _check_fault(site: str):
+    # lazy import: repro.train sits below repro.engine in the import graph,
+    # and a top-level import would cycle through repro.engine.__init__
+    from repro.engine.faults import check_fault
+
+    return check_fault(site)
 
 
 def _flatten_with_names(tree) -> dict[str, np.ndarray]:
@@ -49,6 +74,16 @@ def config_hash(obj: Any) -> str:
     return hashlib.sha256(repr(obj).encode()).hexdigest()[:16]
 
 
+def array_checksum(arr: np.ndarray) -> str:
+    """Content hash of one array: dtype + shape + bytes (C-contiguous)."""
+    a = np.ascontiguousarray(arr)
+    h = hashlib.sha256()
+    h.update(str(a.dtype).encode())
+    h.update(str(a.shape).encode())
+    h.update(a.tobytes())
+    return h.hexdigest()[:16]
+
+
 class CheckpointManager:
     def __init__(
         self,
@@ -65,6 +100,9 @@ class CheckpointManager:
         self.host_id = host_id
         self.n_hosts = n_hosts
         self._thread: Optional[threading.Thread] = None
+        self._save_error: Optional[BaseException] = None
+        # startup sweep: any staging dir left by a killed/torn writer
+        self.tmp_swept = self._sweep_tmp()
 
     # -- save ---------------------------------------------------------------
     def save(self, step: int, state: Any, meta: Optional[dict] = None) -> None:
@@ -72,7 +110,9 @@ class CheckpointManager:
         if self.async_save:
             self.wait()
             self._thread = threading.Thread(
-                target=self._write, args=(step, named, meta or {}), daemon=True
+                target=self._write_guarded,
+                args=(step, named, meta or {}),
+                daemon=True,
             )
             self._thread.start()
         else:
@@ -82,8 +122,20 @@ class CheckpointManager:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._save_error is not None:
+            e, self._save_error = self._save_error, None
+            raise e
+
+    def _write_guarded(self, step: int, named: dict, meta: dict) -> None:
+        # async writer: park the error for the next wait() instead of
+        # letting the daemon thread die silently
+        try:
+            self._write(step, named, meta)
+        except BaseException as e:
+            self._save_error = e
 
     def _write(self, step: int, named: dict, meta: dict) -> None:
+        kind = _check_fault("checkpoint.write")
         final = self.dir / f"step_{step:010d}"
         tmp = self.dir / f".tmp_step_{step:010d}_{time.time_ns()}"
         tmp.mkdir(parents=True, exist_ok=True)
@@ -93,10 +145,15 @@ class CheckpointManager:
             "step": step,
             "n_hosts": self.n_hosts,
             "keys": sorted(named.keys()),
+            "checksums": {k: array_checksum(v) for k, v in named.items()},
             "time": time.time(),
             **meta,
         }
         (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if kind == "torn_write":
+            # injected crash between shard write and rename: the staging dir
+            # leaks and no manifest becomes visible — exactly a torn write
+            return
         if final.exists():
             shutil.rmtree(final)
         tmp.rename(final)  # atomic: manifest only visible in complete dirs
@@ -106,9 +163,18 @@ class CheckpointManager:
         done = sorted(self.dir.glob("step_*"))
         for d in done[: -self.keep] if self.keep else []:
             shutil.rmtree(d, ignore_errors=True)
-        for t in self.dir.glob(".tmp_step_*"):  # torn writes
-            if time.time() - t.stat().st_mtime > 3600:
-                shutil.rmtree(t, ignore_errors=True)
+        self._sweep_tmp()
+
+    def _sweep_tmp(self) -> int:
+        """Remove orphaned staging dirs (torn writes). Saves within one
+        manager are serialized (sync, or async joined before the next), so
+        any ``.tmp`` entry present while no write is in flight is garbage —
+        no age heuristic needed. Returns the number removed."""
+        n = 0
+        for t in list(self.dir.glob(".tmp_step_*")) + list(self.dir.glob("*.tmp")):
+            shutil.rmtree(t, ignore_errors=True)
+            n += 1
+        return n
 
     # -- restore ------------------------------------------------------------
     def manifest(self, step: Optional[int] = None) -> Optional[dict]:
@@ -117,30 +183,84 @@ class CheckpointManager:
         Lets callers inspect what a checkpoint contains (its ``keys`` list,
         config hash, ...) before committing to a template-shaped restore —
         e.g. the stream service drops snapshot keys a pre-upgrade checkpoint
-        never wrote."""
+        never wrote. Raises CheckpointCorrupt if the manifest itself is
+        unreadable."""
         step = step if step is not None else self.latest_step()
         if step is None:
             return None
         d = self.dir / f"step_{step:010d}"
-        return json.loads((d / "manifest.json").read_text())
+        try:
+            return json.loads((d / "manifest.json").read_text())
+        except Exception as e:
+            raise CheckpointCorrupt(f"manifest of {d} is unreadable: {e!r}") from e
 
-    def latest_step(self) -> Optional[int]:
-        steps = []
+    def steps(self) -> list[int]:
+        """All steps with a visible manifest, ascending (walk-back restore
+        iterates this reversed)."""
+        out = []
         for d in self.dir.glob("step_*"):
             if (d / "manifest.json").exists():
-                steps.append(int(d.name.split("_")[1]))
-        return max(steps) if steps else None
+                out.append(int(d.name.split("_")[1]))
+        return sorted(out)
 
-    def restore(self, like: Any, step: Optional[int] = None):
-        """Restore into the structure of ``like``; returns (state, manifest)."""
+    def latest_step(self) -> Optional[int]:
+        steps = self.steps()
+        return steps[-1] if steps else None
+
+    def restore(self, like: Any, step: Optional[int] = None, verify: bool = True):
+        """Restore into the structure of ``like``; returns (state, manifest).
+
+        With ``verify`` (default) every loaded array is checked against the
+        manifest's ``checksums`` entry; mismatches, missing arrays, and
+        unreadable files raise ``CheckpointCorrupt``. Manifests that predate
+        the checksum field restore unverified (back-compat). Template
+        mismatches (wrong shapes/keys for ``like``) still surface as
+        AssertionError/KeyError — they mean a config mismatch, not
+        corruption."""
         step = step if step is not None else self.latest_step()
         if step is None:
             return None, None
         d = self.dir / f"step_{step:010d}"
-        manifest = json.loads((d / "manifest.json").read_text())
-        named: dict[str, np.ndarray] = {}
-        for shard in sorted(d.glob("shard_*.npz")):
-            with np.load(shard) as z:
-                for k in z.files:
-                    named[k] = z[k]
+        try:
+            manifest = json.loads((d / "manifest.json").read_text())
+            named: dict[str, np.ndarray] = {}
+            for shard in sorted(d.glob("shard_*.npz")):
+                with np.load(shard) as z:
+                    for k in z.files:
+                        named[k] = z[k]
+        except Exception as e:
+            raise CheckpointCorrupt(f"checkpoint {d} is unreadable: {e!r}") from e
+        if verify:
+            self._verify(d, manifest, named)
         return _unflatten_like(like, named), manifest
+
+    def _verify(self, d: pathlib.Path, manifest: dict, named: dict) -> None:
+        sums = manifest.get("checksums")
+        if sums is None:
+            return  # pre-integrity manifest: nothing to verify against
+        missing = sorted(set(sums) - set(named))
+        bad = sorted(k for k in sums if k in named and array_checksum(named[k]) != sums[k])
+        if missing or bad:
+            raise CheckpointCorrupt(
+                f"checkpoint {d} failed verification: "
+                f"missing arrays {missing}, checksum mismatches {bad}"
+            )
+
+    def verify(self, step: Optional[int] = None) -> bool:
+        """True iff ``step`` (default newest) loads and matches its
+        manifest checksums."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return False
+        d = self.dir / f"step_{step:010d}"
+        try:
+            manifest = json.loads((d / "manifest.json").read_text())
+            named: dict[str, np.ndarray] = {}
+            for shard in sorted(d.glob("shard_*.npz")):
+                with np.load(shard) as z:
+                    for k in z.files:
+                        named[k] = z[k]
+            self._verify(d, manifest, named)
+        except Exception:
+            return False
+        return True

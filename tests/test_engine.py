@@ -283,11 +283,18 @@ class TestQueryCache:
             eng.estimate_tenants([2, 0]), a[[2, 0]]
         )
         assert eng.diag.query_cache_hits == 3
-        # ingest invalidates: the next query recomputes against the new bank
+        # ingest leaves the old answer step-keyed (degraded backpressure
+        # serving reads it via cached_estimate) but the next query at the
+        # NEW step recomputes against the new bank
         eng.ingest(*its[1])
-        assert eng._est_cache == {}
+        assert eng._est_cache.get(eng.step) is None
+        astep, stale = eng.cached_estimate()
+        assert astep == eng.step - 1 and stale is a
         c = eng.estimate()
         assert c is not a
+        # ... and the fresh answer replaces the stale one in the cache
+        astep, cur = eng.cached_estimate()
+        assert astep == eng.step and cur is c
         # the oracle path never serves from (or populates) the cache
         d = eng.estimate(gather=True)
         np.testing.assert_array_equal(c, d)

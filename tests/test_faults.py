@@ -1,0 +1,797 @@
+"""Chaos-hardening tests: deterministic fault injection, verified
+checkpoints, retry/backoff, quarantine, and degraded-mode queries
+(docs/robustness.md).
+
+The centerpiece is the kill-point chaos matrix: a fatal fault at each
+instrumented site x {insert-only, signed, windowed} streams, then a
+resume run — asserting the recovered final state is BIT-IDENTICAL to an
+unfaulted run (``m_seen``, ``step``/``dyn_step``, and the gather-oracle
+estimates match exactly: no edge replayed, none dropped). That is the
+one-pass estimator's survival property: ``m_seen`` is the unbiasedness
+weight, so any replay/drop would bias every future answer.
+"""
+import io
+import json
+import pathlib
+import queue
+import time
+
+import numpy as np
+import pytest
+
+from repro.data.graph_stream import (
+    batches,
+    churn_stream,
+    erdos_renyi_stream,
+    signed_batches,
+)
+from repro.data.prefetch import PrefetchQueue
+from repro.engine import (
+    EngineConfig,
+    FaultInjected,
+    FaultPlan,
+    FaultSpec,
+    ResilienceConfig,
+    RetryPolicy,
+    TriangleCountEngine,
+    fault_plan,
+    install_fault_plan,
+    parse_fault_plan,
+    run_signed_stream,
+    run_stream,
+    with_retries,
+)
+from repro.engine.faults import (
+    DeadLetterBuffer,
+    validate_batch,
+    validate_signed_item,
+)
+from repro.engine.service import StreamReport, _answer_query
+from repro.train.checkpoint import (
+    CheckpointCorrupt,
+    CheckpointManager,
+    array_checksum,
+)
+
+R, BS = 512, 32
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_plan():
+    yield
+    install_fault_plan(None)
+
+
+def er_edges(m=400, n=60, seed=0):
+    return erdos_renyi_stream(n, m, seed=seed)
+
+
+def make_engine(**kw):
+    return TriangleCountEngine(
+        EngineConfig(r=R, batch_size=BS, n_tenants=1, seeds=(0,), **kw)
+    )
+
+
+# ---------------------------------------------------------------- chaos matrix
+
+STREAMS = ("insert", "signed", "windowed")
+
+
+def build(kind):
+    return make_engine(window=100) if kind == "windowed" else make_engine()
+
+
+def stream_items(kind, edges):
+    if kind == "signed":
+        return list(signed_batches(churn_stream(edges, 0.3, seed=1), BS))
+    return list(batches(edges, BS))
+
+
+def runner(kind):
+    return run_signed_stream if kind == "signed" else run_stream
+
+
+def assert_bit_identical(got: TriangleCountEngine, ref: TriangleCountEngine):
+    assert got.step == ref.step
+    assert got.dyn_step == ref.dyn_step
+    np.testing.assert_array_equal(got.edges_seen(), ref.edges_seen())  # m_seen
+    np.testing.assert_array_equal(
+        got.estimate(gather=True), ref.estimate(gather=True)
+    )
+
+
+class TestChaosMatrix:
+    """Fatal fault at each instrumented site x each stream kind: the loop
+    dies mid-stream with checkpoints on disk, a fresh engine resumes, and
+    the final state matches the unfaulted reference exactly."""
+
+    @pytest.mark.parametrize("kind", STREAMS)
+    @pytest.mark.parametrize(
+        "site", ("engine.ingest", "prefetch.get", "checkpoint.write")
+    )
+    def test_kill_and_recover_bit_identical(self, kind, site, tmp_path):
+        edges = er_edges()
+        its = stream_items(kind, edges)
+        run = runner(kind)
+
+        ref = build(kind)
+        run(ref, iter(its))
+
+        if site == "checkpoint.write":
+            # a torn write at save #1 (staging dir leaks, no manifest becomes
+            # visible) plus a later kill: proves the torn snapshot is neither
+            # restored nor shadowing latest_step
+            specs = [
+                FaultSpec(site, "torn_write", at=1, times=1),
+                FaultSpec("engine.ingest", "raise", at=7, times=999),
+            ]
+        else:
+            # times >> max_retries: backoff exhausts and the loop dies
+            specs = [FaultSpec(site, "raise", at=5, times=999)]
+        faulted = build(kind)
+        with fault_plan(FaultPlan(specs)):
+            with pytest.raises(FaultInjected):
+                run(faulted, iter(its), ckpt_dir=str(tmp_path), ckpt_every=2)
+        time.sleep(0.2)  # let any in-flight async checkpoint writer land
+
+        recovered = build(kind)
+        rep = run(recovered, iter(its), ckpt_dir=str(tmp_path), ckpt_every=2)
+        assert rep.resumed_from > 0, "the kill must land after a checkpoint"
+        assert_bit_identical(recovered, ref)
+
+    @pytest.mark.parametrize("kind", ("insert", "signed"))
+    def test_duplicate_delivery_deduped_exactly_once(self, kind):
+        """An at-least-once source (redelivering items) must not inflate
+        m_seen: sequence numbers dedup to exactly-once ingestion."""
+        edges = er_edges()
+        its = stream_items(kind, edges)
+        run = runner(kind)
+        ref = build(kind)
+        run(ref, iter(its))
+
+        eng = build(kind)
+        with fault_plan(parse_fault_plan("prefetch.get:dup@2x3")):
+            rep = run(eng, iter(its))
+        assert rep.duplicate_batches == 3
+        assert_bit_identical(eng, ref)
+
+    def test_transient_fault_ridden_out_by_backoff(self):
+        """A fault shorter than the retry budget never surfaces: same final
+        state, retries counted."""
+        edges = er_edges()
+        its = stream_items("insert", edges)
+        ref = build("insert")
+        run_stream(ref, iter(its))
+
+        eng = build("insert")
+        with fault_plan(FaultPlan([FaultSpec("engine.ingest", "raise", at=3, times=2)])):
+            rep = run_stream(eng, iter(its))
+        assert rep.retries == 2
+        assert_bit_identical(eng, ref)
+
+    def test_transient_source_fault_retried_in_producer(self):
+        edges = er_edges()
+        its = stream_items("insert", edges)
+        ref = build("insert")
+        run_stream(ref, iter(its))
+
+        eng = build("insert")
+        with fault_plan(FaultPlan([FaultSpec("prefetch.get", "raise", at=2, times=2)])):
+            rep = run_stream(eng, iter(its))
+        assert rep.retries == 2
+        assert_bit_identical(eng, ref)
+
+    def test_chunked_loop_kill_and_recover(self, tmp_path):
+        """The superbatch (K>1) path: staged-but-uningested chunks must not
+        be skipped on resume (source_pos only counts committed batches)."""
+        edges = er_edges()
+        its = stream_items("insert", edges)
+        ref = make_engine(chunk_size=3)
+        run_stream(ref, iter(its))
+
+        faulted = make_engine(chunk_size=3)
+        with fault_plan(FaultPlan([FaultSpec("engine.ingest_chunk", "raise", at=2, times=999)])):
+            with pytest.raises(FaultInjected):
+                run_stream(faulted, iter(its), ckpt_dir=str(tmp_path), ckpt_every=3)
+        time.sleep(0.2)
+
+        recovered = make_engine(chunk_size=3)
+        rep = run_stream(recovered, iter(its), ckpt_dir=str(tmp_path), ckpt_every=3)
+        assert rep.resumed_from > 0
+        assert_bit_identical(recovered, ref)
+
+    def test_stage_chunk_fault_is_retried(self):
+        edges = er_edges()
+        its = stream_items("insert", edges)
+        ref = make_engine(chunk_size=3)
+        run_stream(ref, iter(its))
+
+        eng = make_engine(chunk_size=3)
+        with fault_plan(FaultPlan([FaultSpec("engine.stage_chunk", "raise", at=1, times=1)])):
+            rep = run_stream(eng, iter(its))
+        assert rep.retries == 1
+        assert_bit_identical(eng, ref)
+
+
+# ------------------------------------------------------------------ FaultPlan
+
+
+class TestFaultPlan:
+    def test_parse_grammar(self):
+        plan = parse_fault_plan(
+            "engine.ingest:raise@3x2,checkpoint.write:torn@1,"
+            "engine.estimate:delay@0x4~0.2,prefetch.get:dup@5"
+        )
+        s = plan.specs
+        assert (s[0].site, s[0].kind, s[0].at, s[0].times) == ("engine.ingest", "raise", 3, 2)
+        assert (s[1].kind, s[1].at) == ("torn_write", 1)
+        assert (s[2].kind, s[2].times, s[2].delay_s) == ("delay", 4, 0.2)
+        assert (s[3].kind, s[3].at) == ("duplicate", 5)
+        assert parse_fault_plan("") is None
+
+    def test_parse_rejects_bad_specs(self):
+        for bad in ("nosuchsite:raise@0", "engine.ingest:explode@0",
+                    "engine.ingest", "engine.ingest:raise@x"):
+            with pytest.raises(ValueError):
+                parse_fault_plan(bad)
+        with pytest.raises(ValueError):
+            FaultSpec("engine.ingest", "duplicate")  # caller-enacted elsewhere
+
+    def test_counters_and_window(self):
+        plan = FaultPlan([FaultSpec("engine.ingest", "raise", at=1, times=2)])
+        assert plan.check("engine.ingest") is None  # call 0
+        for _ in range(2):  # calls 1, 2 fire
+            with pytest.raises(FaultInjected):
+                plan.check("engine.ingest")
+        assert plan.check("engine.ingest") is None  # call 3: window passed
+        assert plan.calls["engine.ingest"] == 4
+        assert plan.fired["engine.ingest"] == 2
+        assert plan.summary()["log"] == [
+            ["engine.ingest", "raise", 1], ["engine.ingest", "raise", 2]]
+
+    def test_context_restores_previous(self):
+        from repro.engine.faults import active_fault_plan
+
+        outer = FaultPlan([])
+        install_fault_plan(outer)
+        with fault_plan(FaultPlan([])):
+            assert active_fault_plan() is not outer
+        assert active_fault_plan() is outer
+        install_fault_plan(None)
+
+
+class TestRetryPolicy:
+    def test_retries_then_succeeds(self):
+        calls = {"n": 0}
+
+        def flaky():
+            calls["n"] += 1
+            if calls["n"] <= 2:
+                raise FaultInjected("engine.ingest", calls["n"])
+            return "ok"
+
+        seen = []
+        pol = RetryPolicy(max_retries=3, base_s=0.001)
+        out = with_retries(pol, flaky, on_retry=lambda a, e: seen.append(a))
+        assert out == "ok" and seen == [0, 1]
+
+    def test_exhaustion_raises(self):
+        def dead():
+            raise FaultInjected("engine.ingest", 0)
+
+        with pytest.raises(FaultInjected):
+            with_retries(RetryPolicy(max_retries=2, base_s=0.001), dead)
+
+    def test_non_retryable_propagates_immediately(self):
+        calls = {"n": 0}
+
+        def bad():
+            calls["n"] += 1
+            raise ValueError("not transient")
+
+        with pytest.raises(ValueError):
+            with_retries(RetryPolicy(max_retries=3, base_s=0.001), bad)
+        assert calls["n"] == 1  # a replayed batch would bias m_seen
+
+    def test_none_policy_is_direct_call(self):
+        assert with_retries(None, lambda: 7) == 7
+
+    def test_backoff_is_bounded_and_seeded(self):
+        import random
+
+        pol = RetryPolicy(base_s=0.1, max_s=0.5, jitter=0.5, seed=3)
+        a = [pol.backoff_s(i, random.Random(3)) for i in range(6)]
+        b = [pol.backoff_s(i, random.Random(3)) for i in range(6)]
+        assert a == b  # deterministic
+        assert all(0 < x <= 0.5 for x in a)
+
+
+# ----------------------------------------------------------------- validation
+
+
+class TestValidation:
+    def test_good_batch_passes(self):
+        W, nv = next(iter(batches(er_edges(), BS)))
+        assert validate_batch(W, nv) is None
+
+    def test_self_loop_rejected(self):
+        W = np.array([[1, 2], [3, 3]], np.int32)
+        assert "self-loop" in validate_batch(W, 2)
+        assert validate_batch(W, 1) is None  # the loop row is padding
+
+    def test_negative_and_out_of_range(self):
+        assert "negative" in validate_batch(np.array([[0, -1]], np.int32), 1)
+        assert "max_vertex" in validate_batch(
+            np.array([[0, 99]], np.int32), 1, max_vertex=50
+        )
+
+    def test_malformed_shapes(self):
+        assert "shape" in validate_batch(np.zeros((4, 3), np.int32), 4)
+        assert "shape" in validate_batch(np.zeros((4,), np.int32))
+        assert "n_valid" in validate_batch(np.zeros((4, 2), np.int32), 9)
+        assert "non-integer" in validate_batch(np.zeros((4, 2)), 4)
+
+    def test_multi_tenant_per_tenant_nv(self):
+        W = np.zeros((2, 4, 2), np.int32)
+        W[..., 1] = 1  # rows (0, 1): valid edges
+        W[1, 2] = (5, 5)
+        assert validate_batch(W, [4, 2]) is None  # loop row beyond nv
+        assert "self-loop" in validate_batch(W, [4, 3])
+
+    def test_signed_items(self):
+        W = np.array([[1, 2]], np.int32)
+        assert validate_signed_item((W, 1, 1)) is None
+        assert validate_signed_item((W, 1, -1)) is None
+        assert "sign" in validate_signed_item((W, 1, 0))
+        assert "self-loop" in validate_signed_item(
+            (np.array([[2, 2]], np.int32), 1, 1)
+        )
+
+    def test_dead_letter_buffer_bounded(self):
+        dl = DeadLetterBuffer(capacity=2)
+        for i in range(5):
+            dl.put("reason", i, None)
+        assert dl.total == 5 and len(dl) == 2
+        assert [it["position"] for it in dl.items] == [3, 4]
+
+
+class TestQuarantine:
+    def _poisoned(self, edges, bad_at=2):
+        for i, (W, nv) in enumerate(batches(edges, BS)):
+            if i == bad_at:
+                bad = W.copy()
+                bad[0, 1] = bad[0, 0]  # self-loop
+                yield bad, nv
+            yield W, nv
+
+    def test_poisoned_batch_quarantined_not_fatal(self):
+        edges = er_edges()
+        ref = make_engine()
+        run_stream(ref, batches(edges, BS))
+
+        eng = make_engine()
+        rep = run_stream(eng, self._poisoned(edges))
+        assert rep.quarantined_batches == 1
+        assert rep.dead_letters.total == 1
+        assert "self-loop" in rep.dead_letters.reasons()[0]
+        assert_bit_identical(eng, ref)  # the poison never touched the bank
+
+    def test_quarantine_then_kill_then_resume_exact(self, tmp_path):
+        """source_pos accounting: a quarantined batch shifts the stream
+        position past engine.step, and resume must still be exactly-once."""
+        edges = er_edges()
+        ref = make_engine()
+        run_stream(ref, batches(edges, BS))
+
+        faulted = make_engine()
+        with fault_plan(FaultPlan([FaultSpec("engine.ingest", "raise", at=7, times=999)])):
+            with pytest.raises(FaultInjected):
+                run_stream(faulted, self._poisoned(edges),
+                           ckpt_dir=str(tmp_path), ckpt_every=2)
+        time.sleep(0.2)
+
+        recovered = make_engine()
+        rep = run_stream(recovered, self._poisoned(edges),
+                         ckpt_dir=str(tmp_path), ckpt_every=2)
+        assert rep.resumed_from > 0
+        assert_bit_identical(recovered, ref)
+
+    def test_signed_bad_sign_quarantined(self):
+        edges = er_edges()
+        its = stream_items("signed", edges)
+        ref = build("signed")
+        run_signed_stream(ref, iter(its))
+
+        poisoned = list(its)
+        W = np.array([[1, 2]], np.int32)
+        poisoned.insert(3, (W, 1, 0))  # sign-mixed garbage item
+        eng = build("signed")
+        rep = run_signed_stream(eng, iter(poisoned))
+        assert rep.quarantined_batches == 1
+        assert "sign" in rep.dead_letters.reasons()[0]
+        assert_bit_identical(eng, ref)
+
+    def test_validation_can_be_disabled(self):
+        edges = er_edges(m=64)
+        eng = make_engine()
+        res = ResilienceConfig(validate=False)
+        rep = run_stream(eng, self._poisoned(edges, bad_at=0), resilience=res)
+        assert rep.quarantined_batches == 0  # trusted source: poison ingested
+
+
+# ------------------------------------------------------- checkpoint integrity
+
+
+def _corrupt_shard(d: pathlib.Path):
+    """CRC-valid silent data corruption: rewrite the largest array in the
+    shard with drifted values. The zip stays readable, so ONLY the manifest
+    checksums can catch it (np.savez stores uncompressed — no codec to
+    trip on bit-flips)."""
+    shard = next(d.glob("shard_*.npz"))
+    with np.load(shard) as z:
+        data = {k: z[k] for k in z.files}
+    key = max(data, key=lambda k: data[k].size)
+    data[key] = data[key] + 1
+    np.savez(shard.with_suffix(""), **data)  # savez re-appends .npz
+
+
+def _truncate_shard(d: pathlib.Path):
+    """A torn write at the filesystem level: half the shard is gone."""
+    shard = next(d.glob("shard_*.npz"))
+    b = shard.read_bytes()
+    shard.write_bytes(b[: len(b) // 2])
+
+
+class TestCheckpointIntegrity:
+    def _save_steps(self, d, steps=(2, 4, 6)):
+        ckpt = CheckpointManager(str(d), keep=len(steps))
+        state = {"x": np.arange(8, dtype=np.int32), "y": np.float32(3.5)}
+        for s in steps:
+            ckpt.save(s, {**state, "x": state["x"] + s})
+        return ckpt, state
+
+    def test_checksum_mismatch_detected(self, tmp_path):
+        """Silent data corruption (valid zip, wrong bytes): only the
+        manifest checksums can catch it."""
+        ckpt, state = self._save_steps(tmp_path, steps=(1,))
+        _corrupt_shard(tmp_path / "step_0000000001")
+        assert not ckpt.verify(1)
+        with pytest.raises(CheckpointCorrupt):
+            ckpt.restore({"x": state["x"], "y": state["y"]}, step=1)
+        # verify=False restores the corrupt bytes (the old behavior)
+        restored, _ = ckpt.restore(
+            {"x": state["x"], "y": state["y"]}, step=1, verify=False
+        )
+        assert restored is not None
+
+    def test_torn_zip_detected_even_unverified(self, tmp_path):
+        ckpt, state = self._save_steps(tmp_path, steps=(1,))
+        _truncate_shard(tmp_path / "step_0000000001")
+        assert not ckpt.verify(1)
+        with pytest.raises(CheckpointCorrupt):
+            ckpt.restore({"x": state["x"], "y": state["y"]}, step=1, verify=False)
+
+    def test_intact_checkpoint_verifies(self, tmp_path):
+        ckpt, state = self._save_steps(tmp_path, steps=(1,))
+        assert ckpt.verify(1)
+        restored, manifest = ckpt.restore({"x": state["x"], "y": state["y"]})
+        np.testing.assert_array_equal(restored["x"], state["x"] + 1)
+        assert set(manifest["checksums"]) == set(manifest["keys"])
+
+    def test_pre_checksum_manifest_restores_unverified(self, tmp_path):
+        ckpt, state = self._save_steps(tmp_path, steps=(1,))
+        mf = tmp_path / "step_0000000001" / "manifest.json"
+        m = json.loads(mf.read_text())
+        del m["checksums"]  # a manifest written before this PR
+        mf.write_text(json.dumps(m))
+        restored, _ = ckpt.restore({"x": state["x"], "y": state["y"]})
+        assert restored is not None
+
+    def test_unreadable_manifest_is_corrupt(self, tmp_path):
+        ckpt, state = self._save_steps(tmp_path, steps=(1,))
+        (tmp_path / "step_0000000001" / "manifest.json").write_text("{oops")
+        with pytest.raises(CheckpointCorrupt):
+            ckpt.manifest(1)
+        with pytest.raises(CheckpointCorrupt):
+            ckpt.restore({"x": state["x"], "y": state["y"]}, step=1)
+
+    def test_gc_sweeps_orphaned_tmp_dirs(self, tmp_path):
+        """Regression: a crash between write and rename used to leak
+        .tmp_step_* dirs for an hour; now any orphan is swept by _gc and at
+        manager startup (single-writer contract)."""
+        orphan = tmp_path / ".tmp_step_0000000009_123"
+        orphan.mkdir()
+        (orphan / "shard_00000.npz").write_bytes(b"torn")
+        stray = tmp_path / "whatever.tmp"
+        stray.mkdir()
+        ckpt = CheckpointManager(str(tmp_path))  # startup sweep
+        assert ckpt.tmp_swept == 2
+        assert not orphan.exists() and not stray.exists()
+
+        with fault_plan(FaultPlan([FaultSpec("checkpoint.write", "torn_write")])):
+            ckpt.save(1, {"x": np.arange(4)})
+        assert ckpt.latest_step() is None  # torn: no manifest visible
+        assert list(tmp_path.glob(".tmp_step_*"))  # staging dir leaked
+        ckpt.save(2, {"x": np.arange(4)})  # next write's _gc sweeps it
+        assert not list(tmp_path.glob(".tmp_step_*"))
+        assert ckpt.latest_step() == 2
+
+    def test_async_save_error_surfaces_on_wait(self, tmp_path):
+        ckpt = CheckpointManager(str(tmp_path), async_save=True)
+        with fault_plan(FaultPlan([FaultSpec("checkpoint.write", "raise")])):
+            ckpt.save(1, {"x": np.arange(4)})
+            with pytest.raises(FaultInjected):
+                ckpt.wait()
+        ckpt.save(2, {"x": np.arange(4)})  # manager still usable after
+        ckpt.wait()
+        assert ckpt.latest_step() == 2
+
+    def test_array_checksum_covers_dtype_shape_bytes(self):
+        a = np.arange(6, dtype=np.int32)
+        assert array_checksum(a) == array_checksum(a.copy())
+        assert array_checksum(a) != array_checksum(a.astype(np.int64))
+        assert array_checksum(a) != array_checksum(a.reshape(2, 3))
+        b = a.copy()
+        b[3] += 1
+        assert array_checksum(a) != array_checksum(b)
+
+    def test_service_walks_back_past_corrupt_snapshots(self, tmp_path):
+        edges = er_edges()
+        ref = make_engine()
+        run_stream(ref, batches(edges, BS))
+
+        seed_eng = make_engine()
+        run_stream(seed_eng, batches(edges, BS), ckpt_dir=str(tmp_path),
+                   ckpt_every=2)
+        steps = sorted(tmp_path.glob("step_*"))
+        assert len(steps) >= 3
+        for d in steps[-2:]:  # corrupt the newest TWO snapshots
+            _corrupt_shard(d)
+
+        eng = make_engine()
+        rep = run_stream(eng, batches(edges, BS), ckpt_dir=str(tmp_path),
+                         ckpt_every=2)
+        assert eng.diag.ckpt_corrupt_skipped == 2
+        assert rep.resumed_from > 0
+        assert_bit_identical(eng, ref)
+
+    def test_service_falls_back_to_fresh_when_all_corrupt(self, tmp_path):
+        edges = er_edges()
+        ref = make_engine()
+        run_stream(ref, batches(edges, BS))
+
+        seed_eng = make_engine()
+        run_stream(seed_eng, batches(edges, BS), ckpt_dir=str(tmp_path),
+                   ckpt_every=2)
+        for d in tmp_path.glob("step_*"):
+            _corrupt_shard(d)
+
+        eng = make_engine()
+        rep = run_stream(eng, batches(edges, BS), ckpt_dir=str(tmp_path),
+                         ckpt_every=2)
+        assert rep.resumed_from == 0  # fresh start, not a crash
+        assert eng.diag.ckpt_corrupt_skipped >= 1
+        assert_bit_identical(eng, ref)
+
+
+# ----------------------------------------------------------- prefetch dedup
+
+
+class TestPrefetchResilience:
+    def test_duplicate_delivery_deduped(self):
+        with fault_plan(parse_fault_plan("prefetch.get:dup@1x2")):
+            pf = PrefetchQueue(iter(range(6)), depth=8)
+            out = []
+            while True:
+                try:
+                    item, stale = pf.get()
+                except StopIteration:
+                    break
+                out.append(item)
+        assert out == list(range(6))
+        assert pf.duplicate_drops == 2 and pf.redelivered == 2
+
+    def test_producer_retries_transient_source_fault(self):
+        pol = RetryPolicy(max_retries=3, base_s=0.001)
+        with fault_plan(FaultPlan([FaultSpec("prefetch.get", "raise", at=1, times=2)])):
+            pf = PrefetchQueue(iter(range(5)), depth=4, retry=pol)
+            out = []
+            while True:
+                try:
+                    out.append(pf.get()[0])
+                except StopIteration:
+                    break
+        assert out == list(range(5))
+        assert pf.retries == 2
+
+    def test_producer_retry_exhaustion_reaches_consumer(self):
+        pol = RetryPolicy(max_retries=1, base_s=0.001)
+        with fault_plan(FaultPlan([FaultSpec("prefetch.get", "raise", at=1, times=99)])):
+            pf = PrefetchQueue(iter(range(5)), depth=4, retry=pol)
+            got = [pf.get()[0]]
+            with pytest.raises(FaultInjected):
+                while True:
+                    got.append(pf.get()[0])
+        assert got == [0]
+
+    def test_backlog_reports_queue_depth(self):
+        pf = PrefetchQueue(iter(range(4)), depth=8)
+        deadline = time.time() + 5
+        # 4 items + the end-of-stream sentinel
+        while pf.backlog() < 5 and time.time() < deadline:
+            time.sleep(0.01)
+        assert pf.backlog() == 5
+        pf.get()
+        assert pf.backlog() == 4
+
+
+# ------------------------------------------------------- degraded-mode queries
+
+
+class _FakePF:
+    def __init__(self, depth):
+        self.depth = depth
+
+    def backlog(self):
+        return self.depth
+
+
+class TestDegradedQueries:
+    def test_backpressure_serves_stale_cache_with_age(self):
+        edges = er_edges(m=96)
+        its = list(batches(edges, BS))
+        eng = make_engine()
+        eng.ingest(*its[0])
+        first = eng.estimate()  # populates the step-1 cache
+        eng.ingest(*its[1])  # cache now stale (age 1)
+
+        rep = StreamReport()
+        res = ResilienceConfig(backpressure_depth=2)
+        astep, ests, age = _answer_query(eng, _FakePF(2), res, rep, eng.step)
+        assert age == 1 and astep == eng.step - 1 and ests is first
+        assert rep.degraded_queries == 1 and rep.max_staleness == 1
+
+        # below the threshold: fresh answer, no degradation
+        astep, ests, age = _answer_query(eng, _FakePF(1), res, rep, eng.step)
+        assert age == 0 and astep == eng.step
+        np.testing.assert_array_equal(ests, eng.estimate(gather=True))
+        assert rep.degraded_queries == 1
+
+        # at threshold but the cache is already current: a normal hit
+        astep, ests, age = _answer_query(eng, _FakePF(2), res, rep, eng.step)
+        assert age == 0 and rep.degraded_queries == 1
+
+    def test_backpressure_disabled_by_default(self):
+        eng = make_engine()
+        W, nv = next(iter(batches(er_edges(m=64), BS)))
+        eng.ingest(W, nv)
+        rep = StreamReport()
+        astep, ests, age = _answer_query(
+            eng, _FakePF(99), ResilienceConfig(), rep, eng.step
+        )
+        assert age == 0 and rep.degraded_queries == 0
+
+    def test_run_stream_backpressure_state_unaffected(self):
+        """Degraded answers never touch estimator state: the final bank is
+        bit-identical to an unthrottled run, and stale answers (if any) are
+        surfaced through the stale_age callback keyword."""
+        edges = er_edges()
+        ref = make_engine()
+        run_stream(ref, batches(edges, BS))
+
+        seen_ages = []
+
+        def on_report(step, ests, seen, stale_age=0):
+            seen_ages.append((step, stale_age))
+
+        eng = make_engine()
+        res = ResilienceConfig(backpressure_depth=1)
+        rep = run_stream(eng, batches(edges, BS), report_every=1,
+                         on_report=on_report, resilience=res)
+        assert rep.queries == len(seen_ages)
+        assert rep.degraded_queries == sum(1 for _, a in seen_ages if a > 0)
+        assert rep.max_staleness == max((a for _, a in seen_ages), default=0)
+        assert_bit_identical(eng, ref)
+
+    def test_three_arg_callbacks_still_work(self):
+        calls = []
+        eng = make_engine()
+        run_stream(eng, batches(er_edges(m=96), BS), report_every=1,
+                   on_report=lambda s, e, m: calls.append(s))
+        assert calls  # legacy (step, ests, seen) signature unchanged
+
+
+class TestDeviceQueryDegradation:
+    """The device-resident query path under faults/timeouts: the answer
+    must degrade to the (bit-identical) gather oracle, never kill serving.
+    Uses the pjit_coordinated plan on a 1-device mesh so build_estimate
+    exists without multi-device CI cost."""
+
+    def _device_engine(self):
+        import jax
+        from jax.sharding import Mesh
+
+        mesh = Mesh(np.array(jax.devices()[:1]), ("estimators",))
+        eng = TriangleCountEngine(
+            EngineConfig(r=R, batch_size=BS, n_tenants=1, seeds=(0,),
+                         backend="pjit_coordinated"),
+            mesh=mesh,
+        )
+        assert eng._estimate_device is not None
+        return eng
+
+    def test_faulted_device_query_falls_back_to_gather(self):
+        eng = self._device_engine()
+        W, nv = next(iter(batches(er_edges(), BS)))
+        eng.ingest(W, nv)
+        ref = eng.estimate(gather=True).copy()
+        with fault_plan(FaultPlan([FaultSpec("engine.estimate", "raise")])):
+            out = eng.estimate()
+        assert eng.diag.query_fallbacks == 1
+        assert eng.diag.query_timeouts == 0
+        np.testing.assert_array_equal(out, ref)
+        # the degraded answer is exact, so it is cached like any other
+        assert eng.estimate() is out
+
+    def test_timed_out_device_query_falls_back_to_gather(self):
+        eng = self._device_engine()
+        its = list(batches(er_edges(), BS))
+        eng.ingest(*its[0])
+        with fault_plan(FaultPlan(
+            [FaultSpec("engine.estimate", "delay", delay_s=0.6)]
+        )):
+            out = eng.estimate(timeout_s=0.05)
+        assert eng.diag.query_timeouts == 1
+        assert eng.diag.query_fallbacks == 1
+        np.testing.assert_array_equal(out, eng.estimate(gather=True))
+
+    def test_no_timeout_no_fault_uses_device_path(self):
+        eng = self._device_engine()
+        W, nv = next(iter(batches(er_edges(), BS)))
+        eng.ingest(W, nv)
+        out = eng.estimate(timeout_s=5.0)  # generous bound: no fallback
+        assert eng.diag.query_fallbacks == 0
+        np.testing.assert_array_equal(out, eng.estimate(gather=True))
+
+
+# -------------------------------------------------------------- stdin thread
+
+
+class TestStdinQueries:
+    def _collect(self, q):
+        out = []
+        while not q.empty():
+            out.append(q.get_nowait())
+        return out
+
+    def test_closed_stdin_posts_marker_not_quit(self, monkeypatch):
+        from repro.launch import stream_serve as ss
+
+        monkeypatch.setattr("sys.stdin", io.StringIO("1\nall\n"))
+        q = queue.Queue()
+        ss._stdin_queries(q)
+        assert self._collect(q) == ["1", "all", ss._STDIN_CLOSED]
+
+    def test_quit_still_quits_without_marker(self, monkeypatch):
+        from repro.launch import stream_serve as ss
+
+        monkeypatch.setattr("sys.stdin", io.StringIO("quit\nignored\n"))
+        q = queue.Queue()
+        ss._stdin_queries(q)
+        assert self._collect(q) == ["quit"]
+
+    def test_errored_stdin_posts_error_marker(self, monkeypatch):
+        from repro.launch import stream_serve as ss
+
+        class Boom:
+            def __iter__(self):
+                return self
+
+            def __next__(self):
+                raise OSError("fd torn down")
+
+        monkeypatch.setattr("sys.stdin", Boom())
+        q = queue.Queue()
+        ss._stdin_queries(q)
+        (kind, msg), = self._collect(q)
+        assert kind == ss._STDIN_ERROR and "fd torn down" in msg

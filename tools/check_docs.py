@@ -18,7 +18,12 @@ Checks:
      deletion stages (``delete_update``, ``expire``) and the ``--window``
      CLI surface, and docs/scaling.md must carry the per-plan
      ``build_delete`` column — the fully-dynamic path must not drift from
-     the handbook either.
+     the handbook either;
+  6. the resilience layer is documented: docs/robustness.md must name every
+     fault site in ``repro.engine.faults.SITES`` plus the harness/retry/
+     quarantine/checkpoint-integrity/degraded-query vocabulary, and
+     docs/engine.md must link to it — adding a fault site or resilience
+     knob is a documentation contract.
 
   PYTHONPATH=src python tools/check_docs.py
 """
@@ -126,6 +131,36 @@ def check_dynamic_coverage() -> list[str]:
     return errors
 
 
+def check_robustness_coverage() -> list[str]:
+    """docs/robustness.md must cover every fault site (the chaos harness is
+    only trustworthy if its seams are enumerable) and the resilience
+    vocabulary; docs/engine.md must point at it."""
+    sys.path.insert(0, str(ROOT / "src"))
+    from repro.engine.faults import SITES
+
+    errors = []
+    handbook = (ROOT / "docs" / "robustness.md").read_text()
+    errors += [
+        f"docs/robustness.md: fault site `{site}` is not documented"
+        for site in SITES
+        if f"`{site}`" not in handbook
+    ]
+    required = {
+        "robustness.md": ("`FaultPlan`", "`ResilienceConfig`", "backoff",
+                          "quarantine", "checksum", "`CheckpointCorrupt`",
+                          "`--fault-plan`", "`source_pos`", "`stale_age`"),
+        "engine.md": ("robustness.md", "`ResilienceConfig`", "`source_pos`"),
+    }
+    for doc, tokens in required.items():
+        text = (ROOT / "docs" / doc).read_text()
+        errors += [
+            f"docs/{doc}: resilience docs are missing {tok}"
+            for tok in tokens
+            if tok not in text
+        ]
+    return errors
+
+
 def main() -> int:
     errors = (
         check_links()
@@ -133,6 +168,7 @@ def main() -> int:
         + check_scheme_coverage()
         + check_query_path_coverage()
         + check_dynamic_coverage()
+        + check_robustness_coverage()
     )
     for e in errors:
         print(e, file=sys.stderr)
