@@ -35,12 +35,15 @@ def _row_key(row: dict) -> tuple:
     """Identity of a throughput-grid row: rows missing the scheme field (the
     pre-scheme-layer format) are ``global``. ``smoke`` participates so a CI
     smoke run never replaces committed full-scale rows that happen to share
-    a configuration."""
+    a configuration. ``pipeline`` distinguishes the chunk-ingest dispatch
+    ("scan" reference loop vs the PR 8 "fused" path, benchmarks/fused.py);
+    rows that predate the field are the scan pipeline."""
     return (
         row.get("scheme", "global"),
         row["r"],
         row["batch"],
         row["chunk"],
+        row.get("pipeline", "scan"),
         bool(row.get("smoke", False)),
     )
 

@@ -34,6 +34,7 @@ from repro.core import (
     resolve_scheme,
 )
 from repro.data.graph_stream import barabasi_albert_stream, batches
+from repro.primitives.ingest import ingest_backend
 
 
 def make_scheme(name: str, n_vertices: int):
@@ -119,6 +120,12 @@ def measure(
             "r": r,
             "batch": bs,
             "chunk": chunk,
+            # which chunk-ingest dispatch produced this row (PR 8): chunked
+            # rows follow repro.primitives.ingest.ingest_backend(); the
+            # per-batch loop (chunk=1) predates the fused path entirely
+            "pipeline": (
+                "fused" if chunk > 1 and ingest_backend() != "scan" else "scan"
+            ),
             "edges": m,
             "batches": len(its),
             "smoke": smoke,  # per-row: merged files mix runs

@@ -33,9 +33,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.rank import INF64, RankStructure, rank_all
+from repro.core.rank import INF64, RankStructure, rank_all, rank_all_chunk
 from repro.core.state import EstimatorState
-from repro.primitives.search import multisearch_bounds
+from repro.primitives.ingest import ingest_backend, randint_from_bits
+from repro.primitives.search import multisearch_bounds, multisearch_lt
 from repro.primitives.sort import pack2
 
 
@@ -205,30 +206,17 @@ def bulk_update_all(
 bulk_update_all_jit = jax.jit(bulk_update_all, donate_argnums=(0,))
 
 
-def bulk_update_chunk(
+def _bulk_update_chunk_scan(
     state: EstimatorState,
     Ws: jax.Array,
     n_valids: jax.Array,
     key: jax.Array,
     step0=0,
 ) -> EstimatorState:
-    """Fold a stack of K batches into the state under ONE dispatch.
+    """The reference chunk pipeline: ``lax.scan`` of ``bulk_update_all``.
 
-    Ws: (K, s, 2) int32 stacked batches; n_valids: (K,) their valid prefixes.
-    ``key`` is the *stream* key (not pre-folded); scan step i derives its batch
-    key as ``fold_in(key, step0 + i)`` — the identical counter-based stream the
-    per-batch path uses — so the result is bit-for-bit equal to
-
-        for i in range(K):
-            state = bulk_update_all(state, Ws[i], n_valids[i],
-                                    jax.random.fold_in(key, step0 + i))
-
-    (asserted exactly by tests/test_core.py::TestChunkedUpdate). One
-    ``lax.scan`` inside one jit with a donated carry amortizes Python and
-    dispatch overhead over K batches, so the per-batch cost approaches the
-    paper's sort/search bound instead of being dispatch-bound. ``step0`` is a
-    traced scalar: resuming a stream at any batch cursor reuses the compiled
-    program.
+    Every fused backend below is required to be bit-identical to this scan,
+    so it doubles as the oracle (``set_ingest_backend("scan")`` pins it).
     """
     steps = jnp.asarray(step0, jnp.int64) + jnp.arange(
         Ws.shape[0], dtype=jnp.int64
@@ -240,6 +228,213 @@ def bulk_update_chunk(
 
     state, _ = jax.lax.scan(step, state, (Ws, n_valids, steps))
     return state
+
+
+def _chunk_randomness(state: EstimatorState, n_valids, key, steps):
+    """Every random draw of a K-batch chunk, hoisted out of the scan.
+
+    The counter-based RNG makes each batch's draws a pure function of
+    (stream key, step index) and the step-1 spans a pure function of
+    (m_seen at entry, batch sizes) — so all of it vectorizes over K up
+    front (one threefry dispatch per role instead of K), bit-identical to
+    the in-scan draws by vmap semantics. The step-2 phi draw is the one
+    state-dependent draw (its span is chi+), so only its *raw bits* hoist;
+    the span arithmetic is replayed in-scan by ``randint_from_bits``.
+
+    Returns (m_before (K,), totals (K,), t (K,r), coin (K,r),
+    phi_hi (K,r), phi_lo (K,r)).
+    """
+    r = state.r
+    nv64 = n_valids.astype(jnp.int64)
+    m_before = state.m_seen + jnp.cumsum(nv64) - nv64
+    totals = m_before + nv64
+
+    bkeys = jax.vmap(lambda i: jax.random.fold_in(key, i))(steps)
+    k12 = jax.vmap(jax.random.split)(bkeys)  # bulk_update_all's (k1, k2)
+    kcp = jax.vmap(jax.random.split)(k12[:, 1])  # step2's (k_coin, k_phi)
+    kbits = jax.vmap(jax.random.split)(kcp[:, 1])  # randint's internal split
+
+    t = jax.vmap(
+        lambda k, total: jax.random.randint(
+            k, (r,), jnp.int64(0), jnp.maximum(total, 1), dtype=jnp.int64
+        )
+    )(k12[:, 0], totals)
+    coin = jax.vmap(
+        lambda k: jax.random.uniform(k, (r,), dtype=jnp.float32)
+    )(kcp[:, 0])
+    phi_hi = jax.vmap(lambda k: jax.random.bits(k, (r,), jnp.uint32))(
+        kbits[:, 0]
+    )
+    phi_lo = jax.vmap(lambda k: jax.random.bits(k, (r,), jnp.uint32))(
+        kbits[:, 1]
+    )
+    return m_before, totals, t, coin, phi_hi, phi_lo
+
+
+def _step2_fused(f1, chi_minus, f2, has_f3, f1_bpos, R: RankStructure,
+                 coin, phi_hi, phi_lo):
+    """``step2_level2`` with hoisted coin/phi randomness and lt-trimmed
+    searches — value-identical to the reference on every lane.
+
+    The dropped ``le`` bounds are provably redundant: a fresh f1's own arc
+    is always present in the structure (so the Q1 miss masks never fire),
+    and the Q2 exact-match test ``le > lt`` is equivalent to one key
+    comparison at the lt insertion point. That prices the Q1 roles at 4r
+    search sides (down from 8r) and Q2 at r (down from 2r).
+    """
+    u, v = f1[:, 0], f1[:, 1]
+    have_f1 = u >= 0
+    s = R.s
+    zero = jnp.zeros_like(f1_bpos)
+    q = jnp.concatenate(
+        [
+            pack2(u, (s - 1) - f1_bpos),
+            pack2(v, (s - 1) - f1_bpos),
+            pack2(u, zero),
+            pack2(v, zero),
+        ]
+    )
+    lt4 = multisearch_lt(R.key_desc, q)
+    r = u.shape[0]
+    ld = (lt4[:r] - lt4[2 * r : 3 * r]).astype(jnp.int32)
+    rd = (lt4[r : 2 * r] - lt4[3 * r :]).astype(jnp.int32)
+    ld = jnp.where(have_f1, ld, 0)
+    rd = jnp.where(have_f1, rd, 0)
+    chi_plus = ld + rd
+    chi_new = chi_minus + chi_plus
+
+    p_new = chi_plus.astype(jnp.float32) / jnp.maximum(
+        chi_new.astype(jnp.float32), 1.0
+    )
+    take_new = have_f1 & (chi_plus > 0) & (coin < p_new)
+
+    phi = randint_from_bits(phi_hi, phi_lo, jnp.maximum(chi_plus, 1))
+    t_src = jnp.where(phi < ld, u, v)
+    t_rank = jnp.where(phi < ld, phi, phi - ld)
+    qk = pack2(t_src, t_rank)
+    n2 = R.key_rank.shape[0]
+    lt = multisearch_lt(R.key_rank, qk)
+    j = jnp.minimum(lt, n2 - 1)
+    found = (lt < n2) & (R.key_rank[j] == qk)
+    cand_a, cand_b = R.src[j], R.dst[j]
+    cand = jnp.stack(
+        [jnp.minimum(cand_a, cand_b), jnp.maximum(cand_a, cand_b)], axis=-1
+    )
+    cand_pos = R.pos[j]
+    take_new = take_new & found
+
+    f2_new = jnp.where(take_new[:, None], cand, f2)
+    f2_bpos = jnp.where(take_new, cand_pos, -1)
+    has_f3 = has_f3 & ~take_new
+    return f2_new, chi_new, has_f3, f2_bpos
+
+
+def _bulk_update_chunk_fused(
+    state: EstimatorState, Ws, n_valids, key, step0, *, use_kernels: bool
+) -> EstimatorState:
+    """The fused K-batch pipeline (ROADMAP item 1; paper §5's one-pass
+    regime). Randomness, step-1 reservoir selects, and all K rank
+    structures are hoisted out of the per-batch loop; what remains per
+    batch is pure state math plus lt-trimmed multisearches.
+
+    ``use_kernels=False`` (the "xla" backend) runs that residue as a
+    ``lax.scan``; ``use_kernels=True`` (the "pallas" backend) hands the
+    entire loop to ``repro.kernels.fused_ingest`` — one resident kernel
+    whose grid walks reservoir tiles, so each tile of estimator state is
+    read and written once per *chunk* instead of once per pipeline stage
+    per batch.
+    """
+    K = Ws.shape[0]
+    n_valids = jnp.asarray(n_valids, dtype=jnp.int32)
+    steps = jnp.asarray(step0, jnp.int64) + jnp.arange(K, dtype=jnp.int64)
+
+    m_before, totals, t, coin, phi_hi, phi_lo = _chunk_randomness(
+        state, n_valids, key, steps
+    )
+
+    # hoisted step-1 selects: the reservoir decisions are deterministic in
+    # (t, m_seen trajectory), and m_seen's trajectory is just a cumsum
+    nv64 = n_valids.astype(jnp.int64)
+    replace = (t >= m_before[:, None]) & (totals[:, None] > 0)
+    idx = jnp.clip(
+        t - m_before[:, None], 0, jnp.maximum(nv64 - 1, 0)[:, None]
+    ).astype(jnp.int32)
+    w_sel = jax.vmap(lambda W, ix: W[ix])(Ws, idx)  # (K, r, 2)
+    f1_bpos = jnp.where(replace, idx, -1)
+
+    R = rank_all_chunk(Ws, n_valids, use_kernels=use_kernels)
+    m_out = state.m_seen + jnp.sum(nv64)
+
+    if use_kernels:
+        from repro.kernels.ops import fused_ingest_op
+
+        f1, chi, f2, has_f3 = fused_ingest_op(
+            state.f1, state.chi, state.f2, state.has_f3,
+            R.key_desc, R.key_rank, R.src, R.dst, R.pos, R.ekey, R.epos,
+            replace, w_sel, f1_bpos, coin, phi_hi, phi_lo,
+        )
+        return EstimatorState(
+            f1=f1, chi=chi, f2=f2, has_f3=has_f3, m_seen=m_out
+        )
+
+    def step(carry, xs):
+        f1, chi, f2, has_f3 = carry
+        rep, wsel, f1b, cn, hb, lb, Rk = xs
+        f1 = jnp.where(rep[:, None], wsel, f1)
+        chi_m = jnp.where(rep, 0, chi)
+        f2 = jnp.where(rep[:, None], jnp.int32(-1), f2)
+        has_f3 = has_f3 & ~rep
+        f2, chi, has_f3, f2_bpos = _step2_fused(
+            f1, chi_m, f2, has_f3, f1b, Rk, cn, hb, lb
+        )
+        has_f3 = step3_closing(f1, f2, has_f3, f2_bpos, Rk)
+        return (f1, chi, f2, has_f3), None
+
+    (f1, chi, f2, has_f3), _ = jax.lax.scan(
+        step,
+        (state.f1, state.chi, state.f2, state.has_f3),
+        (replace, w_sel, f1_bpos, coin, phi_hi, phi_lo, R),
+    )
+    return EstimatorState(f1=f1, chi=chi, f2=f2, has_f3=has_f3, m_seen=m_out)
+
+
+def bulk_update_chunk(
+    state: EstimatorState,
+    Ws: jax.Array,
+    n_valids: jax.Array,
+    key: jax.Array,
+    step0=0,
+) -> EstimatorState:
+    """Fold a stack of K batches into the state under ONE dispatch.
+
+    Ws: (K, s, 2) int32 stacked batches; n_valids: (K,) their valid prefixes.
+    ``key`` is the *stream* key (not pre-folded); batch i derives its key as
+    ``fold_in(key, step0 + i)`` — the identical counter-based stream the
+    per-batch path uses — so the result is bit-for-bit equal to
+
+        for i in range(K):
+            state = bulk_update_all(state, Ws[i], n_valids[i],
+                                    jax.random.fold_in(key, step0 + i))
+
+    (asserted exactly by tests/test_core.py::TestChunkedUpdate and across
+    backends by tests/test_fused_ingest.py). ``step0`` is a traced scalar:
+    resuming a stream at any batch cursor reuses the compiled program.
+
+    The implementation dispatches on ``repro.primitives.ingest`` at trace
+    time: "scan" runs the reference per-batch scan; "xla" (the off-TPU
+    default) runs the fused pipeline with hoisted randomness/structures and
+    lt-trimmed searches; "pallas" additionally hands the batch loop to the
+    resident fused-ingest kernel. All three are bit-identical — the backend
+    knob trades dispatch/memory traffic, never results. Every execution
+    plan that chunks (``single`` and the banked plans) inherits the fused
+    path through ``scheme.chunk_update`` with no signature change.
+    """
+    backend = ingest_backend()
+    if backend == "scan":
+        return _bulk_update_chunk_scan(state, Ws, n_valids, key, step0)
+    return _bulk_update_chunk_fused(
+        state, Ws, n_valids, key, step0, use_kernels=(backend == "pallas")
+    )
 
 
 bulk_update_chunk_jit = jax.jit(bulk_update_chunk, donate_argnums=(0,))
@@ -307,30 +502,38 @@ def bulk_delete_update(
     bit-identical to the insertion-only path.
     """
     dkey = delete_keys(D, n_valid)
+    lt, le = multisearch_bounds(dkey, _delete_queries(state))
+    return _apply_delete_hits(state, le > lt)
 
+
+def _delete_queries(state: EstimatorState) -> jax.Array:
+    """The (3r,) fused membership-query vector of a deletion batch: the f1
+    edge, the f2 edge, and the wedge's closing edge per estimator. Unset
+    slots (-1 endpoints) pack to negative keys that cannot match a real (or
+    sentinel) delete key, and are masked in ``_apply_delete_hits`` besides
+    (belt + braces)."""
     u, v = state.f1[:, 0], state.f1[:, 1]
-    have_f1 = u >= 0
     a, b = state.f2[:, 0], state.f2[:, 1]
-    have_f2 = have_f1 & (a >= 0)
     # the wedge's closing edge joins the two non-shared endpoints (step 3)
     u_shared = (u == a) | (u == b)
     o1 = jnp.where(u_shared, v, u)
     a_shared = (a == u) | (a == v)
     o2 = jnp.where(a_shared, b, a)
-
-    # one fused multisearch answers all three membership tests; unset slots
-    # (-1 endpoints) pack to negative keys that cannot match a real (or
-    # sentinel) delete key, and are masked besides (belt + braces)
-    q = jnp.concatenate(
+    return jnp.concatenate(
         [
             pack2(jnp.minimum(u, v), jnp.maximum(u, v)),
             pack2(jnp.minimum(a, b), jnp.maximum(a, b)),
             pack2(jnp.minimum(o1, o2), jnp.maximum(o1, o2)),
         ]
     )
-    lt, le = multisearch_bounds(dkey, q)
-    hit = le > lt
-    r = u.shape[0]
+
+
+def _apply_delete_hits(state: EstimatorState, hit: jax.Array) -> EstimatorState:
+    """Elementwise clears for one deletion batch, from the (3r,) hit mask of
+    ``_delete_queries``. See ``bulk_delete_update`` for the semantics."""
+    have_f1 = state.f1[:, 0] >= 0
+    have_f2 = have_f1 & (state.f2[:, 0] >= 0)
+    r = state.r
     hit_f1 = hit[:r] & have_f1
     hit_f2 = hit[r : 2 * r] & have_f2
     hit_f3 = hit[2 * r :] & have_f2
@@ -356,13 +559,35 @@ def bulk_delete_chunk(
     so this is trivially bit-identical to K sequential ``bulk_delete_update``
     calls — the scan exists purely to amortize dispatch overhead on
     high-churn streams (the deletion arm of the chunked ingest pipeline).
+
+    Like ``bulk_update_chunk`` this dispatches on the ingest backend: under
+    "xla"/"pallas" the K key sorts are hoisted out of the scan (one batched
+    sort dispatch) and the membership test is lt-trimmed to one gathered key
+    comparison per query — ``le > lt`` is an exact-match test, so both forms
+    are bit-identical. The deletion arm has no resident kernel of its own
+    (it is already one elementwise pass), so "pallas" shares the hoisted
+    XLA form.
     """
+    if ingest_backend() == "scan":
 
-    def step(st, xs):
-        D, nv = xs
-        return bulk_delete_update(st, D, nv), None
+        def step(st, xs):
+            D, nv = xs
+            return bulk_delete_update(st, D, nv), None
 
-    state, _ = jax.lax.scan(step, state, (Ds, n_valids))
+        state, _ = jax.lax.scan(step, state, (Ds, n_valids))
+        return state
+
+    dkeys = jax.vmap(delete_keys)(Ds, n_valids)  # (K, s) hoisted sorts
+    n = dkeys.shape[1]
+
+    def step(st, dk):
+        q = _delete_queries(st)
+        lt = multisearch_lt(dk, q)
+        j = jnp.minimum(lt, n - 1)
+        hit = (lt < n) & (dk[j] == q)
+        return _apply_delete_hits(st, hit), None
+
+    state, _ = jax.lax.scan(step, state, dkeys)
     return state
 
 

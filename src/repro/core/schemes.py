@@ -88,6 +88,7 @@ from repro.core.estimate import (
     partial_group_sums,
 )
 from repro.core.state import EstimatorState, init_state
+from repro.primitives.ingest import ingest_backend
 
 # ---------------------------------------------------------------------------
 # axis roles
@@ -327,10 +328,23 @@ class LocalScheme(EstimatorScheme):
             & (vertex_pool(tri, self.n_pools) == pool[None, :])
         )
         vert = jnp.where(take, tri, self.n_vertices)  # out of bounds -> drop
+        vals = jnp.where(take, x[None, :], 0.0)
+        if ingest_backend() == "pallas":
+            # kernel path: the scatter as a segment_sum (kernels/segment_sum
+            # one-hot MXU form). Bit-exact vs .at[].add: coarse estimates are
+            # integer-valued f64 (chi * m_seen), so every partial sum here is
+            # exact (< 2**53) and summation order cannot matter.
+            from repro.kernels.ops import segment_sum_op
+
+            return segment_sum_op(
+                vals.reshape(-1)[:, None],
+                vert.reshape(-1).astype(jnp.int32),
+                self.n_vertices,
+            )[:, 0]
         return (
             jnp.zeros((self.n_vertices,), jnp.float64)
             .at[vert]
-            .add(jnp.where(take, x[None, :], 0.0), mode="drop")
+            .add(vals, mode="drop")
         )
 
     def estimate(self, state, groups: int = 9) -> jax.Array:

@@ -28,6 +28,17 @@ makes the paths interchangeable mid-stream):
                            axes — SPMD collectives stay *inside* each tenant
                            group; the tenant axis itself is collective-free.
 
+Chunked ingest (``build_chunk``, on the single + banked plans) routes through
+``scheme.chunk_update`` -> ``repro.core.bulk.bulk_update_chunk``, which
+dispatches on ``repro.primitives.ingest.ingest_backend()``: "scan" replays
+the reference per-batch loop, "xla" runs the fused hoisted-RNG pipeline, and
+"pallas" additionally lands the whole chunk in the resident
+``kernels/fused_ingest.py`` kernel (each reservoir tile touched once per
+chunk). All three are bit-identical — the plans above need no awareness of
+which one is active, and the signed/turnstile delete path
+(``bulk_delete_chunk``) dispatches the same way. See docs/engine.md for the
+dispatch table.
+
 ``select_backend`` implements the "auto" policy: a multi-tenant bank on a mesh
 with a divisible tenants axis -> a banked plan (coordinated when an estimator
 axis exists and shapes divide it, else independent); a bank without such a

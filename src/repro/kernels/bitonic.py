@@ -58,6 +58,10 @@ def bitonic_sort_tiles(keys, values, *, tile: int = 1024, interpret: bool = True
     """
     assert tile & (tile - 1) == 0, "tile must be a power of two"
     n = keys.shape[0]
+    if n == 0:
+        # empty input: nothing to sort; a zero-size grid would be malformed
+        # (PR 8 oracle-harness finding)
+        return keys, values
     n_pad = pl.cdiv(n, tile) * tile
     maxval = jnp.array(jnp.iinfo(keys.dtype).max, keys.dtype)
     k = jnp.pad(keys, (0, n_pad - n), constant_values=maxval)

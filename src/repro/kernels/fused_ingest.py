@@ -1,0 +1,246 @@
+"""Pallas TPU kernel: the resident fused-ingest pipeline (ROADMAP item 1).
+
+One pallas_call ingests an entire K-batch chunk. The grid walks reservoir
+tiles of ``est_block`` estimators; for each tile the kernel loops over the K
+batches *in VMEM*, applying the full NBSI update (step 1 selects, Lemma 4.3
+rank queries, the Q2 decode, step 3 closing probes) before the tile is
+written back — so each tile of estimator state moves through HBM exactly
+once per chunk, instead of once per pipeline stage per batch. This is the
+TPU mapping of the paper's §5 cache-oblivious design: the reservoir plays
+the role of the in-cache base case, and the presorted per-batch structures
+(built by the bitonic/segscan kernel path in ``repro.core.rank``) stream
+past it.
+
+Everything data-dependent is expressed gather-free, per the multisearch
+kernel's counting decomposition: an insertion point is a dense
+compare-and-reduce over the (small, VMEM-resident) structure row, and the
+Q2/step-3 payload reads are one-hot selects at the computed index. The
+randomness is precomputed by the caller (counter-based RNG hoists out of
+the chunk; the one state-dependent draw — phi's span — is replayed from raw
+bits via ``repro.primitives.ingest.randint_from_bits``).
+
+Bit-identity contract: identical output state to the ``lax.scan`` of
+``bulk_update_all`` over the same chunk (asserted by
+tests/test_fused_ingest.py and tests/test_kernel_oracle.py). Off-TPU the
+kernel runs in interpret mode — slow, for parity testing only.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.primitives.ingest import randint_from_bits
+from repro.primitives.sort import pack2
+
+
+def _count_lt(keys, q):
+    """Left insertion points of queries ``q`` (B,) into ``keys`` (n,): a
+    dense compare-reduce (the multisearch kernel's counting form)."""
+    return jnp.sum(
+        (keys[None, :] < q[:, None]).astype(jnp.int32), axis=1, dtype=jnp.int32
+    )
+
+
+def _count_le(keys, q):
+    return jnp.sum(
+        (keys[None, :] <= q[:, None]).astype(jnp.int32), axis=1, dtype=jnp.int32
+    )
+
+
+def _select_at(values, j):
+    """values[j] per query, gather-free: one-hot select over the structure
+    row (j must be in range; exactly one lane matches)."""
+    n = values.shape[0]
+    b = j.shape[0]
+    onehot = jax.lax.broadcasted_iota(jnp.int32, (b, n), 1) == j[:, None]
+    return jnp.sum(
+        jnp.where(onehot, values[None, :], 0), axis=1, dtype=values.dtype
+    )
+
+
+def _fused_ingest_kernel(
+    kd_ref, kr_ref, src_ref, dst_ref, pos_ref, ek_ref, ep_ref,
+    rep_ref, wsel_ref, f1b_ref, coin_ref, phihi_ref, philo_ref,
+    f1_ref, chi_ref, f2_ref, hf3_ref,
+    f1o_ref, chio_ref, f2o_ref, hf3o_ref,
+    *, n_batches: int,
+):
+    s2 = kd_ref.shape[1]
+    s = ek_ref.shape[1]
+
+    def batch_step(k, carry):
+        f1, chi, f2, hf3 = carry
+
+        # --- step 1: reservoir selects (decisions precomputed) ---
+        rep = rep_ref[k] != 0
+        f1 = jnp.where(rep[:, None], wsel_ref[k], f1)
+        chi_m = jnp.where(rep, 0, chi)
+        f2 = jnp.where(rep[:, None], jnp.int32(-1), f2)
+        hf3 = hf3 & ~rep
+        f1b = f1b_ref[k]
+
+        u, v = f1[:, 0], f1[:, 1]
+        have_f1 = u >= 0
+
+        # --- step 2: Q1 rank/degree counts (lt-trimmed, as in the fused
+        # XLA path: the le bounds are provably redundant) ---
+        kd = kd_ref[k]
+        zero = jnp.zeros_like(f1b)
+        hi_u = _count_lt(kd, pack2(u, (s - 1) - f1b))
+        hi_v = _count_lt(kd, pack2(v, (s - 1) - f1b))
+        lo_u = _count_lt(kd, pack2(u, zero))
+        lo_v = _count_lt(kd, pack2(v, zero))
+        ld = jnp.where(have_f1, hi_u - lo_u, 0)
+        rd = jnp.where(have_f1, hi_v - lo_v, 0)
+        chi_plus = ld + rd
+        chi_new = chi_m + chi_plus
+
+        p_new = chi_plus.astype(jnp.float32) / jnp.maximum(
+            chi_new.astype(jnp.float32), 1.0
+        )
+        take_new = have_f1 & (chi_plus > 0) & (coin_ref[k] < p_new)
+
+        # --- Q2 decode via the (src, rank) naming system ---
+        phi = randint_from_bits(
+            phihi_ref[k], philo_ref[k], jnp.maximum(chi_plus, 1)
+        )
+        t_src = jnp.where(phi < ld, u, v)
+        t_rank = jnp.where(phi < ld, phi, phi - ld)
+        qk = pack2(t_src, t_rank)
+        kr = kr_ref[k]
+        lt = _count_lt(kr, qk)
+        j = jnp.minimum(lt, s2 - 1)
+        found = (lt < s2) & (_select_at(kr, j) == qk)
+        cand_a = _select_at(src_ref[k], j)
+        cand_b = _select_at(dst_ref[k], j)
+        cand_pos = _select_at(pos_ref[k], j)
+        take_new = take_new & found
+
+        cand = jnp.stack(
+            [jnp.minimum(cand_a, cand_b), jnp.maximum(cand_a, cand_b)],
+            axis=-1,
+        )
+        f2 = jnp.where(take_new[:, None], cand, f2)
+        f2_bpos = jnp.where(take_new, cand_pos, -1)
+        hf3 = hf3 & ~take_new
+        chi = chi_new
+
+        # --- step 3: closing-edge probe ---
+        a, b = f2[:, 0], f2[:, 1]
+        have_wedge = (u >= 0) & (a >= 0)
+        u_shared = (u == a) | (u == b)
+        o1 = jnp.where(u_shared, v, u)
+        a_shared = (a == u) | (a == v)
+        o2 = jnp.where(a_shared, b, a)
+        qe = pack2(jnp.minimum(o1, o2), jnp.maximum(o1, o2))
+        ek = ek_ref[k]
+        lt3 = _count_lt(ek, qe)
+        le3 = _count_le(ek, qe)
+        found3 = le3 > lt3
+        p3 = _select_at(ep_ref[k], jnp.maximum(le3 - 1, 0))
+        hf3 = hf3 | (have_wedge & found3 & (p3 > f2_bpos))
+
+        return (f1, chi, f2, hf3)
+
+    init = (f1_ref[...], chi_ref[...], f2_ref[...], hf3_ref[...] != 0)
+    f1, chi, f2, hf3 = jax.lax.fori_loop(0, n_batches, batch_step, init)
+    f1o_ref[...] = f1
+    chio_ref[...] = chi
+    f2o_ref[...] = f2
+    hf3o_ref[...] = hf3.astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("est_block", "interpret")
+)
+def fused_ingest(
+    f1, chi, f2, has_f3,
+    key_desc, key_rank, src, dst, pos, ekey, epos,
+    replace, w_sel, f1_bpos, coin, phi_hi, phi_lo,
+    *, est_block: int = 256, interpret: bool = True,
+):
+    """Apply a K-batch chunk to the estimator state in one resident kernel.
+
+    State: f1/f2 (r, 2) int32, chi (r,) int32, has_f3 (r,) bool. Structures
+    (from ``rank_all_chunk``): key_desc/key_rank/src/dst/pos (K, 2s),
+    ekey/epos (K, s). Precomputed per-(batch, estimator) randomness/selects:
+    replace (K, r) bool, w_sel (K, r, 2) int32, f1_bpos (K, r) int32,
+    coin (K, r) float32, phi_hi/phi_lo (K, r) uint32.
+
+    Returns the updated (f1, chi, f2, has_f3); the caller owns the (purely
+    deterministic) m_seen update. Estimator padding up to the tile size is
+    benign by construction: padded lanes carry empty slots (f1 = -1) and
+    replace = False, so no step ever activates on them.
+    """
+    k_batches, r = replace.shape
+    b = min(est_block, r)
+    r_pad = pl.cdiv(r, b) * b
+    extra = r_pad - r
+
+    def pad_r(x, value, axis):
+        if extra == 0:
+            return x
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, extra)
+        return jnp.pad(x, widths, constant_values=value)
+
+    f1_p = pad_r(f1, -1, 0)
+    chi_p = pad_r(chi, 0, 0)
+    f2_p = pad_r(f2, -1, 0)
+    hf3_p = pad_r(has_f3, False, 0).astype(jnp.int32)
+    rep_p = pad_r(replace, False, 1).astype(jnp.int32)
+    wsel_p = pad_r(w_sel, -1, 1)
+    f1b_p = pad_r(f1_bpos, -1, 1)
+    coin_p = pad_r(coin, 0.0, 1)
+    hi_p = pad_r(phi_hi, 0, 1)
+    lo_p = pad_r(phi_lo, 0, 1)
+
+    s2 = key_desc.shape[1]
+    s = ekey.shape[1]
+    grid = (r_pad // b,)
+    full = lambda i: (0, 0)  # noqa: E731 — whole-structure block per step
+
+    f1o, chio, f2o, hf3o = pl.pallas_call(
+        functools.partial(_fused_ingest_kernel, n_batches=k_batches),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k_batches, s2), full),  # key_desc
+            pl.BlockSpec((k_batches, s2), full),  # key_rank
+            pl.BlockSpec((k_batches, s2), full),  # src
+            pl.BlockSpec((k_batches, s2), full),  # dst
+            pl.BlockSpec((k_batches, s2), full),  # pos
+            pl.BlockSpec((k_batches, s), full),  # ekey
+            pl.BlockSpec((k_batches, s), full),  # epos
+            pl.BlockSpec((k_batches, b), lambda i: (0, i)),  # replace
+            pl.BlockSpec((k_batches, b, 2), lambda i: (0, i, 0)),  # w_sel
+            pl.BlockSpec((k_batches, b), lambda i: (0, i)),  # f1_bpos
+            pl.BlockSpec((k_batches, b), lambda i: (0, i)),  # coin
+            pl.BlockSpec((k_batches, b), lambda i: (0, i)),  # phi_hi
+            pl.BlockSpec((k_batches, b), lambda i: (0, i)),  # phi_lo
+            pl.BlockSpec((b, 2), lambda i: (i, 0)),  # f1
+            pl.BlockSpec((b,), lambda i: (i,)),  # chi
+            pl.BlockSpec((b, 2), lambda i: (i, 0)),  # f2
+            pl.BlockSpec((b,), lambda i: (i,)),  # has_f3
+        ],
+        out_specs=[
+            pl.BlockSpec((b, 2), lambda i: (i, 0)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((b, 2), lambda i: (i, 0)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r_pad, 2), jnp.int32),
+            jax.ShapeDtypeStruct((r_pad,), jnp.int32),
+            jax.ShapeDtypeStruct((r_pad, 2), jnp.int32),
+            jax.ShapeDtypeStruct((r_pad,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        key_desc, key_rank, src, dst, pos, ekey, epos,
+        rep_p, wsel_p, f1b_p, coin_p, hi_p, lo_p,
+        f1_p, chi_p, f2_p, hf3_p,
+    )
+    return f1o[:r], chio[:r], f2o[:r], hf3o[:r] != 0

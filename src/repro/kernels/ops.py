@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import jax
 
-from repro.kernels import bitonic, multisearch, segment_sum, segscan
+from repro.kernels import bitonic, fused_ingest, multisearch, segment_sum, segscan
 from repro.kernels import ref as _ref
 
 
@@ -51,8 +51,30 @@ def segment_sum_op(values, segment_ids, num_segments, **kw):
     )
 
 
+def fused_ingest_op(
+    f1, chi, f2, has_f3,
+    key_desc, key_rank, src, dst, pos, ekey, epos,
+    replace, w_sel, f1_bpos, coin, phi_hi, phi_lo,
+    *, est_block: int = 256,
+):
+    """Resident K-batch NBSI ingest (kernel-backed).
+
+    This is the "pallas" target of ``repro.core.bulk.bulk_update_chunk`` —
+    the whole per-chunk batch loop lands here when the ingest backend
+    resolves to "pallas", touching each reservoir tile once per chunk."""
+    return fused_ingest.fused_ingest(
+        f1, chi, f2, has_f3,
+        key_desc, key_rank, src, dst, pos, ekey, epos,
+        replace, w_sel, f1_bpos, coin, phi_hi, phi_lo,
+        est_block=est_block,
+        interpret=not _on_tpu(),
+    )
+
+
 # re-export oracles so callers can assert against the contract
 segscan_ref = _ref.segscan_ref
 multisearch_counts_ref = _ref.multisearch_counts_ref
 bitonic_sort_tiles_ref = _ref.bitonic_sort_tiles_ref
 segment_sum_ref = _ref.segment_sum_ref
+fused_ingest_ref = _ref.fused_ingest_ref
+delete_hits_ref = _ref.delete_hits_ref

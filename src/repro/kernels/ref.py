@@ -30,7 +30,24 @@ def multisearch_counts_ref(sorted_keys, queries):
 
 
 def bitonic_sort_tiles_ref(keys, values, tile):
-    """Sort each consecutive tile of (keys, values) independently by key."""
+    """Sort each consecutive tile of (keys, values) independently by key.
+
+    Contract note (found by the PR 8 differential harness): this oracle's
+    argsort is *stable*, the kernel's bitonic network is not. The kernel's
+    contract is therefore keys-bit-equal plus (key, value) *multiset*
+    equality per tile; element-for-element value equality additionally holds
+    wherever keys are unique. tests/test_kernel_oracle.py asserts exactly
+    that split contract, and every hot-path consumer
+    (``repro.core.rank.rank_all_chunk``) is written to be insensitive to
+    tie order (self-loop arc ties carry identical payloads; closing-edge
+    ties are patched by a segmented cummax).
+
+    Second caveat (same harness): payloads at keys *equal to* the pad
+    sentinel (iinfo max) are unspecified — in a non-multiple-of-tile launch
+    the kernel's pad entries join the sentinel-key run and can displace real
+    payloads in the sliced output. Consumers must mask sentinel keys before
+    dereferencing payloads (rank_all_chunk does).
+    """
     n = keys.shape[0]
     n_pad = -(-n // tile) * tile
     maxval = jnp.array(jnp.iinfo(keys.dtype).max, keys.dtype)
@@ -47,6 +64,31 @@ def segment_sum_ref(values, segment_ids, num_segments):
     return jax.ops.segment_sum(
         values, segment_ids, num_segments, indices_are_sorted=False
     )
+
+
+def fused_ingest_ref(state, Ws, n_valids, key, step0=0):
+    """Chunk-ingest oracle: the sequential scan of ``bulk_update_all``.
+
+    The fused ingest kernel (and the fused XLA path) must be bit-identical
+    to this — the chunk pipeline's counter-based RNG (fold_in per batch
+    step) makes the scan and the fused forms the *same* random function,
+    so equality is exact, not statistical. Imported lazily to keep
+    kernels.ref dependency-free of core at module load.
+    """
+    from repro.core.bulk import _bulk_update_chunk_scan
+
+    return _bulk_update_chunk_scan(state, Ws, n_valids, key, step0)
+
+
+def delete_hits_ref(sorted_delete_keys, queries):
+    """Membership of canonical edge ``queries`` in a sorted deletion-key
+    batch — the contract of the turnstile delete probe (PR 6 path, which
+    this oracle file predated; pinned by tests/test_kernel_oracle.py).
+    INF64 sentinels in either array never match real keys by construction
+    (real keys pack non-negative vertex ids)."""
+    lt = jnp.searchsorted(sorted_delete_keys, queries, side="left")
+    le = jnp.searchsorted(sorted_delete_keys, queries, side="right")
+    return le > lt
 
 
 def moe_dispatch_ref(expert_idx, capacity, n_experts):

@@ -49,6 +49,12 @@ def segment_sum_kernel(
     interpret: bool = True,
 ):
     n, d = values.shape
+    if num_segments == 0:
+        return jnp.zeros((0, d), values.dtype)
+    if n == 0:
+        # no values: the sum over an empty set is zeros for every segment; a
+        # zero-size value grid would be malformed (PR 8 oracle-harness finding)
+        return jnp.zeros((num_segments, d), values.dtype)
     n_pad = pl.cdiv(n, v_block) * v_block
     m_pad = pl.cdiv(num_segments, out_block) * out_block
     v = jnp.pad(values, ((0, n_pad - n), (0, 0)))

@@ -61,6 +61,10 @@ def segscan(values, flags, *, block: int = 1024, interpret: bool = True):
     values: (n,) int32/float32; flags: (n,) bool/int32. n padded to block.
     """
     n = values.shape[0]
+    if n == 0:
+        # zero-size grid would slice a (block,) block from a (0,) operand;
+        # short-circuit like multisearch does (PR 8 oracle-harness finding)
+        return values
     n_pad = pl.cdiv(n, block) * block
     v = jnp.pad(values, (0, n_pad - n))
     f = jnp.pad(flags.astype(jnp.int32), (0, n_pad - n), constant_values=1)

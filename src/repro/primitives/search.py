@@ -55,6 +55,17 @@ def multisearch_backend() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "xla"
 
 
+# XLA binary-search flavor. Every method computes identical insertion
+# points, so this is purely a performance knob. "scan" (the jnp default) is
+# deliberately pinned: "scan_unrolled" looks ~1.6x faster in a standalone
+# searchsorted microbenchmark on CPU, but embedded in the full chunk-ingest
+# program it is ~3.7x SLOWER end-to-end (measured on the r=65536, s=4096,
+# K=8 cell: 225ms -> 742ms per chunk) — the unrolled bisection bloats the
+# program and defeats fusion around it. Benchmark any change to this knob
+# with benchmarks/fused.py, not with an isolated searchsorted loop.
+_XLA_SEARCH_METHOD = "scan"
+
+
 def multisearch_bounds(sorted_keys, queries):
     """(count_lt, count_le) per query: the searchsorted left/right insertion
     points into ``sorted_keys``, int32, answered in one fused multisearch.
@@ -69,9 +80,32 @@ def multisearch_bounds(sorted_keys, queries):
         from repro.kernels.ops import multisearch_counts_op
 
         return multisearch_counts_op(sorted_keys, queries)
-    lt = jnp.searchsorted(sorted_keys, queries, side="left").astype(jnp.int32)
-    le = jnp.searchsorted(sorted_keys, queries, side="right").astype(jnp.int32)
+    lt = jnp.searchsorted(
+        sorted_keys, queries, side="left", method=_XLA_SEARCH_METHOD
+    ).astype(jnp.int32)
+    le = jnp.searchsorted(
+        sorted_keys, queries, side="right", method=_XLA_SEARCH_METHOD
+    ).astype(jnp.int32)
     return lt, le
+
+
+def multisearch_lt(sorted_keys, queries):
+    """count_lt only — the left insertion point, int32.
+
+    The fused ingest pipeline (repro.core.bulk) proves several of its ``le``
+    bounds redundant (a fresh f1's own arc is always present; exact-match
+    hits reduce to one gather at the ``lt`` point), so its query roles pay
+    for one side instead of two. Backend-dispatched like
+    ``multisearch_bounds``; on "pallas" the counting kernel computes both
+    bounds in its single streaming pass anyway, so this simply drops ``le``.
+    """
+    if multisearch_backend() == "pallas":
+        from repro.kernels.ops import multisearch_counts_op
+
+        return multisearch_counts_op(sorted_keys, queries)[0]
+    return jnp.searchsorted(
+        sorted_keys, queries, side="left", method=_XLA_SEARCH_METHOD
+    ).astype(jnp.int32)
 
 
 def exact_multisearch(sorted_keys, queries, valid_n=None):

@@ -37,6 +37,26 @@ def segmented_iota(starts):
     return (idx - seg_start).astype(jnp.int32)
 
 
+def segmented_cummax(values, starts):
+    """Inclusive segmented running maximum (reset at each start flag).
+
+    Used by the kernel-backed closing-edge index build: a bitonic tile sort
+    is not stable, so the "last copy of a duplicate edge" position that
+    step 3's arrival rule reads at the right insertion point is restored by
+    a max scan over each equal-key run (the run's last slot then holds the
+    run's max pos, exactly what the stable sort guaranteed).
+    """
+    flags = starts.astype(jnp.int32)
+
+    def combine(a, b):
+        va, fa = a
+        vb, fb = b
+        return jnp.where(fb != 0, vb, jnp.maximum(va, vb)), fa | fb
+
+    out, _ = jax.lax.associative_scan(combine, (values, flags))
+    return out
+
+
 def segmented_sum_scan(values, starts):
     """Inclusive segmented sum scan via associative_scan (paper Appendix B).
 

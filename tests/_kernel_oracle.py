@@ -1,0 +1,247 @@
+"""Differential kernel-vs-oracle harness (PR 8).
+
+Every Pallas kernel family is checked bit-for-bit against its pure-jnp
+oracle in ``repro/kernels/ref.py`` on *adversarial* inputs: duplicate-heavy
+keys, all-equal keys, INF64 sentinel values, non-power-of-two tails, empty
+inputs (n == 0 / q == 0), and sizes straddling every tile dimension (exact
+multiple and +-1). The checks are plain functions (no pytest dependency) so
+they are callable both from tests/test_kernel_oracle.py and from the CI
+interpret-mode smoke step (`python -m tests._kernel_oracle`).
+
+Findings this harness pinned (regression-tested in test_kernel_oracle.py):
+
+  * segscan/bitonic/segment_sum crashed on empty inputs — a zero-size grid
+    slices a full block from a (0,) operand. multisearch gained its n == 0
+    short-circuit in an earlier PR; the other kernels never did. Fixed with
+    matching short-circuits.
+  * the bitonic network is NOT stable while ``bitonic_sort_tiles_ref``'s
+    argsort is — on duplicate keys the *values* may come back permuted
+    within equal-key runs. The contract is therefore split: keys bit-equal,
+    (key, value) pairs multiset-equal per tile, element-for-element value
+    equality only where keys are unique. Hot-path consumers
+    (``repro.core.rank.rank_all_chunk``) are written to be insensitive to
+    tie order.
+  * ``kernels/ref.py`` predated the PR 6 turnstile delete path entirely —
+    ``delete_hits_ref`` / ``fused_ingest_ref`` now pin those contracts.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+import repro  # noqa: F401  -- enables x64 on import
+from repro.kernels import ops
+from repro.kernels import ref as kref
+
+INF64 = np.iinfo(np.int64).max
+
+
+# ---------------------------------------------------------------------------
+# adversarial input families
+# ---------------------------------------------------------------------------
+def key_families(n: int, seed: int):
+    """Named (n,) int64 key arrays covering the adversarial families. Sorted
+    variants are produced by the callers that need sortedness."""
+    rng = np.random.default_rng(seed)
+    fams = {
+        "random": rng.integers(0, max(4 * n, 4), n),
+        "duplicate_heavy": rng.integers(0, max(n // 8, 2), n),
+        "all_equal": np.full(n, 7),
+        "inf_sentinels": np.where(
+            rng.random(n) < 0.25, INF64, rng.integers(0, max(n, 2), n)
+        ),
+    }
+    return {k: v.astype(np.int64) for k, v in fams.items()}
+
+
+def _eq(got, exp, msg):
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(exp), err_msg=msg)
+
+
+# ---------------------------------------------------------------------------
+# per-kernel checks
+# ---------------------------------------------------------------------------
+def check_segscan(n: int, block: int, seed: int) -> None:
+    rng = np.random.default_rng(seed)
+    v = jnp.asarray(rng.integers(-5, 7, n).astype(np.int32))
+    for name, f in {
+        "random": rng.random(n) < 0.2,
+        "no_flags": np.zeros(n, bool),
+        "all_flags": np.ones(n, bool),
+    }.items():
+        f = jnp.asarray(f)
+        got = ops.segscan_op(v, f, block=block)
+        exp = kref.segscan_ref(v, f) if n else v
+        _eq(got, exp, f"segscan n={n} block={block} flags={name}")
+
+
+def check_multisearch(n: int, q: int, seed: int, *, q_block=32, k_block=64) -> None:
+    for name, keys in key_families(n, seed).items():
+        keys = jnp.asarray(np.sort(keys))
+        rng = np.random.default_rng(seed + 1)
+        qs_np = np.concatenate(
+            [
+                rng.integers(-5, max(4 * n, 8), max(q - 2, 0)),
+                np.array([INF64] * min(q, 1) + [0] * min(max(q - 1, 0), 1)),
+            ]
+        )[:q].astype(np.int64)
+        qs = jnp.asarray(qs_np)
+        lt, le = ops.multisearch_counts_op(keys, qs, q_block=q_block, k_block=k_block)
+        elt, ele = kref.multisearch_counts_ref(keys, qs)
+        _eq(lt, elt, f"multisearch lt n={n} q={q} keys={name}")
+        _eq(le, ele, f"multisearch le n={n} q={q} keys={name}")
+
+
+def check_bitonic(n: int, tile: int, seed: int) -> None:
+    """The split contract (see module docstring): keys bit-equal, per-tile
+    (key, value) multiset equal over keys below the pad sentinel, values
+    elementwise-equal where such keys are unique within their tile.
+
+    Payloads at keys *equal to* INF64 (the kernel's own pad value) are
+    unspecified — second harness finding: when real keys collide with the
+    sentinel in a non-multiple-of-tile launch, pad entries (payload 0) join
+    the sentinel-key run and the unstable network can slice out a real
+    payload in favor of a pad one. Every hot-path consumer masks sentinel
+    keys before any payload dereference (repro.core.rank), so the contract
+    stops below the sentinel."""
+    for name, keys in key_families(n, seed).items():
+        vals = np.arange(n, dtype=np.int32)
+        ko, vo = ops.bitonic_sort_tiles_op(
+            jnp.asarray(keys), jnp.asarray(vals), tile=tile
+        )
+        ke, ve = kref.bitonic_sort_tiles_ref(
+            jnp.asarray(keys), jnp.asarray(vals), tile
+        )
+        _eq(ko, ke, f"bitonic keys n={n} tile={tile} keys={name}")
+        ko_np, vo_np = np.asarray(ko), np.asarray(vo)
+        ke_np, ve_np = np.asarray(ke), np.asarray(ve)
+        for t0 in range(0, n, tile):
+            sl = slice(t0, min(t0 + tile, n))
+            kt, vt = ko_np[sl], vo_np[sl]
+            ket, vet = ke_np[sl], ve_np[sl]
+            real = kt != INF64  # == ket != INF64 (keys already bit-equal)
+            got_pairs = sorted(zip(kt[real].tolist(), vt[real].tolist()))
+            exp_pairs = sorted(zip(ket[real].tolist(), vet[real].tolist()))
+            assert got_pairs == exp_pairs, (
+                f"bitonic pair multiset n={n} tile={tile} keys={name} tile@{t0}"
+            )
+            unique = np.ones(kt.shape[0], bool)
+            unique[1:] &= kt[1:] != kt[:-1]
+            unique[:-1] &= kt[:-1] != kt[1:]
+            unique &= real
+            _eq(
+                vt[unique],
+                vet[unique],
+                f"bitonic unique-key values n={n} tile={tile} keys={name}",
+            )
+
+
+def check_segment_sum(n: int, m: int, seed: int, *, v_block=64, out_block=32) -> None:
+    rng = np.random.default_rng(seed)
+    vals = jnp.asarray(rng.integers(-3, 9, (n, 2)).astype(np.float64))
+    for name, ids in {
+        "random": rng.integers(0, max(m, 1), n),
+        "with_dropped": rng.integers(-2, max(m, 1) + 3, n),  # out-of-range drop
+        "all_one_segment": np.zeros(n, np.int64),
+    }.items():
+        ids = jnp.asarray(ids.astype(np.int32))
+        got = ops.segment_sum_op(vals, ids, m, v_block=v_block, out_block=out_block)
+        exp = kref.segment_sum_ref(vals, ids, m)
+        _eq(got, exp, f"segment_sum n={n} m={m} ids={name}")
+
+
+def _adversarial_stream(r: int, s: int, K: int, seed: int):
+    """(Ws, n_valids) with self-loops, duplicate edges, and ragged batches."""
+    rng = np.random.default_rng(seed)
+    n_vert = max(3 * s // 2, 4)  # small vertex set -> heavy duplicates
+    Ws = rng.integers(0, n_vert, size=(K, s, 2)).astype(np.int32)
+    if s >= 2 and K >= 2:
+        Ws[0, 0] = [1, 1]  # self-loop
+        Ws[1, 1] = Ws[1, 0]  # duplicate edge inside one batch
+    nv = rng.integers(1, s + 1, size=K).astype(np.int32)
+    nv[0] = s  # at least one full batch
+    return Ws, nv
+
+
+def check_fused_ingest(r: int, s: int, K: int, seed: int, *, est_block=32) -> None:
+    """End-to-end: the pallas chunk path (bitonic/segscan structure build +
+    resident fused-ingest kernel) vs ``fused_ingest_ref`` (the scan of
+    ``bulk_update_all``)."""
+    from repro.core import bulk
+    from repro.core.state import init_state
+    from repro.primitives.ingest import set_ingest_backend
+
+    Ws, nv = _adversarial_stream(r, s, K, seed)
+    key = jax.random.PRNGKey(seed)
+    exp = kref.fused_ingest_ref(
+        init_state(r), jnp.asarray(Ws), jnp.asarray(nv), key, 0
+    )
+    try:
+        set_ingest_backend("pallas")
+        got = bulk.bulk_update_chunk(
+            init_state(r), jnp.asarray(Ws), jnp.asarray(nv), key, 0
+        )
+    finally:
+        set_ingest_backend("auto")
+    for name in exp._fields:
+        _eq(
+            getattr(got, name),
+            getattr(exp, name),
+            f"fused_ingest field={name} r={r} s={s} K={K}",
+        )
+
+
+def check_delete_hits(r: int, s: int, seed: int) -> None:
+    """The delete membership probe vs ``delete_hits_ref`` — both the fused
+    (multisearch_bounds) form and the lt-only trimmed form used by the
+    chunked delete path must agree with the oracle."""
+    from repro.core.bulk import delete_keys
+    from repro.primitives.search import multisearch_bounds
+
+    rng = np.random.default_rng(seed)
+    D = rng.integers(0, 20, size=(s, 2)).astype(np.int32)
+    n_valid = rng.integers(0, s + 1)
+    dkey = delete_keys(jnp.asarray(D), jnp.asarray(n_valid))
+    # queries: real canonical keys (some present), unset-slot negatives, INF64
+    from repro.primitives.sort import pack2
+
+    qs = jnp.concatenate(
+        [
+            pack2(
+                jnp.asarray(np.minimum(D[:, 0], D[:, 1])),
+                jnp.asarray(np.maximum(D[:, 0], D[:, 1])),
+            ),
+            pack2(jnp.asarray(np.array([-1, -1], np.int32)),
+                  jnp.asarray(np.array([-1, 5], np.int32))),
+            jnp.asarray(np.array([INF64, 0], np.int64)),
+        ]
+    )
+    exp = kref.delete_hits_ref(dkey, qs)
+    lt, le = multisearch_bounds(dkey, qs)
+    _eq(le > lt, exp, f"delete_hits fused-bounds s={s}")
+    n = dkey.shape[0]
+    j = jnp.minimum(lt, n - 1)
+    _eq((lt < n) & (dkey[j] == qs), exp, f"delete_hits lt-only s={s}")
+
+
+# ---------------------------------------------------------------------------
+# the CI smoke entry point: one representative cell per family
+# ---------------------------------------------------------------------------
+def run_smoke() -> None:
+    check_segscan(129, 128, seed=0)
+    check_segscan(0, 128, seed=0)
+    check_multisearch(65, 33, seed=1)
+    check_multisearch(0, 4, seed=1)
+    check_bitonic(257, 256, seed=2)
+    check_bitonic(0, 256, seed=2)
+    check_segment_sum(65, 33, seed=3)
+    check_segment_sum(0, 8, seed=3)
+    check_fused_ingest(33, 6, 3, seed=4)
+    check_delete_hits(16, 6, seed=5)
+    print("kernel-oracle smoke: all families OK")
+
+
+if __name__ == "__main__":
+    run_smoke()

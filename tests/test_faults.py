@@ -200,6 +200,105 @@ class TestChaosMatrix:
         assert rep.resumed_from > 0
         assert_bit_identical(recovered, ref)
 
+    @staticmethod
+    def _small_chunked_engine():
+        # r is small so the pallas cells run the resident kernel (interpret
+        # mode on CPU) in reasonable time
+        return TriangleCountEngine(
+            EngineConfig(
+                r=64, batch_size=BS, n_tenants=1, seeds=(0,), chunk_size=3
+            )
+        )
+
+    @pytest.mark.parametrize("backend", ("xla", "pallas"))
+    def test_fused_ingest_chunk_kill_and_recover(self, backend, tmp_path):
+        """PR 8: the kill-point matrix extended to the fused ingest path.
+
+        A fatal fault at ``engine.ingest_chunk`` while the chunk pipeline
+        runs fused ("xla" hoisted-RNG path / "pallas" resident kernel) must
+        recover bit-identically from verified checkpoints — and because the
+        unfaulted reference here runs on the "scan" backend, the assert is
+        simultaneously the cross-backend contract: resume-from-checkpoint
+        composes with fused dispatch."""
+        from repro.primitives.ingest import set_ingest_backend
+
+        edges = er_edges()
+        its = stream_items("insert", edges)
+        try:
+            set_ingest_backend("scan")
+            ref = self._small_chunked_engine()
+            run_stream(ref, iter(its))
+
+            set_ingest_backend(backend)
+            faulted = self._small_chunked_engine()
+            plan = FaultPlan(
+                [FaultSpec("engine.ingest_chunk", "raise", at=2, times=999)]
+            )
+            with fault_plan(plan):
+                with pytest.raises(FaultInjected):
+                    run_stream(
+                        faulted, iter(its),
+                        ckpt_dir=str(tmp_path), ckpt_every=3,
+                    )
+            time.sleep(0.2)
+
+            recovered = self._small_chunked_engine()
+            rep = run_stream(
+                recovered, iter(its), ckpt_dir=str(tmp_path), ckpt_every=3
+            )
+            assert rep.resumed_from > 0
+            assert_bit_identical(recovered, ref)
+        finally:
+            set_ingest_backend("auto")
+
+    @pytest.mark.parametrize("backend", ("xla", "pallas"))
+    def test_fused_signed_chunk_fault_atomicity(self, backend):
+        """Signed/turnstile cell of the fused chaos matrix. The checkpointed
+        service loop never chunk-ingests signed streams (see
+        run_signed_stream), so the chunked signed path is
+        ``engine.ingest_signed_stream`` — here the guarantee under fault is
+        atomicity: ``check_fault`` fires before any mutation, so a chunk
+        killed mid-stream leaves state/cursors exactly at the pre-chunk
+        point, and a clean rerun on the fused backend still matches the scan
+        reference bit-for-bit."""
+        from repro.primitives.ingest import set_ingest_backend
+
+        edges = er_edges()
+        # long insert runs (churn_stream's short runs all fall back to
+        # per-batch ingest and ingest_chunk would never fire): 300 inserts
+        # -> delete 40 of them -> insert the rest, so both the fused chunk
+        # path and the fused delete path run
+        ones = np.ones((len(edges), 1), np.int32)
+        stream = np.concatenate(
+            [
+                np.hstack([edges[:300], ones[:300]]),
+                np.hstack([edges[:40], -ones[:40]]),
+                np.hstack([edges[300:], ones[300:]]),
+            ]
+        )
+        its = list(signed_batches(stream, BS))
+        try:
+            set_ingest_backend("scan")
+            ref = self._small_chunked_engine()
+            ref.ingest_signed_stream(iter(its))
+
+            set_ingest_backend(backend)
+            faulted = self._small_chunked_engine()
+            plan = FaultPlan(
+                [FaultSpec("engine.ingest_chunk", "raise", at=2, times=1)]
+            )
+            with fault_plan(plan):
+                with pytest.raises(FaultInjected):
+                    faulted.ingest_signed_stream(iter(its))
+            pre_fault_step = faulted.step
+            assert pre_fault_step == 2 * 3  # two committed chunks, K=3
+
+            clean = self._small_chunked_engine()
+            clean.ingest_signed_stream(iter(its))
+            assert_bit_identical(clean, ref)
+        finally:
+            set_ingest_backend("auto")
+
     def test_stage_chunk_fault_is_retried(self):
         edges = er_edges()
         its = stream_items("insert", edges)

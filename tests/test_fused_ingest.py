@@ -1,0 +1,246 @@
+"""Fused-ingest bit-identity property suite (PR 8 tentpole contract).
+
+The claim under test: for every registered scheme, every ingest backend
+("xla" fused pipeline, "pallas" resident kernel), signed/turnstile streams
+included, ragged final batches included, the chunked ingest state is
+bit-for-bit IDENTICAL to the reference per-batch scan path
+(``set_ingest_backend("scan")``). Counter-based RNG makes this exact
+equality, not a statistical property.
+
+Pattern per the repo convention: the manual parameter sweep always runs (no
+module-level hypothesis gate — a base install must not silently skip the
+fused-path contract); the randomized property test layers on top when the
+hypothesis dev dep is present (``pytest.importorskip`` inside the test).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bulk
+from repro.core.state import init_state
+from repro.data.graph_stream import churn_stream, erdos_renyi_stream, signed_batches
+from repro.engine import EngineConfig, TriangleCountEngine
+from repro.primitives.ingest import (
+    INGEST_BACKENDS,
+    randint_from_bits,
+    set_ingest_backend,
+    split_randint_key,
+)
+
+BS = 8
+R = 64
+SCHEME_PARAMS = {"local": (("n_pools", 4), ("n_vertices", 64))}
+
+
+@pytest.fixture(autouse=True)
+def _restore_backend():
+    yield
+    set_ingest_backend("auto")
+
+
+def make_cfg(scheme="global", **kw):
+    return EngineConfig(
+        r=R, batch_size=BS, scheme=scheme,
+        scheme_params=SCHEME_PARAMS.get(scheme), **kw
+    )
+
+
+def run_signed(backend, scheme, stream, chunk_size=3):
+    set_ingest_backend(backend)
+    eng = TriangleCountEngine(make_cfg(scheme, chunk_size=chunk_size))
+    eng.ingest_signed_stream(signed_batches(stream, BS))
+    return eng.snapshot()
+
+
+def assert_snapshots_equal(sa: dict, sb: dict, msg=""):
+    assert set(sa) == set(sb), msg
+    for k in sa:
+        np.testing.assert_array_equal(sa[k], sb[k], err_msg=f"{msg}:{k}")
+
+
+# 61 edges + churn deletions: not divisible by BS or chunk*BS, so the run
+# exercises ragged run tails AND the ragged-chunk per-batch fallback
+def turnstile_stream(seed=0):
+    edges = erdos_renyi_stream(24, 61, seed=seed)
+    return churn_stream(edges, delete_rate=0.3, seed=seed + 1)
+
+
+class TestEngineBitIdentity:
+    """Engine-level: every (scheme, backend) cell vs the scan reference, on a
+    signed/turnstile stream with ragged tails, through chunked ingest."""
+
+    @pytest.mark.parametrize("scheme", ["global", "naive", "local"])
+    @pytest.mark.parametrize("backend", ["xla", "pallas"])
+    def test_signed_chunked(self, scheme, backend):
+        stream = turnstile_stream()
+        ref = run_signed("scan", scheme, stream)
+        got = run_signed(backend, scheme, stream)
+        assert_snapshots_equal(ref, got, f"{scheme}/{backend}")
+
+    @pytest.mark.parametrize("backend", ["xla", "pallas"])
+    def test_chunked_equals_per_batch(self, backend):
+        """Transitivity check straight against chunk_size=1 (which never
+        enters the fused path at all)."""
+        stream = turnstile_stream(seed=3)
+        set_ingest_backend(backend)
+        a = TriangleCountEngine(make_cfg(chunk_size=3))
+        a.ingest_signed_stream(signed_batches(stream, BS))
+        b = TriangleCountEngine(make_cfg(chunk_size=1))
+        b.ingest_signed_stream(signed_batches(stream, BS))
+        assert_snapshots_equal(a.snapshot(), b.snapshot(), f"{backend} K=3 vs K=1")
+
+
+class TestBulkChunkBitIdentity:
+    """core-level: bulk_update_chunk / bulk_delete_chunk across backends on
+    adversarial chunks (self-loops, duplicate edges, ragged batches, empty
+    delete batches)."""
+
+    def _chunk(self, seed, K=4, s=BS):
+        rng = np.random.default_rng(seed)
+        Ws = rng.integers(0, 16, size=(K, s, 2)).astype(np.int32)
+        Ws[0, 0] = [2, 2]  # self-loop
+        if K > 1:
+            Ws[1, 1] = Ws[1, 0]  # duplicate edge
+        nv = rng.integers(1, s + 1, size=K).astype(np.int32)
+        nv[-1] = rng.integers(1, s)  # ragged final batch, always
+        return jnp.asarray(Ws), jnp.asarray(nv)
+
+    @pytest.mark.parametrize("backend", ["xla", "pallas"])
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_update_chunk(self, backend, seed):
+        Ws, nv = self._chunk(seed)
+        key = jax.random.PRNGKey(seed)
+        set_ingest_backend("scan")
+        ref = bulk.bulk_update_chunk(init_state(R), Ws, nv, key, 0)
+        set_ingest_backend(backend)
+        got = bulk.bulk_update_chunk(init_state(R), Ws, nv, key, 0)
+        for f in ref._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(ref, f)), np.asarray(getattr(got, f)),
+                err_msg=f"{backend} seed={seed} field={f}",
+            )
+
+    @pytest.mark.parametrize("backend", ["xla", "pallas"])
+    def test_delete_chunk(self, backend):
+        Ws, nv = self._chunk(7)
+        key = jax.random.PRNGKey(7)
+        rng = np.random.default_rng(8)
+        Ds = jnp.asarray(rng.integers(0, 16, size=(3, BS, 2)).astype(np.int32))
+        dnv = jnp.asarray(np.array([BS, 2, 0], np.int32))  # incl. empty batch
+
+        def run(b):
+            set_ingest_backend(b)
+            st = bulk.bulk_update_chunk(init_state(R), Ws, nv, key, 0)
+            return bulk.bulk_delete_chunk(st, Ds, dnv)
+
+        ref, got = run("scan"), run(backend)
+        for f in ref._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(ref, f)), np.asarray(getattr(got, f)),
+                err_msg=f"delete {backend} field={f}",
+            )
+
+    def test_scan_backend_is_the_literal_scan(self):
+        """The oracle pin: backend "scan" dispatches to the reference
+        per-batch loop, not to a fused path that merely claims equality."""
+        Ws, nv = self._chunk(9)
+        key = jax.random.PRNGKey(9)
+        set_ingest_backend("scan")
+        got = bulk.bulk_update_chunk(init_state(R), Ws, nv, key, 0)
+        exp = bulk._bulk_update_chunk_scan(init_state(R), Ws, nv, key, 0)
+        for f in exp._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(exp, f)), np.asarray(getattr(got, f))
+            )
+
+
+class TestRandintFromBits:
+    """The one state-dependent draw the fused path replays from raw bits:
+    span arithmetic over two uint32 draws must reproduce
+    ``jax.random.randint`` exactly (this is jax's own int32 randint
+    decomposition; if an upstream jax bump ever changes it, this pin fails
+    before any statistics drift)."""
+
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3])
+    def test_matches_jax_randint(self, seed):
+        key = jax.random.PRNGKey(seed)
+        maxval = jnp.asarray(
+            np.random.default_rng(seed).integers(1, 1000, 256), jnp.int32
+        )
+        exp = jax.random.randint(key, (256,), 0, maxval, dtype=jnp.int32)
+        k1, k2 = split_randint_key(key)
+        hi = jax.random.bits(k1, (256,), jnp.uint32)
+        lo = jax.random.bits(k2, (256,), jnp.uint32)
+        got = randint_from_bits(hi, lo, maxval)
+        np.testing.assert_array_equal(np.asarray(exp), np.asarray(got))
+
+    def test_property(self):
+        pytest.importorskip(
+            "hypothesis", reason="dev dep; pip install -r requirements-dev.txt"
+        )
+        from hypothesis import given, settings, strategies as st
+
+        @settings(max_examples=25, deadline=None)
+        @given(st.integers(0, 2**31 - 1), st.integers(1, 2**31 - 1))
+        def prop(seed, mv):
+            key = jax.random.PRNGKey(seed)
+            maxval = jnp.full((8,), mv, jnp.int32)
+            exp = jax.random.randint(key, (8,), 0, maxval, dtype=jnp.int32)
+            k1, k2 = split_randint_key(key)
+            hi = jax.random.bits(k1, (8,), jnp.uint32)
+            lo = jax.random.bits(k2, (8,), jnp.uint32)
+            np.testing.assert_array_equal(
+                np.asarray(exp), np.asarray(randint_from_bits(hi, lo, maxval))
+            )
+
+        prop()
+
+
+class TestFusedChunkProperty:
+    """Randomized streams (hypothesis when present): scan vs fused-xla at the
+    bulk level — arbitrary vertex ids, arbitrary raggedness, self-loops and
+    duplicates allowed by construction."""
+
+    def test_property(self):
+        pytest.importorskip(
+            "hypothesis", reason="dev dep; pip install -r requirements-dev.txt"
+        )
+        from hypothesis import given, settings, strategies as st
+
+        @settings(max_examples=15, deadline=None)
+        @given(
+            st.lists(
+                st.tuples(st.integers(0, 12), st.integers(0, 12)),
+                min_size=1, max_size=40,
+            ),
+            st.integers(0, 2**31 - 1),
+        )
+        def prop(edge_list, seed):
+            rng = np.random.default_rng(seed)
+            s, K = 5, -(-len(edge_list) // 5)
+            W = np.zeros((K * s, 2), np.int32)
+            W[: len(edge_list)] = np.asarray(edge_list, np.int32)
+            Ws = jnp.asarray(W.reshape(K, s, 2))
+            nv = np.full(K, s, np.int32)
+            nv[-1] = len(edge_list) - (K - 1) * s
+            nv[: K - 1] = rng.integers(1, s + 1, size=K - 1)
+            nv = jnp.asarray(nv)
+            key = jax.random.PRNGKey(seed)
+            set_ingest_backend("scan")
+            ref = bulk.bulk_update_chunk(init_state(32), Ws, nv, key, 0)
+            set_ingest_backend("xla")
+            got = bulk.bulk_update_chunk(init_state(32), Ws, nv, key, 0)
+            for f in ref._fields:
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(ref, f)), np.asarray(getattr(got, f))
+                )
+
+        prop()
+
+
+def test_backend_registry_sanity():
+    assert set(INGEST_BACKENDS) == {"auto", "xla", "pallas", "scan"}
+    with pytest.raises(ValueError):
+        set_ingest_backend("nonsense")

@@ -1,0 +1,104 @@
+"""Differential kernel-vs-oracle sweep (PR 8) — drives tests/_kernel_oracle.py.
+
+Deliberately NOT gated on the hypothesis dev dep (the test_multisearch_edges
+pattern): this is the bit-for-bit contract for every Pallas kernel family and
+must run in base installs. Block sizes are shrunk (segscan block=128,
+multisearch 32/64, bitonic tile=256, segment_sum 64/32, fused est_block=32)
+so the +-1-of-every-tile-dim sweep is cheap in interpret mode.
+"""
+import pytest
+
+from tests import _kernel_oracle as H
+
+
+class TestSegscanOracle:
+    # block=128: empty, single, one block +-1, two blocks +-1
+    @pytest.mark.parametrize("n", [0, 1, 127, 128, 129, 255, 256, 257])
+    def test_boundary_sweep(self, n):
+        H.check_segscan(n, block=128, seed=11 + n)
+
+
+class TestMultisearchOracle:
+    # q_block=32 / k_block=64: both dims at multiples and +-1, plus empties;
+    # every case also sweeps the adversarial key families (duplicate-heavy,
+    # all-equal, INF64 sentinels)
+    @pytest.mark.parametrize(
+        "n,q",
+        [(0, 4), (4, 0), (0, 0), (63, 31), (64, 32), (65, 33), (129, 65)],
+    )
+    def test_boundary_sweep(self, n, q):
+        H.check_multisearch(n, q, seed=23 + n + q)
+
+
+class TestBitonicOracle:
+    # tile=256 (power of two required): empty, single, one tile +-1, two
+    # tiles +-1. Asserts the split contract — keys bit-equal, per-tile pair
+    # multisets equal, values elementwise-equal where keys are unique — which
+    # is the instability finding documented in kernels/ref.py.
+    @pytest.mark.parametrize("n", [0, 1, 255, 256, 257, 511, 512, 513])
+    def test_boundary_sweep(self, n):
+        H.check_bitonic(n, tile=256, seed=37 + n)
+
+    def test_instability_is_real(self):
+        """The reason the contract is split: on duplicate-heavy keys the
+        network really does permute equal-key runs (if this ever starts
+        passing elementwise, the contract can be tightened back)."""
+        import numpy as np
+        import jax.numpy as jnp
+
+        from repro.kernels import ops, ref
+
+        # duplicate-heavy, not all-equal: with all-equal keys no exchange
+        # ever fires and the network is accidentally order-preserving
+        keys = jnp.asarray(
+            np.random.default_rng(0).integers(0, 4, 256).astype(np.int64)
+        )
+        vals = jnp.asarray(np.arange(256, dtype=np.int32))
+        _, vo = ops.bitonic_sort_tiles_op(keys, vals, tile=256)
+        _, ve = ref.bitonic_sort_tiles_ref(keys, vals, 256)
+        assert not np.array_equal(np.asarray(vo), np.asarray(ve)), (
+            "bitonic network became stable? tighten the contract in "
+            "tests/_kernel_oracle.py"
+        )
+
+
+class TestSegmentSumOracle:
+    # v_block=64 / out_block=32: value dim and segment dim at multiples and
+    # +-1, empty values, zero segments, out-of-range ids dropped
+    @pytest.mark.parametrize(
+        "n,m",
+        [(0, 8), (8, 0), (63, 31), (64, 32), (65, 33), (129, 65)],
+    )
+    def test_boundary_sweep(self, n, m):
+        H.check_segment_sum(n, m, seed=41 + n + m)
+
+
+class TestFusedIngestOracle:
+    # est_block=32: reservoir dim at a multiple and +-1 of the tile, ragged
+    # batches, self-loops, duplicate edges (built by _adversarial_stream)
+    @pytest.mark.parametrize("r", [31, 32, 33, 64])
+    @pytest.mark.parametrize("s,K", [(6, 3), (8, 1)])
+    def test_boundary_sweep(self, r, s, K):
+        H.check_fused_ingest(r, s, K, seed=53 + r + s + K)
+
+
+class TestDeleteHitsOracle:
+    # the PR 6 path kernels/ref.py predated: fused bounds and lt-only forms
+    # vs delete_hits_ref, including empty delete batches (n_valid can be 0)
+    @pytest.mark.parametrize("s", [1, 4, 7])
+    def test_probe_forms(self, s):
+        H.check_delete_hits(16, s, seed=61 + s)
+
+
+class TestEmptyInputRegressions:
+    """Pin the n == 0 crash fixes (zero-size grids) found by this harness."""
+
+    def test_segscan_empty(self):
+        H.check_segscan(0, block=128, seed=0)
+
+    def test_bitonic_empty(self):
+        H.check_bitonic(0, tile=256, seed=0)
+
+    def test_segment_sum_empty_values_and_segments(self):
+        H.check_segment_sum(0, 8, seed=0)
+        H.check_segment_sum(8, 0, seed=0)

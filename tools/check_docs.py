@@ -23,7 +23,11 @@ Checks:
      fault site in ``repro.engine.faults.SITES`` plus the harness/retry/
      quarantine/checkpoint-integrity/degraded-query vocabulary, and
      docs/engine.md must link to it — adding a fault site or resilience
-     knob is a documentation contract.
+     knob is a documentation contract;
+  7. every kernel module in ``src/repro/kernels/`` is named in
+     docs/paper_map.md or docs/engine.md (as ``kernels/NAME.py`` or
+     ``repro.kernels.NAME``), and the ingest-backend dispatch vocabulary is
+     present — a new hot-path kernel must land with its paper-stage map.
 
   PYTHONPATH=src python tools/check_docs.py
 """
@@ -161,6 +165,37 @@ def check_robustness_coverage() -> list[str]:
     return errors
 
 
+def check_kernel_coverage() -> list[str]:
+    """Every kernel module must be named in the fused-pipeline docs (the
+    kernel -> paper-stage map in paper_map.md, or the dispatch table in
+    engine.md), and the ingest-backend dispatch surface must be described —
+    a hot-path kernel nobody can find from the docs is drift waiting to
+    happen."""
+    modules = sorted(
+        p.stem
+        for p in (ROOT / "src" / "repro" / "kernels").glob("*.py")
+        if p.stem != "__init__"
+    )
+    text = (ROOT / "docs" / "paper_map.md").read_text() + (
+        ROOT / "docs" / "engine.md"
+    ).read_text()
+    errors = [
+        f"docs: kernel module kernels/{name}.py is not named in "
+        "paper_map.md or engine.md"
+        for name in modules
+        if f"kernels/{name}.py" not in text
+        and f"repro.kernels.{name}" not in text
+    ]
+    engine = (ROOT / "docs" / "engine.md").read_text()
+    errors += [
+        f"docs/engine.md: ingest-dispatch docs are missing {tok}"
+        for tok in ("`ingest_backend()`", "set_ingest_backend",
+                    "REPRO_INGEST_BACKEND", "bit-identical")
+        if tok not in engine
+    ]
+    return errors
+
+
 def main() -> int:
     errors = (
         check_links()
@@ -169,6 +204,7 @@ def main() -> int:
         + check_query_path_coverage()
         + check_dynamic_coverage()
         + check_robustness_coverage()
+        + check_kernel_coverage()
     )
     for e in errors:
         print(e, file=sys.stderr)
