@@ -51,6 +51,27 @@ def merge_section(
     print(f"# merged {section} grid into {path}", file=sys.stderr)
 
 
+def latency_percentiles(samples_s: list) -> dict:
+    """p50/p95/p99 milliseconds from per-call wall-second samples.
+
+    One definition shared by every serving bench so the percentile
+    convention (nearest-rank on the sorted sample, reported in ms) cannot
+    drift between the query_serve and serve sections."""
+    if not samples_s:
+        return {"p50_ms": None, "p95_ms": None, "p99_ms": None}
+    xs = sorted(samples_s)
+    n = len(xs)
+
+    def rank(q: float) -> float:
+        return xs[min(n - 1, max(0, int(q * n + 0.5) - 1))] * 1e3
+
+    return {
+        "p50_ms": round(rank(0.50), 4),
+        "p95_ms": round(rank(0.95), 4),
+        "p99_ms": round(rank(0.99), 4),
+    }
+
+
 def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
     """Median wall seconds per call (block_until_ready)."""
     for _ in range(warmup):

@@ -70,27 +70,37 @@ def _run_serve(
     eng.estimate(gather=gather)
     eng.estimate()
     queries = 0
+    lat: list[float] = []  # per-query wall seconds -> p50/p95/p99
+
+    def timed(thunk):
+        q0 = time.perf_counter()
+        thunk()
+        lat.append(time.perf_counter() - q0)
+
     hits0 = eng.diag.query_cache_hits  # exclude warmup hits from the row
     t0 = time.perf_counter()
     for W, nv in it[1:]:
         eng.ingest(W, nv)
         if gather:
             # pre-query-path serving: every query re-gathers the bank
-            eng.estimate(gather=True)
+            timed(lambda: eng.estimate(gather=True))
             queries += 1
             for t in range(T):
-                eng.estimate(gather=True)
+                timed(lambda: eng.estimate(gather=True))
                 queries += 1
         else:
-            eng.estimate()  # one device-resident dispatch, cached per step
+            timed(eng.estimate)  # one device dispatch, cached per step
             queries += 1
             for t in range(T):
-                eng.estimate_tenant(t)  # served from the per-step cache
+                timed(lambda t=t: eng.estimate_tenant(t))  # per-step cache
                 queries += 1
     eng.sync()
     dt = time.perf_counter() - t0
     m = sum(nv for _, nv in it[1:])
+    from benchmarks.common import latency_percentiles
+
     return {
+        **latency_percentiles(lat),
         "scheme": scheme,
         "tenants": T,
         "backend": eng.plan.name,
@@ -107,6 +117,62 @@ def _run_serve(
     }
 
 
+def _breakdown_row(
+    T: int,
+    r: int,
+    edges,
+    bs: int,
+    backend: str,
+    mesh,
+    tenant_axis: str = "tenants",
+    scheme: str = "global",
+    scheme_params=None,
+):
+    """Split the device-resident query into its two costs: the per-shard
+    partial reductions vs the all_gather + fixed-order combine.
+
+    ROADMAP's open question is why the device path loses to the gather
+    oracle at small T — this row answers it by timing the same banked
+    estimate twice: once end-to-end (``plan.build_estimate``) and once
+    stopping at the partials (``make_banked_estimate(partials_only=True)``,
+    no collective). The difference is the per-query all_gather fixed cost,
+    which is independent of T and therefore dominates exactly when T is
+    small."""
+    from benchmarks.common import timeit
+    from repro.core.distributed import make_banked_estimate
+    from repro.engine.backends import config_scheme
+
+    eng = TriangleCountEngine(
+        EngineConfig(r=r, batch_size=bs, n_tenants=T,
+                     seeds=tuple(range(T)), backend=backend,
+                     tenant_axis=tenant_axis, scheme=scheme,
+                     scheme_params=scheme_params),
+        mesh=mesh,
+    )
+    if mesh is None or eng._estimate_device is None:
+        return None  # nothing to split: no device-resident query program
+    for W, nv in list(batches(edges, bs))[:4]:
+        eng.ingest(W, nv)  # non-trivial state for the timed queries
+    partials = make_banked_estimate(
+        mesh, r, tenant_axis=tenant_axis, scheme=config_scheme(eng.config),
+        groups=eng.config.groups, partials_only=True,
+    )
+    full_s = timeit(eng._estimate_device, eng._state, warmup=2, iters=9)
+    part_s = timeit(partials, eng._state, warmup=2, iters=9)
+    return {
+        "scheme": scheme,
+        "tenants": T,
+        "backend": eng.plan.name,
+        "path": "breakdown",
+        "r": r,
+        "batch": bs,
+        "mesh": dict(mesh.shape),
+        "full_ms": round(full_s * 1e3, 4),
+        "partial_ms": round(part_s * 1e3, 4),
+        "allgather_overhead_ms": round(max(full_s - part_s, 0.0) * 1e3, 4),
+    }
+
+
 def bench_grid(
     *,
     tenants=(2, 4),
@@ -118,6 +184,7 @@ def bench_grid(
     tenant_axis: str = "tenants",
     scheme: str = "global",
     smoke: bool = False,
+    breakdown: bool = False,
 ) -> list[dict]:
     """(tenants x backend x query-path) -> queries/s under concurrent ingest."""
     from benchmarks.multistream import _available_backends
@@ -145,9 +212,27 @@ def bench_grid(
                     f"# scheme={scheme} tenants={T} backend={row['backend']} "
                     f"path={path}: {row['queries_per_s']:.0f} queries/s over "
                     f"{row['edges_per_s']:.0f} edges/s ingest "
-                    f"({row['cache_hits']} cache hits)",
+                    f"({row['cache_hits']} cache hits, "
+                    f"p50={row['p50_ms']}ms p99={row['p99_ms']}ms)",
                     flush=True,
                 )
+            if breakdown:
+                row = _breakdown_row(
+                    T, r, edges, bs, backend, mesh,
+                    tenant_axis=tenant_axis, scheme=scheme,
+                    scheme_params=scheme_params,
+                )
+                if row is not None:
+                    row["smoke"] = smoke
+                    rows.append(row)
+                    print(
+                        f"# scheme={scheme} tenants={T} "
+                        f"backend={row['backend']} path=breakdown: "
+                        f"full={row['full_ms']}ms "
+                        f"partial={row['partial_ms']}ms "
+                        f"allgather_overhead={row['allgather_overhead_ms']}ms",
+                        flush=True,
+                    )
     return rows
 
 
@@ -205,6 +290,10 @@ if __name__ == "__main__":
     ap.add_argument("--tenant-axis", default="tenants")
     ap.add_argument("--scheme", default="global",
                     help="estimator scheme for the grid rows")
+    ap.add_argument("--breakdown", action="store_true",
+                    help="add path=breakdown rows timing the banked device "
+                         "query with and without its all_gather+combine "
+                         "tail (the small-T fixed cost, see ROADMAP)")
     ap.add_argument("--host-devices", type=int, default=0,
                     help="force N CPU host devices for mesh testing")
     args = ap.parse_args()
@@ -216,6 +305,7 @@ if __name__ == "__main__":
         tenant_axis=args.tenant_axis,
         scheme=args.scheme,
         smoke=args.smoke,
+        breakdown=args.breakdown,
     )
     if args.json:
         merge_json(args.json, grid, args.smoke, mesh=mesh)

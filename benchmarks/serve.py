@@ -1,0 +1,239 @@
+"""Elastic serving under churn — sustained queries/s while tenants cycle.
+
+The elastic tier's claim (docs/serving.md) is that hot-add/evict churn is
+free at serve time: programs are compiled once per capacity tier, so a
+tenant joining or leaving never stalls its neighbors' ingest or queries.
+This bench measures that claim end to end: ``sessions = 4 x capacity``
+tenant streams cycle through a ``capacity``-slot ElasticBankEngine behind
+an ElasticServeLoop, every accepted batch is chased by a concurrent query
+(issued producer-side, resolved by the consumer thread **while ingest
+keeps dispatching**), and the row reports sustained queries/s, query
+latency percentiles (p50/p95/p99 via ``benchmarks.common``), the ingest
+edges/s underneath, and the churn/compile counters that prove the slab
+model held (``tier_compiles`` stays at 1: every hot-add/evict reused the
+warmed tier programs).
+
+``--json BENCH_streaming.json`` merges rows under the ``serve`` key —
+its own section keyed by (scheme, capacity, sessions, backend, r, batch,
+chunk, smoke); the ingest/query_serve grids stay untouched
+(``benchmarks.common.merge_section`` never-clobber contract).
+
+  PYTHONPATH=src python -m benchmarks.serve --json BENCH_streaming.json
+  PYTHONPATH=src python -m benchmarks.serve --host-devices 4 \
+      --mesh tenants=2,estimators=2 --json BENCH_streaming.json
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+if __name__ == "__main__":
+    # must run before any jax device query (see repro.launch._env)
+    from repro.launch._env import apply_host_devices
+
+    apply_host_devices(sys.argv)
+
+from repro.data.graph_stream import barabasi_albert_stream, batches
+from repro.engine import ElasticBankEngine, ElasticServeLoop
+
+
+def _run_churn(
+    capacity: int,
+    n_sessions: int,
+    r: int,
+    edges,
+    bs: int,
+    backend: str,
+    mesh,
+    chunk: int = 4,
+    tenant_axis: str = "tenants",
+    scheme: str = "global",
+    scheme_params=None,
+    queue_depth: int = 64,
+):
+    """One churn pass: ``n_sessions`` tenant streams through ``capacity``
+    slots, one concurrent query per accepted batch. Returns the row dict,
+    or None when the backend has no banked elastic plan."""
+    try:
+        bank = ElasticBankEngine(
+            r, bs, capacity=capacity, backend=backend, mesh=mesh,
+            chunk_size=chunk, tenant_axis=tenant_axis, scheme=scheme,
+            scheme_params=scheme_params,
+        )
+    except ValueError:
+        return None  # not a banked plan at this (backend, mesh)
+    loop = ElasticServeLoop(
+        bank, queue_depth=queue_depth, queue_policy="stall"
+    ).start()
+    stream = list(batches(edges, bs))
+    lat: list = []  # per-query seconds; done-callbacks append (GIL-atomic)
+
+    def chase(tid):
+        t_issue = time.perf_counter()
+        loop.query(tid).add_done_callback(
+            lambda _f: lat.append(time.perf_counter() - t_issue)
+        )
+
+    # session state: tid -> [next batch index, phase]; admit into free
+    # slots, round-robin one batch per live tenant per lap so ingest and
+    # queries for different sessions genuinely overlap
+    todo = list(range(n_sessions))
+    live: dict = {}
+    t0 = time.perf_counter()
+    try:
+        while todo or live:
+            while todo and len(live) < bank.capacity:
+                sid = todo.pop(0)
+                tid = f"s{sid}"
+                loop.add_tenant(tid, seed=sid).result(60)
+                live[tid] = [0, "submit"]
+            progress = False
+            for tid, st in list(live.items()):
+                i, phase = st
+                if phase == "submit":
+                    if i >= len(stream):
+                        st[1] = "flush"
+                        continue
+                    if loop.submit(tid, *stream[i]):
+                        st[0] += 1
+                        chase(tid)  # a query racing this very batch
+                        progress = True
+                elif phase == "flush":
+                    if bank.step_of(tid) >= i:  # queue fully drained
+                        loop.evict_tenant(tid).result(60)
+                        del live[tid]
+                        progress = True
+            if not progress:
+                time.sleep(0.001)
+    finally:
+        stats = loop.stop()
+    dt = time.perf_counter() - t0
+    from benchmarks.common import latency_percentiles
+
+    m = sum(nv for _, nv in stream)
+    d = bank.diag
+    return {
+        **latency_percentiles(lat),
+        "scheme": scheme,
+        "capacity": bank.capacity,
+        "sessions": n_sessions,
+        "backend": bank.backend,
+        "r": r,
+        "batch": bs,
+        "chunk": chunk,
+        "edges": m * n_sessions,
+        "queries": stats.queries_answered,
+        "degraded_queries": stats.degraded_queries,
+        "hot_adds": d.hot_adds,
+        "evictions": d.evictions,
+        "tier_compiles": d.tier_compiles,
+        "mesh": dict(mesh.shape) if mesh is not None else None,
+        "seconds": round(dt, 6),
+        "queries_per_s": round(stats.queries_answered / dt, 1),
+        "edges_per_s": round(m * n_sessions / dt, 1),
+    }
+
+
+def bench_grid(
+    *,
+    capacities=(2, 4),
+    churn: int = 4,  # sessions = churn x capacity
+    r: int = 16384,
+    bs: int = 1024,
+    nodes: int = 5_000,
+    degree: int = 8,
+    chunk: int = 4,
+    mesh=None,
+    tenant_axis: str = "tenants",
+    scheme: str = "global",
+    smoke: bool = False,
+) -> list[dict]:
+    """(capacity x banked backend) -> queries/s + p99 under 4x churn."""
+    from benchmarks.multistream import _available_backends
+
+    if smoke:
+        capacities, r, nodes = (2,), 2048, 2000
+    scheme_params = (
+        (("n_pools", 8), ("n_vertices", nodes)) if scheme == "local" else None
+    )
+    edges = barabasi_albert_stream(nodes, degree, seed=0)
+    rows = []
+    for cap in capacities:
+        for backend in _available_backends(cap, r, bs, mesh, tenant_axis):
+            row = _run_churn(
+                cap, churn * cap, r, edges, bs, backend, mesh, chunk=chunk,
+                tenant_axis=tenant_axis, scheme=scheme,
+                scheme_params=scheme_params,
+            )
+            if row is None:
+                continue
+            row["smoke"] = smoke
+            rows.append(row)
+            print(
+                f"# scheme={scheme} capacity={cap} "
+                f"sessions={row['sessions']} backend={row['backend']}: "
+                f"{row['queries_per_s']:.0f} queries/s "
+                f"(p50={row['p50_ms']}ms p99={row['p99_ms']}ms) over "
+                f"{row['edges_per_s']:.0f} edges/s ingest, "
+                f"hot_adds={row['hot_adds']} evictions={row['evictions']} "
+                f"tier_compiles={row['tier_compiles']}",
+                flush=True,
+            )
+    return rows
+
+
+def row_key(row: dict) -> tuple:
+    """Identity of a serve row; smoke participates so CI smoke runs never
+    replace committed full-scale rows."""
+    return (
+        row.get("scheme", "global"),
+        row["capacity"],
+        row["sessions"],
+        row["backend"],
+        row.get("r", 0),
+        row.get("batch", 0),
+        row.get("chunk", 0),
+        bool(row.get("smoke", False)),
+    )
+
+
+def merge_json(path: str, rows: list[dict], smoke: bool, mesh=None) -> None:
+    """Merge the churn grid under the ``serve`` key of the trajectory JSON
+    (never-clobber: every other section survives verbatim)."""
+    from benchmarks.common import merge_section, section_meta
+
+    merge_section(path, "serve", rows, row_key, section_meta(smoke, mesh))
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="",
+                    help="merge the churn grid into this trajectory JSON "
+                         "(e.g. BENCH_streaming.json)")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--churn", type=int, default=4,
+                    help="sessions per capacity slot (4 = the 4x cycle)")
+    ap.add_argument("--chunk", type=int, default=4,
+                    help="batches fused per serve-loop dispatch")
+    ap.add_argument("--mesh", default="",
+                    help="device mesh spec, e.g. 'tenants=2,estimators=2'")
+    ap.add_argument("--tenant-axis", default="tenants")
+    ap.add_argument("--scheme", default="global",
+                    help="estimator scheme for the grid rows")
+    ap.add_argument("--host-devices", type=int, default=0,
+                    help="force N CPU host devices for mesh testing")
+    args = ap.parse_args()
+    from repro.launch.mesh import make_stream_mesh
+
+    mesh = make_stream_mesh(args.mesh)
+    grid = bench_grid(
+        mesh=mesh,
+        churn=args.churn,
+        chunk=args.chunk,
+        tenant_axis=args.tenant_axis,
+        scheme=args.scheme,
+        smoke=args.smoke,
+    )
+    if args.json:
+        merge_json(args.json, grid, args.smoke, mesh=mesh)

@@ -286,11 +286,19 @@ def make_banked_pjit_chunk_update(
     w_mode: str = "coordinated_xla",
     tenant_axis: str = "tenants",
     scheme: EstimatorScheme = GLOBAL,
+    per_tenant_step0: bool = False,
 ):
     """K-batch fused variant of ``make_banked_pjit_update``:
     ``f(state_bank, Wb (T,K,s,2), n_valids (T,K), root_keys (T,2), step0)``.
     Same shardings with a replicated scan axis; the counter-based RNG keeps it
-    bit-identical to K sequential banked updates (see scheme.chunk_update)."""
+    bit-identical to K sequential banked updates (see scheme.chunk_update).
+
+    ``per_tenant_step0=True`` makes step0 a ``(T,)`` vector sharded over the
+    tenant axis instead of a replicated scalar — the elastic-bank variant,
+    where slots join the bank at different times and therefore sit at
+    different RNG cursors (``repro.engine.elastic``). Batch ``i`` of slot
+    ``t`` still folds ``step0[t] + i``, so each slot's stream stays
+    bit-identical to a fixed-size engine at the same cursor."""
     scheme = resolve_scheme(scheme)
     state_sh = banked_state_sharding(mesh, tenant_axis, scheme)
     t = tenant_axis
@@ -298,16 +306,18 @@ def make_banked_pjit_chunk_update(
     w_gathered = NamedSharding(mesh, P(t, None, None, None))
     t_rep = NamedSharding(mesh, P(t, None))
     rep = NamedSharding(mesh, P())
+    step_in = 0 if per_tenant_step0 else None
+    step_sh = NamedSharding(mesh, P(t)) if per_tenant_step0 else rep
 
     def banked_chunk(state, Wb, n_valids, keys, step0):
         Wb = jax.lax.with_sharding_constraint(Wb, w_gathered)
-        return jax.vmap(scheme.chunk_update, in_axes=(0, 0, 0, 0, None))(
+        return jax.vmap(scheme.chunk_update, in_axes=(0, 0, 0, 0, step_in))(
             state, Wb, n_valids, keys, step0
         )
 
     return jax.jit(
         banked_chunk,
-        in_shardings=(state_sh, w_in, t_rep, t_rep, rep),
+        in_shardings=(state_sh, w_in, t_rep, t_rep, step_sh),
         out_shardings=state_sh,
         donate_argnums=(0,),
     )
@@ -381,6 +391,7 @@ def make_banked_estimate(
     tenant_axis: str = "tenants",
     scheme: EstimatorScheme = GLOBAL,
     groups: int = 9,
+    partials_only: bool = False,
 ):
     """Device-resident query over a tenant-sharded bank: jit(shard_map) that
     answers ``f(state_bank) -> (n_tenants, ...)`` estimates WITHOUT gathering
@@ -395,6 +406,13 @@ def make_banked_estimate(
     that reproduces the gathered oracle bit for bit (see "Shardable
     decomposition" in ``repro.core.estimate``). The tenant axis stays
     collective-free; the output shards over it.
+
+    ``partials_only=True`` builds the diagnostic half-program that stops
+    after the per-shard reduction — output ``(e_size, n_tenants, *partial)``
+    with NO all_gather and no combine. It answers nothing useful by itself;
+    ``benchmarks/query_serve.py --breakdown`` times it against the full
+    program to isolate the per-query all_gather fixed cost (the ROADMAP
+    item-4 small-T crossover).
     """
     scheme = resolve_scheme(scheme)
     if not scheme.shardable_estimate:
@@ -409,18 +427,42 @@ def make_banked_estimate(
         )
     r_local = r // e_size
     state_spec = scheme_state_specs(scheme, e_axes, tenant_axis=tenant_axis)
-    out_nd = _estimate_out_ndim(scheme, r, groups)
-    out_spec = P(tenant_axis, *((None,) * out_nd))
 
-    def query(bank):
+    def partials(bank):
         off = (
             jax.lax.axis_index(e_axes) * r_local if e_axes else jnp.int32(0)
         )
-        partial = jax.vmap(
+        return jax.vmap(
             lambda st: scheme.partial_estimate(
                 st, offset=off, r=r, groups=groups
             )
         )(bank)  # (T_local, *partial_shape) — fixed shape per scheme
+
+    if partials_only:
+        part_nd = len(
+            jax.eval_shape(
+                lambda: scheme.partial_estimate(
+                    scheme.init_state(r_local), offset=0, r=r, groups=groups
+                )
+            ).shape
+        )
+        out_spec = P(
+            e_axes if e_axes else None, tenant_axis, *((None,) * part_nd)
+        )
+        return jax.jit(
+            _shard_map(
+                lambda bank: partials(bank)[None],
+                mesh,
+                in_specs=(state_spec,),
+                out_specs=out_spec,
+            )
+        )
+
+    out_nd = _estimate_out_ndim(scheme, r, groups)
+    out_spec = P(tenant_axis, *((None,) * out_nd))
+
+    def query(bank):
+        partial = partials(bank)
         if e_axes and e_size > 1:
             parts = jax.lax.all_gather(partial, e_axes)  # (e, T_local, ...)
         else:

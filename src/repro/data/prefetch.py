@@ -174,6 +174,99 @@ class PrefetchQueue:
         return self.q.qsize()
 
 
+class TenantQueues:
+    """Bounded per-tenant ingest queues for the elastic serving tier
+    (``repro.engine.service.ElasticServeLoop``).
+
+    Each resident tenant gets one FIFO capped at ``depth`` batches, so a
+    stalled or flooding tenant cannot grow host memory without bound. When a
+    queue is full ``put`` applies the overflow ``policy``: ``"drop"``
+    discards the NEWEST batch (the arriving one) and counts it in
+    ``dropped``; ``"stall"`` refuses it (returns False) and counts the
+    refusal in ``stalls`` — the producer owns the retry. Both counters feed
+    the serve loop's diag JSON; the consumer side (``take``) dequeues up to
+    ``chunk_size`` batches per tick, front-packed for the fused dispatch.
+
+    Thread-safe: producers ``put`` from request threads while the serve
+    loop's consumer thread ``take``s. Dropping a batch breaks that tenant's
+    exactly-once stream contract by design — it is load shedding, visible in
+    ``dropped`` — so accuracy-sensitive producers should run ``"stall"``
+    and retry; exactly-once *delivery* (dedup of a flaky source) stays
+    ``PrefetchQueue``'s job upstream.
+    """
+
+    def __init__(self, depth: int = 64, policy: str = "drop"):
+        if depth < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
+        if policy not in ("drop", "stall"):
+            raise ValueError(f"policy must be 'drop' or 'stall', got {policy!r}")
+        self.depth = depth
+        self.policy = policy
+        self.dropped = 0  # batches shed by the 'drop' policy (newest-first)
+        self.stalls = 0  # puts refused by the 'stall' policy (backpressure)
+        self._lock = threading.Lock()
+        self._queues: dict = {}
+
+    def add_tenant(self, tid) -> None:
+        with self._lock:
+            self._queues.setdefault(tid, [])
+
+    def remove_tenant(self, tid) -> int:
+        """Drop a tenant's queue; returns how many pending batches died
+        with it (they were never ingested)."""
+        with self._lock:
+            return len(self._queues.pop(tid, []))
+
+    def put(self, tid, item) -> bool:
+        """Enqueue one ``(W, n_valid)`` batch for ``tid``. Returns False when
+        the batch was shed (full queue under 'drop') or refused (full queue
+        under 'stall', or unknown tenant)."""
+        with self._lock:
+            q = self._queues.get(tid)
+            if q is None:
+                return False
+            if len(q) >= self.depth:
+                if self.policy == "drop":
+                    self.dropped += 1
+                else:
+                    self.stalls += 1
+                return False
+            q.append(item)
+            return True
+
+    def take(self, tid, k: int = 1) -> list:
+        """Dequeue up to ``k`` batches for ``tid`` (oldest first) — one
+        front-packed chunk lane for the fused dispatch."""
+        with self._lock:
+            q = self._queues.get(tid)
+            if not q:
+                return []
+            out, self._queues[tid] = q[:k], q[k:]
+            return out
+
+    def backlog(self, tid=None) -> int:
+        """Pending batches for one tenant, or total across all tenants —
+        the serve loop's backpressure signal for degraded queries."""
+        with self._lock:
+            if tid is not None:
+                return len(self._queues.get(tid, ()))
+            return sum(len(q) for q in self._queues.values())
+
+    def tenants(self) -> tuple:
+        with self._lock:
+            return tuple(self._queues)
+
+    def diag(self) -> dict:
+        with self._lock:
+            return {
+                "queue_depth": self.depth,
+                "queue_policy": self.policy,
+                "queue_dropped": self.dropped,
+                "queue_stalls": self.stalls,
+                "queue_backlog": sum(len(q) for q in self._queues.values()),
+            }
+
+
 def stack_batches(
     buf: list, batch_size: Optional[int] = None
 ) -> tuple[np.ndarray, np.ndarray]:

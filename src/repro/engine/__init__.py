@@ -14,6 +14,11 @@ from repro.engine.backends import (
     config_scheme,
     select_backend,
 )
+from repro.engine.elastic import (
+    ElasticBankEngine,
+    ElasticDiagnostics,
+    XlaCompileCounter,
+)
 from repro.engine.engine import (
     EngineConfig,
     EngineDiagnostics,
@@ -32,12 +37,21 @@ from repro.engine.faults import (
     parse_fault_plan,
     with_retries,
 )
-from repro.engine.service import StreamReport, run_signed_stream, run_stream
+from repro.engine.service import (
+    ElasticServeLoop,
+    ServeStats,
+    StreamReport,
+    run_signed_stream,
+    run_stream,
+)
 
 __all__ = [
     "BACKENDS",
     "BackendPlan",
     "config_scheme",
+    "ElasticBankEngine",
+    "ElasticDiagnostics",
+    "ElasticServeLoop",
     "EngineConfig",
     "EngineDiagnostics",
     "FaultInjected",
@@ -45,9 +59,11 @@ __all__ = [
     "FaultSpec",
     "ResilienceConfig",
     "RetryPolicy",
+    "ServeStats",
     "SnapshotMismatch",
     "StagedChunk",
     "StreamReport",
+    "XlaCompileCounter",
     "TriangleCountEngine",
     "fault_plan",
     "install_fault_plan",

@@ -92,6 +92,11 @@ class BackendPlan:
     # builder for the K-batch fused ingest (state, Ws, n_valids, keys, step0);
     # None = the plan cannot chunk (chunk_size must stay 1)
     build_chunk: Optional[Callable] = None
+    # elastic-bank variant of build_chunk: step0 is a (T,) per-slot cursor
+    # vector instead of a replicated scalar, because slots in a slab-allocated
+    # bank join at different times (repro.engine.elastic). Present exactly
+    # where build_chunk is — the elastic tier is restricted to banked plans.
+    build_chunk_elastic: Optional[Callable] = None
     # (config, mesh) -> EstimatorState of NamedShardings for the bank, or None
     # for plans whose state lives unsharded on the default device. The engine
     # device_puts fresh and snapshot-restored banks through this, which is
@@ -143,6 +148,16 @@ def _build_single_chunk(config, mesh) -> Callable:
     )
 
 
+def _build_single_chunk_elastic(config, mesh) -> Callable:
+    # per-slot step0 vector: each bank slot folds its OWN cursor, so slots
+    # that joined at different stream positions stay on their own RNG streams
+    scheme = config_scheme(config)
+    return jax.jit(
+        jax.vmap(scheme.chunk_update, in_axes=(0, 0, 0, 0, 0)),
+        donate_argnums=(0,),
+    )
+
+
 def _build_pjit(w_mode: str):
     def build(config, mesh) -> Callable:
         from repro.core.distributed import make_pjit_update
@@ -168,7 +183,7 @@ def _build_banked_pjit(w_mode: str):
     return build
 
 
-def _build_banked_pjit_chunk(w_mode: str):
+def _build_banked_pjit_chunk(w_mode: str, per_tenant_step0: bool = False):
     def build(config, mesh) -> Callable:
         from repro.core.distributed import make_banked_pjit_chunk_update
 
@@ -177,6 +192,7 @@ def _build_banked_pjit_chunk(w_mode: str):
             w_mode=w_mode,
             tenant_axis=_tenant_axis(config),
             scheme=config_scheme(config),
+            per_tenant_step0=per_tenant_step0,
         )
 
     return build
@@ -278,6 +294,9 @@ def _banked_plan(w_mode: str) -> BackendPlan:
         reports_overflow=False,
         build=_build_banked_pjit(w_mode),
         build_chunk=_build_banked_pjit_chunk(w_mode),
+        build_chunk_elastic=_build_banked_pjit_chunk(
+            w_mode, per_tenant_step0=True
+        ),
         bank_sharding=_banked_sharding,
         batch_w_sharding=_banked_batch_w_sharding(w_mode),
         chunk_w_sharding=_banked_chunk_w_sharding(w_mode),
@@ -289,6 +308,7 @@ def _banked_plan(w_mode: str) -> BackendPlan:
 _PLANS = {
     "single": BackendPlan(
         "single", True, False, _build_single, _build_single_chunk,
+        build_chunk_elastic=_build_single_chunk_elastic,
         build_delete=_build_single_delete,
     ),
     "pjit_independent": BackendPlan(

@@ -41,7 +41,13 @@ import numpy as np
 
 from repro.core.sequential import count_triangles
 from repro.data.graph_stream import batches, signed_batches
-from repro.engine import run_signed_stream, run_stream
+from repro.engine import (
+    ElasticBankEngine,
+    ElasticServeLoop,
+    run_signed_stream,
+    run_stream,
+)
+from repro.launch.mesh import make_stream_mesh
 from repro.launch.stream import (
     add_dynamic_flags,
     add_resilience_flags,
@@ -53,6 +59,7 @@ from repro.launch.stream import (
     make_stream,
     print_resilience_summary,
     resilience_from_args,
+    scheme_args,
     write_diag_json,
 )
 
@@ -95,6 +102,171 @@ def _stdin_queries(q: queue.Queue):
     q.put(_STDIN_CLOSED)
 
 
+class _Session:
+    """One tenant's lifecycle in the elastic churn driver: hot-add, submit
+    its stream through the serve loop's bounded queue, optionally
+    snapshot/evict/restore at the halfway point, then a final drained query
+    and evict. The driver round-robins many of these through ``capacity``
+    slots so ingest and queries for different sessions overlap."""
+
+    def __init__(self, tid, seed, stream, snap_at=0):
+        self.tid = tid
+        self.seed = seed
+        self.stream = stream  # list of (W, n_valid)
+        self.i = 0  # batches submitted so far
+        self.phase = "submit"  # -> snap | flush | final -> (removed)
+        self.snap_at = snap_at  # snapshot/evict/restore after this many
+        self.rolling = []  # in-flight rolling query futures
+        self.final = None
+
+
+def _elastic_rel_err(est, tau):
+    val = float(np.sum(est)) / 3 if np.ndim(est) > 0 else float(est)
+    err = abs(val - tau) / max(tau, 1) if tau else None
+    return val, err
+
+
+def run_elastic(args) -> None:
+    """Elastic serving mode: ``--sessions`` tenant streams churn through a
+    ``--capacity``-slot slab-allocated bank (docs/serving.md). Queries are
+    answered concurrently with ingest by the serve loop's consumer thread;
+    each session's final (fully drained) estimate is checked against the
+    exact count under ``--assert-rel-err``."""
+    import json
+    import time
+
+    if args.deletions or args.window or args.decay:
+        sys.exit("--elastic is insertion-only (no turnstile/window/decay)")
+    edges, tau = make_stream(args)
+    install_cli_fault_plan(args)
+    mesh = make_stream_mesh(args.mesh or "")
+    bank = ElasticBankEngine(
+        args.estimators,
+        args.batch,
+        capacity=args.capacity,
+        backend=args.backend,
+        mesh=mesh,
+        groups=args.groups,
+        chunk_size=args.chunk,
+        tenant_axis=args.tenant_axis,
+        **scheme_args(args),
+    )
+    if mesh is not None:
+        print(f"mesh: {dict(mesh.shape)} -> plan {bank.backend}", flush=True)
+    n_sessions = args.sessions or 2 * bank.capacity
+    stream = list(batches(edges, args.batch))
+    print(f"stream: m={len(edges)} tau={tau} sessions={n_sessions} "
+          f"capacity={bank.capacity} backend={bank.backend}", flush=True)
+
+    loop = ElasticServeLoop(
+        bank,
+        queue_depth=args.queue_depth,
+        queue_policy=args.queue_policy,
+        resilience=resilience_from_args(args),
+        checkpoint=args.ckpt_dir,
+    ).start()
+
+    # session 0 exercises snapshot -> evict -> restore at its halfway point
+    # (through the verified checkpoint store when --ckpt-dir is set) while
+    # the other residents keep ingesting — the live-churn continuity drill
+    todo = [
+        _Session(
+            f"s{sid}",
+            args.seed + sid,
+            stream,
+            snap_at=len(stream) // 2 if sid == 0 and len(stream) > 1 else 0,
+        )
+        for sid in range(n_sessions)
+    ]
+    live: dict = {}
+    failures = []
+    t0 = time.perf_counter()
+    report_every = max(args.report_every, 1)
+    try:
+        while todo or live:
+            # admit sessions into free slots; never grow past --capacity
+            while todo and len(live) < bank.capacity:
+                s = todo.pop(0)
+                loop.add_tenant(s.tid, seed=s.seed).result(60)
+                live[s.tid] = s
+            progress = False
+            for s in list(live.values()):
+                if s.phase == "submit":
+                    if s.i >= len(s.stream):
+                        s.phase = "flush"
+                        continue
+                    W, nv = s.stream[s.i]
+                    if loop.submit(s.tid, W, nv):  # False = backpressure
+                        s.i += 1
+                        progress = True
+                        if s.i % report_every == 0:
+                            s.rolling.append(loop.query(s.tid))
+                        if s.snap_at and s.i == s.snap_at:
+                            s.phase = "snap"
+                elif s.phase == "snap":
+                    if bank.step_of(s.tid) < s.i:
+                        continue  # queued batches still draining
+                    snap = loop.snapshot_tenant(
+                        s.tid, save=bool(args.ckpt_dir)).result(60)
+                    loop.evict_tenant(s.tid).result(60)
+                    if args.ckpt_dir:
+                        loop.restore_tenant(
+                            s.tid, step=int(snap["step"])).result(60)
+                    else:
+                        loop.restore_tenant(s.tid, snap=snap).result(60)
+                    print(f"serve: {s.tid} snapshot/evict/restore at "
+                          f"step {int(snap['step'])} under live traffic",
+                          flush=True)
+                    s.phase = "submit"
+                    progress = True
+                elif s.phase == "flush":
+                    if bank.step_of(s.tid) >= s.i:  # every batch ingested
+                        s.final = loop.query(s.tid)
+                        s.phase = "final"
+                        progress = True
+                elif s.phase == "final" and s.final.done():
+                    ans = s.final.result()
+                    val, err = _elastic_rel_err(ans["estimate"], tau)
+                    line = (f"session {s.tid} m={len(edges)} "
+                            f"estimate={val:.1f}")
+                    if err is not None:
+                        line += f" rel.err={err:.3%}"
+                        if args.assert_rel_err and err > args.assert_rel_err:
+                            failures.append((s.tid, err))
+                    print(line, flush=True)
+                    loop.evict_tenant(s.tid).result(60)
+                    del live[s.tid]
+                    progress = True
+            if not progress:
+                time.sleep(0.002)
+    finally:
+        stats = loop.stop()
+    dt = time.perf_counter() - t0
+    d = bank.diag
+    print(f"served {n_sessions} sessions x {len(edges)} edges in {dt:.2f}s: "
+          f"hot_adds={d.hot_adds} evictions={d.evictions} "
+          f"restores={d.restores} tier_compiles={d.tier_compiles} "
+          f"queries={stats.queries_answered} "
+          f"(degraded={stats.degraded_queries}) retries={stats.retries}",
+          flush=True)
+    if args.diag_json:
+        from repro.engine.faults import active_fault_plan
+        plan = active_fault_plan()
+        payload = {
+            "diag": loop.report(),
+            "fault_plan": plan.summary() if plan else None,
+        }
+        with open(args.diag_json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"diag written to {args.diag_json}", flush=True)
+    if failures:
+        sys.exit(f"rel.err exceeded {args.assert_rel_err:.3%} for "
+                 + ", ".join(f"{t} ({e:.3%})" for t, e in failures))
+    if args.assert_rel_err and tau:
+        print(f"rel.err within {args.assert_rel_err:.3%} for all "
+              f"{n_sessions} sessions OK", flush=True)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--graph", choices=("ba", "er", "planted"), default="ba")
@@ -127,7 +299,31 @@ def main():
     ap.add_argument("--interactive", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--elastic", action="store_true",
+                    help="serve through the slab-allocated elastic bank: "
+                         "--sessions tenant streams churn (hot-add/evict) "
+                         "through --capacity slots with queries answered "
+                         "concurrently with ingest (docs/serving.md)")
+    ap.add_argument("--capacity", type=int, default=2,
+                    help="elastic bank slot count (rounded up to a power "
+                         "of 2); the churn driver never grows past it")
+    ap.add_argument("--sessions", type=int, default=0,
+                    help="tenant sessions to cycle through the elastic "
+                         "bank (0 = 2x capacity)")
+    ap.add_argument("--queue-depth", type=int, default=64,
+                    help="per-tenant bounded ingest queue depth")
+    ap.add_argument("--queue-policy", choices=("drop", "stall"),
+                    default="stall",
+                    help="full-queue policy: drop newest, or stall the "
+                         "producer (counted either way in diag)")
+    ap.add_argument("--assert-rel-err", type=float, default=0.0,
+                    help="elastic mode: exit nonzero unless every session's "
+                         "final estimate is within this relative error")
     args = ap.parse_args()
+
+    if args.elastic:
+        run_elastic(args)
+        return
 
     edges, tau = make_stream(args)
     signed = None

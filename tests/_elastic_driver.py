@@ -1,0 +1,159 @@
+"""Subprocess driver for the elastic bank on tenant-sharded plans (needs the
+XLA host-device count set before jax initializes — so it runs in its own
+process; see tests/test_elastic_sharded.py).
+
+Checks, per banked plan (banked_pjit_independent on a pure tenant mesh,
+banked_pjit_coordinated on the 2-D (tenants, estimators) mesh):
+  * hot-add/evict churn + staggered per-batch AND chunked elastic ingest is
+    bit-identical per tenant to dedicated fixed single-backend engines;
+  * compile-once-per-capacity holds on sharded plans: churn within capacity
+    after warm-up triggers ZERO XLA backend compiles, and one capacity
+    doubling builds exactly one new tier;
+  * per-tenant snapshots cross meshes: a tenant frozen on one sharded bank
+    continues bit-identically on a fixed single-device engine AND on the
+    OTHER mesh's elastic bank;
+  * the serve loop (bounded queues + consumer thread) over a sharded bank
+    drains to the same bits as direct ingest.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import numpy as np
+
+import repro  # noqa: F401  (x64)
+from repro.data.graph_stream import batches, erdos_renyi_stream
+from repro.engine import (
+    ElasticBankEngine,
+    ElasticServeLoop,
+    EngineConfig,
+    TriangleCountEngine,
+    XlaCompileCounter,
+)
+from repro.launch.mesh import make_stream_mesh
+
+R, S = 256, 16
+
+
+def fixed(seed, n_batches, its, chunk=1):
+    eng = TriangleCountEngine(EngineConfig(
+        r=R, batch_size=S, n_tenants=1, seeds=(seed,), backend="single",
+        chunk_size=chunk,
+    ))
+    for W, nv in its[:n_batches]:
+        eng.ingest(W, nv)
+    return eng
+
+
+def assert_tenant_equal(ref_eng, bank, tid, ctx):
+    a, b = ref_eng.bank_snapshot(), bank.snapshot_tenant(tid)
+    for f in ("f1", "chi", "f2", "has_f3", "m_seen", "step", "root_keys"):
+        np.testing.assert_array_equal(a[f], b[f], err_msg=f"{ctx}:{f}")
+
+
+def main():
+    import jax
+
+    assert jax.device_count() == 8, jax.device_count()
+    edges = erdos_renyi_stream(30, 160, seed=5)
+    its = list(batches(edges, S))
+    mesh_t = make_stream_mesh("tenants=4")
+    mesh_2d = make_stream_mesh("tenants=2,estimators=2")
+    plans = [
+        (mesh_t, "banked_pjit_independent", 4),
+        (mesh_2d, "banked_pjit_coordinated", 2),
+    ]
+    snaps = {}
+    half = len(its) // 2
+    for mesh, backend, cap in plans:
+        bank = ElasticBankEngine(
+            R, S, capacity=cap, backend=backend, mesh=mesh, chunk_size=3)
+        assert bank.backend == backend, (bank.backend, backend)
+        assert bank.diag.tier_compiles == 1
+        # pre-existing traffic, then churn the slot before a/b move in
+        bank.hot_add("w", seed=50)
+        bank.ingest({"w": its[7]})
+        bank.estimate()
+        c0 = XlaCompileCounter.snapshot()
+        bank.evict("w")
+        bank.hot_add("a", seed=11)
+        for W, nv in its:  # per-batch elastic path
+            bank.ingest({"a": (W, nv)})
+        bank.hot_add("b", seed=12)  # staggered join: different step cursor
+        bank.ingest_chunk({"b": its[:3]})  # chunked elastic path
+        bank.ingest_chunk({"b": its[3:4]})
+        est = bank.estimate()
+        bank.snapshot_tenant("b")
+        assert XlaCompileCounter.snapshot() == c0, "churn must not compile"
+        assert bank.diag.tier_compiles == 1
+        ref_a = fixed(11, len(its), its)
+        ref_b = fixed(12, 4, its)
+        assert_tenant_equal(ref_a, bank, "a", f"{backend}:a")
+        assert_tenant_equal(ref_b, bank, "b", f"{backend}:b")
+        np.testing.assert_array_equal(
+            est[bank.slot_of("a")], ref_a.estimate()[0])
+        print(f"{backend} churn + mixed ingest bit-identical OK")
+
+        # one doubling = exactly one new tier; post-grow churn compile-free
+        while bank.n_active < bank.capacity:
+            bank.hot_add(f"fill{bank.n_active}", seed=60 + bank.n_active)
+        bank.hot_add("over", seed=70)  # free list empty -> grow
+        assert bank.capacity == 2 * cap
+        assert bank.diag.tier_compiles == 2 and bank.diag.grows == 1
+        c1 = XlaCompileCounter.snapshot()
+        bank.evict("over")
+        bank.hot_add("over2", seed=71)
+        bank.ingest({"over2": its[0]})  # unlisted neighbors must not move
+        bank.estimate()
+        assert XlaCompileCounter.snapshot() == c1, "post-grow churn compiled"
+        assert_tenant_equal(ref_a, bank, "a", f"{backend}:a-post-grow")
+        print(f"{backend} grow: exactly one new tier, churn compile-free OK")
+
+        # freeze a tenant at half stream for the cross-mesh leg below
+        b2 = ElasticBankEngine(
+            R, S, capacity=cap, backend=backend, mesh=mesh, chunk_size=3)
+        b2.hot_add("x", seed=13)
+        for W, nv in its[:half]:
+            b2.ingest({"x": (W, nv)})
+        snaps[backend] = b2.snapshot_tenant("x")
+
+    # --- per-tenant snapshots cross meshes and engine kinds ---
+    ref_x = fixed(13, len(its), its)
+    solo = TriangleCountEngine.from_snapshot(snaps["banked_pjit_independent"])
+    for W, nv in its[half:]:
+        solo.ingest(W, nv)
+    assert_tenant_equal_solo = solo.bank_snapshot()
+    for f in ("f1", "chi", "f2", "has_f3", "m_seen", "step", "root_keys"):
+        np.testing.assert_array_equal(
+            ref_x.bank_snapshot()[f], assert_tenant_equal_solo[f],
+            err_msg=f"cross:solo:{f}")
+    other = ElasticBankEngine(
+        R, S, capacity=2, backend="banked_pjit_coordinated", mesh=mesh_2d)
+    other.hot_add("neighbor", seed=90)
+    other.restore_tenant("x", snaps["banked_pjit_independent"])
+    for W, nv in its[half:]:
+        other.ingest({"x": (W, nv), "neighbor": (W, nv)})
+    assert_tenant_equal(ref_x, other, "x", "cross:mesh_t->mesh_2d")
+    print("per-tenant snapshot crosses meshes bit-identically OK")
+
+    # --- serve loop over a sharded bank ---
+    bank = ElasticBankEngine(
+        R, S, capacity=2, backend="banked_pjit_coordinated", mesh=mesh_2d,
+        chunk_size=3)
+    with ElasticServeLoop(bank) as loop:
+        loop.add_tenant("a", seed=11).result(60)
+        for W, nv in its[:6]:
+            assert loop.submit("a", W, nv)
+        ans = loop.query("a").result(60)
+        assert loop.drain(60)
+        final = loop.query("a").result(60)
+    ref = fixed(11, 6, its)
+    assert final["estimate"] == float(ref.estimate()[0]), ans
+    assert_tenant_equal(ref, bank, "a", "serve")
+    print("serve loop on sharded bank OK")
+
+    print("ALL-ELASTIC-OK")
+
+
+if __name__ == "__main__":
+    main()

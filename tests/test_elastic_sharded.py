@@ -1,0 +1,30 @@
+"""Elastic bank on tenant-sharded plans. The banked_pjit_* plans need >1
+device, so the actual checks run in a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 (set *only* there, per
+the dry-run isolation rule); see tests/_elastic_driver.py for what is
+asserted per plan (churn bit-identity, compile-once-per-capacity on
+sharded programs, cross-mesh per-tenant snapshots, serve loop)."""
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+@pytest.mark.slow
+def test_elastic_sharded_bank():
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tests" / "_elastic_driver.py")],
+        capture_output=True,
+        text=True,
+        timeout=900,
+        env={
+            "PYTHONPATH": str(ROOT / "src"),
+            "PATH": "/usr/bin:/bin:/usr/local/bin",
+            "JAX_PLATFORMS": "cpu",
+        },
+    )
+    assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
+    assert "ALL-ELASTIC-OK" in proc.stdout

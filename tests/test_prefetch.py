@@ -9,7 +9,11 @@ import time
 
 import pytest
 
-from repro.data.prefetch import PrefetchQueue, work_stealing_shards
+from repro.data.prefetch import (
+    PrefetchQueue,
+    TenantQueues,
+    work_stealing_shards,
+)
 
 
 class TestDeadlineMissAccounting:
@@ -121,3 +125,55 @@ class TestWorkStealing:
         # merged stream is gated on it rather than skipping ahead
         assert out == ["slow-a", "fast", "slow-b"]
         assert time.time() - t0 >= 0.25
+
+
+class TestTenantQueues:
+    def test_drop_policy_sheds_newest_and_counts(self):
+        q = TenantQueues(depth=2, policy="drop")
+        q.add_tenant("a")
+        assert q.put("a", 1) and q.put("a", 2)
+        assert not q.put("a", 3)  # full: the ARRIVING batch is shed
+        assert q.dropped == 1 and q.stalls == 0
+        assert q.take("a", 3) == [1, 2]  # oldest-first, survivors intact
+        assert q.diag()["queue_dropped"] == 1
+
+    def test_stall_policy_refuses_and_counts(self):
+        q = TenantQueues(depth=1, policy="stall")
+        q.add_tenant("a")
+        assert q.put("a", 1)
+        assert not q.put("a", 2)
+        assert q.stalls == 1 and q.dropped == 0
+        q.take("a")
+        assert q.put("a", 2)  # producer-owned retry succeeds after drain
+        assert q.diag()["queue_stalls"] == 1
+
+    def test_unknown_tenant_refused_and_eviction_counts_pending(self):
+        q = TenantQueues(depth=4)
+        assert not q.put("ghost", 1)
+        q.add_tenant("a")
+        q.put("a", 1)
+        q.put("a", 2)
+        assert q.backlog() == 2 and q.backlog("a") == 2
+        assert q.remove_tenant("a") == 2  # pending batches died with it
+        assert q.backlog() == 0 and q.tenants() == ()
+
+    def test_take_is_front_packed_fifo(self):
+        q = TenantQueues(depth=8)
+        q.add_tenant("a")
+        for i in range(5):
+            q.put("a", i)
+        assert q.take("a", 3) == [0, 1, 2]
+        assert q.take("a", 3) == [3, 4]
+        assert q.take("a", 3) == []
+
+    def test_diag_shape(self):
+        q = TenantQueues(depth=3, policy="stall")
+        q.add_tenant("a")
+        q.put("a", 1)
+        assert q.diag() == {
+            "queue_depth": 3,
+            "queue_policy": "stall",
+            "queue_dropped": 0,
+            "queue_stalls": 0,
+            "queue_backlog": 1,
+        }

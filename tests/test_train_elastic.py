@@ -1,0 +1,99 @@
+"""Behavior pins for repro.train.elastic — the resize-without-restart
+substrate the elastic serving tier (repro.engine.elastic) generalizes.
+
+Deliberately hypothesis-free (unlike tests/test_substrate.py, which gates
+on the dev dep at module level): these are issue-9 acceptance pins and must
+run in a base install.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro  # noqa: F401  (x64)
+from repro.core.schemes import resolve_scheme
+from repro.train.elastic import reshard, shrink_or_grow_estimators
+
+
+def _ingested_state(r=64, seed=4):
+    from repro.data.graph_stream import batches, erdos_renyi_stream
+
+    scheme = resolve_scheme("global", None)
+    st = scheme.init_state(r)
+    key = jax.random.PRNGKey(3)
+    for i, (W, nv) in enumerate(
+        batches(erdos_renyi_stream(30, 120, seed=seed), 16)
+    ):
+        st = scheme.bulk_update(
+            st, jnp.asarray(W), jnp.asarray(nv), jax.random.fold_in(key, i)
+        )
+    return scheme, st
+
+
+class TestShrinkGrowPrefix:
+    def test_prefix_unbiasedness_pin(self):
+        """The resize contract on a REAL (post-ingest) state: shrinking
+        keeps the exact estimator prefix (each estimator is i.i.d., so a
+        prefix is an unbiased subsample — resizing must not re-mix rows),
+        and growing appends only FRESH estimators (empty f1/chi/f2/has_f3)
+        with ``m_seen`` untouched, so the suffix warms up on future batches
+        under valid NBSI."""
+        _, st = _ingested_state()
+        ref = jax.tree.map(np.asarray, st)
+        small = shrink_or_grow_estimators(st, 24)
+        for f in ("f1", "chi", "f2", "has_f3"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(small, f)), getattr(ref, f)[:24],
+                err_msg=f"shrink:{f}")
+        assert int(small.m_seen) == int(ref.m_seen)
+        big = shrink_or_grow_estimators(st, 96)
+        for f in ("f1", "chi", "f2", "has_f3"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(big, f))[:64], getattr(ref, f),
+                err_msg=f"grow-prefix:{f}")
+        assert (np.asarray(big.f1)[64:] == -1).all()
+        assert (np.asarray(big.f2)[64:] == -1).all()
+        assert (np.asarray(big.chi)[64:] == 0).all()
+        assert not np.asarray(big.has_f3)[64:].any()
+        assert int(big.m_seen) == int(ref.m_seen)
+
+    def test_shrink_then_grow_is_prefix_stable(self):
+        """Round-tripping r -> r/2 -> r keeps the surviving prefix frozen:
+        no resize sequence can silently re-seed live estimators."""
+        _, st = _ingested_state()
+        ref = jax.tree.map(np.asarray, st)
+        back = shrink_or_grow_estimators(
+            shrink_or_grow_estimators(st, 32), 64)
+        for f in ("f1", "chi", "f2", "has_f3"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(back, f))[:32], getattr(ref, f)[:32],
+                err_msg=f)
+
+
+class TestReshard:
+    def test_reshard_roundtrip_continues_bit_identically(self):
+        """reshard() places host arrays onto a mesh without changing a bit:
+        device values equal the originals, and ingest continues identically
+        after the round-trip (the restart-on-a-new-mesh contract the
+        elastic bank's cross-engine snapshots build on)."""
+        from jax.sharding import Mesh, PartitionSpec as P
+
+        scheme, st = _ingested_state(r=32, seed=1)
+        key = jax.random.PRNGKey(1)
+        host = jax.tree.map(np.asarray, st)
+        mesh = Mesh(np.array(jax.devices()[:1]), ("estimators",))
+        spec = jax.tree.map(lambda _: P("estimators"), host)
+        spec = spec._replace(m_seen=P())  # scalar: replicated
+        placed = reshard(host, mesh, spec)
+        for f in ("f1", "chi", "f2", "has_f3", "m_seen"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(placed, f)), getattr(host, f), err_msg=f)
+        W = jnp.asarray(
+            np.random.default_rng(0).integers(0, 20, (16, 2)), jnp.int32)
+        nxt_ref = scheme.bulk_update(
+            st, W, jnp.asarray(16), jax.random.fold_in(key, 9))
+        nxt = scheme.bulk_update(
+            placed, W, jnp.asarray(16), jax.random.fold_in(key, 9))
+        for f in ("f1", "chi", "f2", "has_f3", "m_seen"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(nxt, f)), np.asarray(getattr(nxt_ref, f)),
+                err_msg=f"continue:{f}")

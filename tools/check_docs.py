@@ -27,7 +27,14 @@ Checks:
   7. every kernel module in ``src/repro/kernels/`` is named in
      docs/paper_map.md or docs/engine.md (as ``kernels/NAME.py`` or
      ``repro.kernels.NAME``), and the ingest-backend dispatch vocabulary is
-     present — a new hot-path kernel must land with its paper-stage map.
+     present — a new hot-path kernel must land with its paper-stage map;
+  8. the elastic serving tier is documented: docs/serving.md must name
+     every plan in ``ElasticBankEngine.BANKED``, the slab/churn vocabulary
+     (hot-add, evict, capacity tiers, compile-once), the serve-loop
+     surface (bounded queues, degraded queries, per-tenant snapshots), and
+     the CLI/bench knobs; docs/engine.md and docs/robustness.md must link
+     to it — an elastic knob or lifecycle verb is a documentation
+     contract.
 
   PYTHONPATH=src python tools/check_docs.py
 """
@@ -196,6 +203,44 @@ def check_kernel_coverage() -> list[str]:
     return errors
 
 
+def check_serving_coverage() -> list[str]:
+    """docs/serving.md must cover the elastic tier: every banked plan it
+    runs on, the slab lifecycle vocabulary, the serve-loop/queue surface,
+    and the churn-drill knobs; the engine and robustness handbooks must
+    point at it."""
+    sys.path.insert(0, str(ROOT / "src"))
+    from repro.engine.elastic import ElasticBankEngine
+
+    errors = []
+    handbook = (ROOT / "docs" / "serving.md").read_text()
+    errors += [
+        f"docs/serving.md: banked plan `{plan}` is not documented"
+        for plan in ElasticBankEngine.BANKED
+        if f"`{plan}`" not in handbook
+    ]
+    required = {
+        "serving.md": ("`ElasticBankEngine`", "`ElasticServeLoop`",
+                       "`hot_add`", "`evict`", "`ingest_chunk`",
+                       "`snapshot_tenant", "`restore_tenant`",
+                       "`cached_estimate()`", "`stale_age`",
+                       "tier_compiles`", "`XlaCompileCounter`",
+                       "TenantQueues`", "`queue_dropped`",
+                       "`queue_stalls`", "compile-once", "--elastic`",
+                       "`--capacity`", "`--queue-policy`",
+                       "`--assert-rel-err`", "benchmarks.serve"),
+        "engine.md": ("serving.md", "`ElasticBankEngine`"),
+        "robustness.md": ("serving.md",),
+    }
+    for doc, tokens in required.items():
+        text = (ROOT / "docs" / doc).read_text()
+        errors += [
+            f"docs/{doc}: elastic-serving docs are missing {tok}"
+            for tok in tokens
+            if tok not in text
+        ]
+    return errors
+
+
 def main() -> int:
     errors = (
         check_links()
@@ -205,6 +250,7 @@ def main() -> int:
         + check_dynamic_coverage()
         + check_robustness_coverage()
         + check_kernel_coverage()
+        + check_serving_coverage()
     )
     for e in errors:
         print(e, file=sys.stderr)
