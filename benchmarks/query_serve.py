@@ -85,7 +85,7 @@ def _run_serve(
             # pre-query-path serving: every query re-gathers the bank
             timed(lambda: eng.estimate(gather=True))
             queries += 1
-            for t in range(T):
+            for _ in range(T):
                 timed(lambda: eng.estimate(gather=True))
                 queries += 1
         else:

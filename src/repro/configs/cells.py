@@ -24,31 +24,41 @@ from repro.train.sharding import batch_axes, lm_param_specs, opt_state_specs
 # shape tables
 # ---------------------------------------------------------------------------
 LM_SHAPES = {
-    "train_4k": dict(kind="train", seq=4096, batch=256),
-    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
-    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "train_4k": {"kind": "train", "seq": 4096, "batch": 256},
+    "prefill_32k": {"kind": "prefill", "seq": 32768, "batch": 32},
+    "decode_32k": {"kind": "decode", "seq": 32768, "batch": 128},
     # long-context decode: one token vs a 512k KV cache (linear in cache len).
     # No 500k train/prefill is claimed for these full-attention archs —
     # see DESIGN.md §6.
-    "long_500k": dict(kind="decode", seq=524288, batch=1),
+    "long_500k": {"kind": "decode", "seq": 524288, "batch": 1},
 }
 GNN_SHAPES = {
-    "full_graph_sm": dict(n_nodes=2708, n_edges=10556, d_feat=1433, n_classes=7),
-    "minibatch_lg": dict(n_nodes=169984, n_edges=168960, d_feat=602, n_classes=41),
-    "ogb_products": dict(n_nodes=2449029, n_edges=61859140, d_feat=100, n_classes=47),
-    "molecule": dict(n_nodes=3840, n_edges=8192, d_feat=64, n_classes=16),
+    "full_graph_sm": {"n_nodes": 2708, "n_edges": 10556, "d_feat": 1433,
+                      "n_classes": 7},
+    "minibatch_lg": {"n_nodes": 169984, "n_edges": 168960, "d_feat": 602,
+                     "n_classes": 41},
+    "ogb_products": {"n_nodes": 2449029, "n_edges": 61859140, "d_feat": 100,
+                     "n_classes": 47},
+    "molecule": {"n_nodes": 3840, "n_edges": 8192, "d_feat": 64,
+                 "n_classes": 16},
 }
 GNN_SMOKE_SHAPES = {
-    "full_graph_sm": dict(n_nodes=40, n_edges=120, d_feat=12, n_classes=5),
-    "minibatch_lg": dict(n_nodes=176, n_edges=160, d_feat=12, n_classes=5),
-    "ogb_products": dict(n_nodes=64, n_edges=200, d_feat=12, n_classes=5),
-    "molecule": dict(n_nodes=20, n_edges=48, d_feat=8, n_classes=4),
+    "full_graph_sm": {"n_nodes": 40, "n_edges": 120, "d_feat": 12,
+                      "n_classes": 5},
+    "minibatch_lg": {"n_nodes": 176, "n_edges": 160, "d_feat": 12,
+                     "n_classes": 5},
+    "ogb_products": {"n_nodes": 64, "n_edges": 200, "d_feat": 12,
+                     "n_classes": 5},
+    "molecule": {"n_nodes": 20, "n_edges": 48, "d_feat": 8, "n_classes": 4},
 }
 RECSYS_SHAPES = {
-    "train_batch": dict(kind="train", batch=65536),
-    "serve_p99": dict(kind="score", batch=512, cands=1024, per_user=True),
-    "serve_bulk": dict(kind="score", batch=262144, cands=1024, per_user=False),
-    "retrieval_cand": dict(kind="score", batch=1, cands=1_000_000, per_user=False),
+    "train_batch": {"kind": "train", "batch": 65536},
+    "serve_p99": {"kind": "score", "batch": 512, "cands": 1024,
+                  "per_user": True},
+    "serve_bulk": {"kind": "score", "batch": 262144, "cands": 1024,
+                   "per_user": False},
+    "retrieval_cand": {"kind": "score", "batch": 1, "cands": 1_000_000,
+                       "per_user": False},
 }
 
 LM_ARCHS = {

@@ -7,9 +7,10 @@ explicit shard_map coordinated path. The key is the W-distribution mode
 (``w_mode`` in repro.core.distributed) — the *estimator scheme* of
 repro.core.schemes is a different, orthogonal axis."""
 SHAPES = {
-    "bulk_s1m_r2m": dict(w_mode="coordinated_xla", s=1 << 20, r=1 << 21),
-    "bulk_s16m_r20m": dict(w_mode="coordinated_xla", s=1 << 24, r=20_971_520),
-    "indep_s1m_r2m": dict(w_mode="independent", s=1 << 20, r=1 << 21),
-    "coord_s1m_r2m": dict(w_mode="shardmap", s=1 << 20, r=1 << 21),
-    "coord_s16m_r20m": dict(w_mode="shardmap", s=1 << 24, r=20_971_520),
+    "bulk_s1m_r2m": {"w_mode": "coordinated_xla", "s": 1 << 20, "r": 1 << 21},
+    "bulk_s16m_r20m": {"w_mode": "coordinated_xla", "s": 1 << 24,
+                       "r": 20_971_520},
+    "indep_s1m_r2m": {"w_mode": "independent", "s": 1 << 20, "r": 1 << 21},
+    "coord_s1m_r2m": {"w_mode": "shardmap", "s": 1 << 20, "r": 1 << 21},
+    "coord_s16m_r20m": {"w_mode": "shardmap", "s": 1 << 24, "r": 20_971_520},
 }

@@ -35,6 +35,24 @@ _DONE = object()  # sentinel distinct from any legitimate batch (even None)
 
 
 class PrefetchQueue:
+    # Thread model, machine-checked by repro-lint RL40x (docs/lint.md): the
+    # producer thread owns its delivery/fault counters, the consumer (get)
+    # owns the dedup/staleness state; ``q`` is the channel, and ``_error``/
+    # ``done`` cross back to the consumer only after the _DONE sentinel is
+    # observed (queue put/get gives the happens-before edge).
+    _thread_ownership = {
+        "producer": {
+            "methods": ("_produce", "_source_fault"),
+            "attrs": ("redelivered", "retries", "done", "_error"),
+        },
+        "consumer": {
+            "methods": ("get",),
+            "attrs": ("backup", "stale_steps", "late_drops",
+                      "duplicate_drops", "_last_seq", "_drop_next",
+                      "unmatched_standins"),
+        },
+    }
+
     def __init__(
         self,
         source: Iterator,
@@ -194,6 +212,10 @@ class TenantQueues:
     and retry; exactly-once *delivery* (dedup of a flaky source) stays
     ``PrefetchQueue``'s job upstream.
     """
+
+    # Machine-checked by repro-lint RL403 (docs/lint.md): every access to
+    # the queue map and shed/stall counters must hold the lock.
+    _lock_guarded = ("_queues", "dropped", "stalls")
 
     def __init__(self, depth: int = 64, policy: str = "drop"):
         if depth < 1:

@@ -326,6 +326,8 @@ def run_stream(
     if K <= 1:
         for W, nv in admitted():
             with_retries(res.retry, engine.ingest, W, nv, on_retry=_count_retry)
+            # nv is host batch metadata from the prefetch generator,
+            # never a device array  # repro-lint: ignore[RL302, RL303]
             after_ingest(1, int(np.asarray(nv).max()))
     else:
         # double buffering: dispatch compute on the staged superbatch (async,
@@ -350,6 +352,7 @@ def run_stream(
                 with_retries(
                     res.retry, engine.ingest, W, nv, on_retry=_count_retry
                 )
+                # host batch metadata  # repro-lint: ignore[RL302, RL303]
                 after_ingest(1, int(np.asarray(nv).max()))
         if pending is not None:
             with_retries(
@@ -485,6 +488,7 @@ def run_signed_stream(
             )
         committed = seen
         rep.batches += 1
+        # host batch metadata  # repro-lint: ignore[RL302, RL303]
         rep.edges += int(np.max(np.asarray(item[1])))
         if report_every and engine.dyn_step % report_every == 0 and on_report:
             astep, ests, age = _answer_query(
@@ -571,6 +575,22 @@ class ElasticServeLoop:
     ``restore_tenant(tid, step=...)`` restores only what verifies.
     """
 
+    # Thread model, machine-checked by repro-lint RL40x (docs/lint.md): the
+    # consumer thread solely owns bank mutations and stats counters; the
+    # queues/events/SimpleQueues are the thread-safe channels between them;
+    # start/stop (the caller thread) own the thread handle itself.
+    _thread_ownership = {
+        "consumer": {
+            "methods": ("_run", "_apply_control", "_dispatch_ingest",
+                        "_answer_queries", "_answer_one"),
+            "attrs": ("bank", "stats"),
+        },
+        "lifecycle": {
+            "methods": ("start", "stop"),
+            "attrs": ("_thread",),
+        },
+    }
+
     def __init__(
         self,
         bank,
@@ -605,7 +625,10 @@ class ElasticServeLoop:
     def submit(self, tid, W, n_valid=None) -> bool:
         """Enqueue one batch for ``tid``. False = shed/refused (full queue
         per the queue policy, or tenant not resident)."""
-        ok = self.queues.put(tid, (np.asarray(W, np.int32), n_valid))
+        # producer-side staging of host batch data before enqueue
+        ok = self.queues.put(
+            tid, (np.asarray(W, np.int32), n_valid)  # repro-lint: ignore[RL303]
+        )
         if ok:
             self._kick()
         return ok

@@ -15,7 +15,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
+
 from jax.experimental import pallas as pl
+
+Array = jax.Array
 
 
 def _compare_exchange(k, v, j, stage):
@@ -50,7 +53,9 @@ def _bitonic_kernel(k_ref, v_ref, ko_ref, vo_ref, *, log_n: int):
 
 
 @functools.partial(jax.jit, static_argnames=("tile", "interpret"))
-def bitonic_sort_tiles(keys, values, *, tile: int = 1024, interpret: bool = True):
+def bitonic_sort_tiles(
+    keys: Array, values: Array, *, tile: int = 1024, interpret: bool = True
+) -> tuple[Array, Array]:
     """Sort each consecutive ``tile`` of (keys, values) independently.
 
     keys: (n,) with n padded to a power-of-two tile; pad with +INF to keep real

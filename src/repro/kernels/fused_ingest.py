@@ -30,10 +30,13 @@ import functools
 
 import jax
 import jax.numpy as jnp
+
 from jax.experimental import pallas as pl
 
 from repro.primitives.ingest import randint_from_bits
 from repro.primitives.sort import pack2
+
+Array = jax.Array
 
 
 def _count_lt(keys, q):
@@ -157,11 +160,13 @@ def _fused_ingest_kernel(
     jax.jit, static_argnames=("est_block", "interpret")
 )
 def fused_ingest(
-    f1, chi, f2, has_f3,
-    key_desc, key_rank, src, dst, pos, ekey, epos,
-    replace, w_sel, f1_bpos, coin, phi_hi, phi_lo,
+    f1: Array, chi: Array, f2: Array, has_f3: Array,
+    key_desc: Array, key_rank: Array, src: Array, dst: Array, pos: Array,
+    ekey: Array, epos: Array,
+    replace: Array, w_sel: Array, f1_bpos: Array, coin: Array,
+    phi_hi: Array, phi_lo: Array,
     *, est_block: int = 256, interpret: bool = True,
-):
+) -> tuple[Array, Array, Array, Array]:
     """Apply a K-batch chunk to the estimator state in one resident kernel.
 
     State: f1/f2 (r, 2) int32, chi (r,) int32, has_f3 (r,) bool. Structures

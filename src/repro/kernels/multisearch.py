@@ -19,7 +19,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
+
 from jax.experimental import pallas as pl
+
+Array = jax.Array
 
 
 def _count_kernel(k_ref, q_ref, lt_ref, le_ref):
@@ -42,13 +45,13 @@ def _count_kernel(k_ref, q_ref, lt_ref, le_ref):
     jax.jit, static_argnames=("q_block", "k_block", "interpret")
 )
 def multisearch_counts(
-    sorted_keys,
-    queries,
+    sorted_keys: Array,
+    queries: Array,
     *,
     q_block: int = 256,
     k_block: int = 2048,
     interpret: bool = True,
-):
+) -> tuple[Array, Array]:
     """Return (count_lt, count_le) per query — the searchsorted left/right
     insertion points into ``sorted_keys`` (which must be sorted ascending).
 

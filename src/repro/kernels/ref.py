@@ -8,8 +8,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+Array = jax.Array
 
-def segscan_ref(values, flags):
+
+def segscan_ref(values: Array, flags: Array) -> Array:
     """Inclusive segmented sum scan (scan-with-reset, paper Appendix B)."""
     f = flags.astype(values.dtype)
 
@@ -22,14 +24,14 @@ def segscan_ref(values, flags):
     return out
 
 
-def multisearch_counts_ref(sorted_keys, queries):
+def multisearch_counts_ref(sorted_keys: Array, queries: Array) -> tuple[Array, Array]:
     """(count_lt, count_le) == searchsorted left/right insertion points."""
     lt = jnp.searchsorted(sorted_keys, queries, side="left").astype(jnp.int32)
     le = jnp.searchsorted(sorted_keys, queries, side="right").astype(jnp.int32)
     return lt, le
 
 
-def bitonic_sort_tiles_ref(keys, values, tile):
+def bitonic_sort_tiles_ref(keys: Array, values: Array, tile: int) -> tuple[Array, Array]:
     """Sort each consecutive tile of (keys, values) independently by key.
 
     Contract note (found by the PR 8 differential harness): this oracle's
@@ -59,14 +61,14 @@ def bitonic_sort_tiles_ref(keys, values, tile):
     return ks, vs
 
 
-def segment_sum_ref(values, segment_ids, num_segments):
+def segment_sum_ref(values: Array, segment_ids: Array, num_segments: int) -> Array:
     """jax.ops.segment_sum with out-of-range ids dropped."""
     return jax.ops.segment_sum(
         values, segment_ids, num_segments, indices_are_sorted=False
     )
 
 
-def fused_ingest_ref(state, Ws, n_valids, key, step0=0):
+def fused_ingest_ref(state, Ws: Array, n_valids: Array, key: Array, step0: int = 0):
     """Chunk-ingest oracle: the sequential scan of ``bulk_update_all``.
 
     The fused ingest kernel (and the fused XLA path) must be bit-identical
@@ -80,7 +82,7 @@ def fused_ingest_ref(state, Ws, n_valids, key, step0=0):
     return _bulk_update_chunk_scan(state, Ws, n_valids, key, step0)
 
 
-def delete_hits_ref(sorted_delete_keys, queries):
+def delete_hits_ref(sorted_delete_keys: Array, queries: Array) -> Array:
     """Membership of canonical edge ``queries`` in a sorted deletion-key
     batch — the contract of the turnstile delete probe (PR 6 path, which
     this oracle file predated; pinned by tests/test_kernel_oracle.py).
@@ -91,7 +93,7 @@ def delete_hits_ref(sorted_delete_keys, queries):
     return le > lt
 
 
-def moe_dispatch_ref(expert_idx, capacity, n_experts):
+def moe_dispatch_ref(expert_idx: Array, capacity: int, n_experts: int) -> tuple[Array, Array]:
     """(slot, keep): slot of each token within its expert's capacity buckets.
 
     slot = rank of the token among same-expert tokens (arrival order); tokens

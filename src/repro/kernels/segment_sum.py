@@ -16,7 +16,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
+
 from jax.experimental import pallas as pl
+
+Array = jax.Array
 
 
 def _segsum_kernel(ids_ref, v_ref, out_ref, *, out_block: int):
@@ -40,14 +43,14 @@ def _segsum_kernel(ids_ref, v_ref, out_ref, *, out_block: int):
     jax.jit, static_argnames=("num_segments", "v_block", "out_block", "interpret")
 )
 def segment_sum_kernel(
-    values,  # (n, d)
-    segment_ids,  # (n,) int32; out-of-range ids are dropped
+    values: Array,  # (n, d)
+    segment_ids: Array,  # (n,) int32; out-of-range ids are dropped
     num_segments: int,
     *,
     v_block: int = 1024,
     out_block: int = 256,
     interpret: bool = True,
-):
+) -> Array:
     n, d = values.shape
     if num_segments == 0:
         return jnp.zeros((0, d), values.dtype)

@@ -16,8 +16,11 @@ import functools
 
 import jax
 import jax.numpy as jnp
+
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
 
 LANE = 128  # TPU lane width; blocks are multiples of this
 
@@ -55,7 +58,9 @@ def _segscan_kernel(v_ref, f_ref, out_ref, carry_v, carry_f):
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
-def segscan(values, flags, *, block: int = 1024, interpret: bool = True):
+def segscan(
+    values: Array, flags: Array, *, block: int = 1024, interpret: bool = True
+) -> Array:
     """Inclusive segmented sum scan. flags: nonzero where a segment starts.
 
     values: (n,) int32/float32; flags: (n,) bool/int32. n padded to block.

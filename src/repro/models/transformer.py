@@ -399,7 +399,7 @@ def _layer_params(p, cfg):
     """Split stacked params into the per-layer pytree used under scan."""
     keys = [
         k
-        for k in p.keys()
+        for k in p
         if k
         not in ("embed", "unembed", "pos_embed", "ln_f", "ln_f_b")
     ]

@@ -40,6 +40,9 @@ import os
 import jax
 import jax.numpy as jnp
 
+Array = jax.Array
+
+
 INGEST_BACKENDS = ("auto", "xla", "pallas", "scan")
 
 _backend = os.environ.get("REPRO_INGEST_BACKEND", "auto")
@@ -69,7 +72,7 @@ def ingest_backend() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "xla"
 
 
-def split_randint_key(key):
+def split_randint_key(key: Array) -> tuple[Array, Array]:
     """The (bits_hi_key, bits_lo_key) pair ``jax.random.randint`` derives
     internally from its key — draw ``jax.random.bits`` on each to hoist a
     randint's raw bits out of a scan/kernel."""
@@ -77,7 +80,7 @@ def split_randint_key(key):
     return k_hi, k_lo
 
 
-def randint_from_bits(hi_bits, lo_bits, maxval):
+def randint_from_bits(hi_bits: Array, lo_bits: Array, maxval: Array) -> Array:
     """``jax.random.randint(key, shape, 0, maxval, dtype=int32)`` replayed on
     pre-drawn 32-bit words (``hi_bits``/``lo_bits`` from ``jax.random.bits``
     on ``split_randint_key(key)``).

@@ -18,8 +18,13 @@ from __future__ import annotations
 
 import os
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
+
+Array = jax.Array
+
 
 MULTISEARCH_BACKENDS = ("auto", "xla", "pallas")
 
@@ -66,7 +71,7 @@ def multisearch_backend() -> str:
 _XLA_SEARCH_METHOD = "scan"
 
 
-def multisearch_bounds(sorted_keys, queries):
+def multisearch_bounds(sorted_keys: Array, queries: Array) -> tuple[Array, Array]:
     """(count_lt, count_le) per query: the searchsorted left/right insertion
     points into ``sorted_keys``, int32, answered in one fused multisearch.
 
@@ -89,7 +94,7 @@ def multisearch_bounds(sorted_keys, queries):
     return lt, le
 
 
-def multisearch_lt(sorted_keys, queries):
+def multisearch_lt(sorted_keys: Array, queries: Array) -> Array:
     """count_lt only — the left insertion point, int32.
 
     The fused ingest pipeline (repro.core.bulk) proves several of its ``le``
@@ -108,7 +113,9 @@ def multisearch_lt(sorted_keys, queries):
     ).astype(jnp.int32)
 
 
-def exact_multisearch(sorted_keys, queries, valid_n=None):
+def exact_multisearch(
+    sorted_keys: Array, queries: Array, valid_n: Optional[Array] = None
+) -> tuple[Array, Array]:
     """For each query key, the index of a matching entry in sorted_keys, or -1.
 
     ``valid_n``: optional scalar — only the first ``valid_n`` entries are real
@@ -123,14 +130,14 @@ def exact_multisearch(sorted_keys, queries, valid_n=None):
     return jnp.where(found, i_c, -1), found
 
 
-def count_eq(sorted_keys, queries):
+def count_eq(sorted_keys: Array, queries: Array) -> Array:
     """Number of entries equal to each query key (degree queries)."""
     lo = jnp.searchsorted(sorted_keys, queries, side="left")
     hi = jnp.searchsorted(sorted_keys, queries, side="right")
     return (hi - lo).astype(jnp.int32)
 
 
-def predecessor_multisearch(sorted_keys, queries):
+def predecessor_multisearch(sorted_keys: Array, queries: Array) -> Array:
     """Index of the entry with the largest key <= query, or -1 (predEQMultiSearch)."""
     i = jnp.searchsorted(sorted_keys, queries, side="right") - 1
     return i  # -1 when every key > query

@@ -5,11 +5,15 @@
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
+Array = jax.Array
 
-def segment_starts(sorted_keys, valid=None):
+
+def segment_starts(sorted_keys: Array, valid: Optional[Array] = None) -> Array:
     """Boolean array: True where a new segment of equal keys begins.
 
     ``sorted_keys`` must be sorted. Invalid tail entries (``valid`` False) are
@@ -24,7 +28,7 @@ def segment_starts(sorted_keys, valid=None):
     return starts
 
 
-def segmented_iota(starts):
+def segmented_iota(starts: Array) -> Array:
     """Offset of each element within its segment (0,1,2,... restarting at starts).
 
     Implemented with a single inclusive cummax over start indices — O(n) work,
@@ -37,7 +41,7 @@ def segmented_iota(starts):
     return (idx - seg_start).astype(jnp.int32)
 
 
-def segmented_cummax(values, starts):
+def segmented_cummax(values: Array, starts: Array) -> Array:
     """Inclusive segmented running maximum (reset at each start flag).
 
     Used by the kernel-backed closing-edge index build: a bitonic tile sort
@@ -57,7 +61,7 @@ def segmented_cummax(values, starts):
     return out
 
 
-def segmented_sum_scan(values, starts):
+def segmented_sum_scan(values: Array, starts: Array) -> Array:
     """Inclusive segmented sum scan via associative_scan (paper Appendix B).
 
     combine((v1,f1),(v2,f2)) = (v2 + (1-f2)*v1, f1|f2).

@@ -7,27 +7,30 @@ a single variadic sort HLO.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
+Array = jax.Array
 
-def pack2(hi, lo):
+
+def pack2(hi: Array, lo: Array) -> Array:
     """Pack two non-negative int32 fields into one int64 key: (hi << 32) | lo."""
     return (hi.astype(jnp.int64) << 32) | lo.astype(jnp.int64)
 
 
-def unpack2(key):
+def unpack2(key: Array) -> tuple[Array, Array]:
     """Inverse of pack2."""
     hi = (key >> 32).astype(jnp.int32)
     lo = (key & jnp.int64(0xFFFFFFFF)).astype(jnp.int32)
     return hi, lo
 
 
-def composite_key(major, minor, minor_bound):
+def composite_key(major: Array, minor: Array, minor_bound: int) -> Array:
     """major * minor_bound + minor, as int64. Requires 0 <= minor < minor_bound."""
     return major.astype(jnp.int64) * jnp.int64(minor_bound) + minor.astype(jnp.int64)
 
 
-def sort_by_key(keys, *values):
+def sort_by_key(keys: Array, *values: Array) -> tuple[Array, ...]:
     """Sort ``keys`` ascending; apply the same permutation to each of ``values``.
 
     Returns ``(sorted_keys, sorted_values...)``. Uses a single argsort so the

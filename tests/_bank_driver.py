@@ -47,7 +47,7 @@ SCHEME_KW = {
 
 
 def cfg(scheme="global", **kw):
-    base = dict(r=R, batch_size=S, n_tenants=T, seeds=SEEDS)
+    base = {"r": R, "batch_size": S, "n_tenants": T, "seeds": SEEDS}
     base.update(SCHEME_KW[scheme])
     base.update(kw)
     return EngineConfig(**base)

@@ -42,7 +42,7 @@ BANK_FIELDS = ("f1", "chi", "f2", "has_f3", "m_seen", "step", "dyn_step",
 
 
 def cfg(**kw):
-    base = dict(r=R, batch_size=S, n_tenants=T, seeds=SEEDS)
+    base = {"r": R, "batch_size": S, "n_tenants": T, "seeds": SEEDS}
     base.update(kw)
     return EngineConfig(**base)
 
@@ -172,8 +172,8 @@ def main():
         [edges, np.ones((len(edges), 1), edges.dtype)], 1
     ).astype(np.int32)
     sweeps = [
-        (mesh_2d, dict(), "2x2"),
-        (mesh_flat, dict(n_tenants=1, seeds=(11,)), "shardmap"),
+        (mesh_2d, {}, "2x2"),
+        (mesh_flat, {"n_tenants": 1, "seeds": (11,)}, "shardmap"),
     ]
     for mesh, kw, ctx in sweeps:
         plain = TriangleCountEngine(cfg(**kw), mesh=mesh)

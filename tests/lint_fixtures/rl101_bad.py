@@ -1,0 +1,12 @@
+"""Fixture: host side effect inside a traced function (RL101 fires)."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def step(x):
+    print("step", x)      # host side effect baked in at trace time
+    time.sleep(0.1)       # runs once, at trace time, never again
+    return jnp.sum(x)

@@ -1,0 +1,8 @@
+"""Fixture: pure traced function (RL101 silent)."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def step(x):
+    return jnp.sum(x * 2)

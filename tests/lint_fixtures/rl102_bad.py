@@ -1,0 +1,14 @@
+"""Fixture: closed-over mutation inside a traced function (RL102 fires)."""
+import jax
+import jax.numpy as jnp
+
+_calls = []
+_count = 0
+
+
+@jax.jit
+def step(x):
+    global _count
+    _count += 1           # trace-time-only mutation
+    _calls.append(x)      # tracer leaks into host state
+    return jnp.sum(x)

@@ -1,0 +1,8 @@
+"""Fixture: state threaded functionally (RL102 silent)."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def step(carry, x):
+    return carry + 1, jnp.sum(x)

@@ -1,0 +1,8 @@
+"""Fixture: NumPy call on a traced value (RL103 fires)."""
+import jax
+import numpy as np
+
+
+@jax.jit
+def step(x):
+    return np.mean(x)     # forces the tracer to host; crashes or constant-folds

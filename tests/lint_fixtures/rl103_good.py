@@ -1,0 +1,9 @@
+"""Fixture: jnp on traced values, np only for static dtype helpers (silent)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def step(x):
+    return jnp.mean(x.astype(np.float32))

@@ -1,0 +1,7 @@
+"""Fixture: sampler key manufactured by arithmetic (RL201 fires)."""
+import jax
+
+
+def draw(base, i):
+    key = base + i        # key arithmetic is not a derivation
+    return jax.random.uniform(key, (4,))

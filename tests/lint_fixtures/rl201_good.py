@@ -1,0 +1,7 @@
+"""Fixture: counter-derived key (RL201 silent)."""
+import jax
+
+
+def draw(base, i):
+    key = jax.random.fold_in(base, i)
+    return jax.random.uniform(key, (4,))

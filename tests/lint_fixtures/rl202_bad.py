@@ -1,0 +1,8 @@
+"""Fixture: one key feeds two samplers (RL202 fires)."""
+import jax
+
+
+def draw(key):
+    a = jax.random.uniform(key, (4,))
+    b = jax.random.normal(key, (4,))   # correlated with a: replay breaks
+    return a, b

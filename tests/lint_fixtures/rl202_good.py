@@ -1,0 +1,9 @@
+"""Fixture: split between samplers (RL202 silent)."""
+import jax
+
+
+def draw(key):
+    k1, k2 = jax.random.split(key)
+    a = jax.random.uniform(k1, (4,))
+    b = jax.random.normal(k2, (4,))
+    return a, b

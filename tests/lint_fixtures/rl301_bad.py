@@ -1,0 +1,5 @@
+"""Fixture: .item() in a hot path (RL301 fires)."""
+
+
+def answer(est):
+    return est.item()     # blocks the dispatch pipeline on a device sync

@@ -1,0 +1,6 @@
+"""Fixture: int() over an array expression (RL302 fires)."""
+import numpy as np
+
+
+def count(v):
+    return int(np.asarray(v).max())

@@ -1,0 +1,5 @@
+"""Fixture: int() over host scalars only (RL302 silent)."""
+
+
+def count(n):
+    return int(n)

@@ -1,0 +1,6 @@
+"""Fixture: full-array device->host copy in a hot path (RL303 fires)."""
+import numpy as np
+
+
+def hot(state):
+    return np.asarray(state.m_seen)[0]

@@ -1,0 +1,7 @@
+"""Fixture: index on device, host-literal asarray allowed (RL303 silent)."""
+import numpy as np
+
+
+def hot(state, idx):
+    host_idx = np.asarray([1, 2, 3])   # host-literal construction is fine
+    return state.m_seen[idx], host_idx

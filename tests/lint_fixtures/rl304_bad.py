@@ -1,0 +1,9 @@
+"""Fixture: Python iteration over a device array (RL304 fires)."""
+import jax.numpy as jnp
+
+
+def walk(n):
+    total = 0
+    for x in jnp.arange(n):     # one device->host transfer per element
+        total += x
+    return total

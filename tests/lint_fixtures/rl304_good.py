@@ -1,0 +1,8 @@
+"""Fixture: host range drives the loop (RL304 silent)."""
+
+
+def walk(n):
+    total = 0
+    for x in range(n):
+        total += x
+    return total

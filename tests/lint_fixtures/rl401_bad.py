@@ -1,0 +1,9 @@
+"""Fixture: thread-crossing class without a declaration (RL401 fires)."""
+
+
+class PrefetchQueue:
+    def __init__(self):
+        self.done = False
+
+    def get(self):
+        return self.done

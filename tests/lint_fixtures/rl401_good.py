@@ -1,0 +1,13 @@
+"""Fixture: the ownership convention declared (RL401 silent)."""
+
+
+class PrefetchQueue:
+    _thread_ownership = {
+        "producer": {"methods": ("_produce",), "attrs": ("done",)},
+    }
+
+    def __init__(self):
+        self.done = False
+
+    def _produce(self):
+        self.done = True

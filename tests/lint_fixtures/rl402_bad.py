@@ -1,0 +1,17 @@
+"""Fixture: owned attribute written from a non-owner method (RL402 fires)."""
+
+
+class Loop:
+    _thread_ownership = {
+        "consumer": {"methods": ("_run",), "attrs": ("bank", "stats")},
+    }
+
+    def __init__(self):
+        self.bank = object()
+        self.stats = {}
+
+    def _run(self):
+        self.stats["ticks"] = 1
+
+    def submit(self, item):
+        self.stats["batches"] = 2   # producer thread touching consumer state

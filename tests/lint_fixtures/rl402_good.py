@@ -1,0 +1,17 @@
+"""Fixture: owned attributes written only by the owner (RL402 silent)."""
+
+
+class Loop:
+    _thread_ownership = {
+        "consumer": {"methods": ("_run",), "attrs": ("bank", "stats")},
+    }
+
+    def __init__(self):
+        self.bank = object()
+        self.stats = {}
+
+    def _run(self):
+        self.stats["ticks"] = 1
+
+    def submit(self, item):
+        return item   # producers only talk through queues

@@ -1,0 +1,13 @@
+"""Fixture: lock-guarded attribute accessed lock-free (RL403 fires)."""
+import threading
+
+
+class Queues:
+    _lock_guarded = ("_queues",)
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._queues = {}
+
+    def backlog(self):
+        return len(self._queues)    # racy read outside the lock

@@ -1,0 +1,14 @@
+"""Fixture: every access under the lock (RL403 silent)."""
+import threading
+
+
+class Queues:
+    _lock_guarded = ("_queues",)
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._queues = {}
+
+    def backlog(self):
+        with self._lock:
+            return len(self._queues)

@@ -1,0 +1,12 @@
+"""Fixture: traced values in launch geometry (RL501 fires)."""
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def launch(kernel, x, n):
+    return pl.pallas_call(
+        kernel,
+        grid=(jnp.asarray(n) // 8,),                    # traced grid dim
+        in_specs=[pl.BlockSpec((jnp.int32(8),), lambda i: (i,))],
+        out_shape=None,
+    )(x)

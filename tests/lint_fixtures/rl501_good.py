@@ -1,0 +1,11 @@
+"""Fixture: Python-int launch geometry (RL501 silent)."""
+from jax.experimental import pallas as pl
+
+
+def launch(kernel, x, n, block=8):
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_shape=None,
+    )(x)

@@ -1,0 +1,7 @@
+"""Fixture: Python branch on a tracer inside a kernel (RL502 fires)."""
+
+
+def _kernel(x_ref, o_ref):
+    v = x_ref[0]
+    if v > 0:              # tracer truthiness: trace error / wrong program
+        o_ref[0] = v

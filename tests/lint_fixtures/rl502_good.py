@@ -1,0 +1,11 @@
+"""Fixture: pl.when / jnp.where instead of Python control flow (silent)."""
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    v = x_ref[0]
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[0] = jnp.where(v > 0, v, 0)

@@ -1,0 +1,2 @@
+def foo_op(x):
+    return x

@@ -1,0 +1,1 @@
+# oracle: nothing registered

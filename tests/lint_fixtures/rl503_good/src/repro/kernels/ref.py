@@ -1,0 +1,2 @@
+def foo_ref():
+    pass

@@ -1,0 +1,3 @@
+from repro.kernels import ops
+
+ops.foo_op

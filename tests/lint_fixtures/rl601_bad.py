@@ -1,0 +1,6 @@
+"""Fixture: hand-written axis literal in a builder spec (RL601 fires)."""
+from jax.sharding import PartitionSpec as P
+
+
+def make_update(mesh):
+    return P("tenants", None)     # breaks on every other mesh shape

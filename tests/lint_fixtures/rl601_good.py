@@ -1,0 +1,7 @@
+"""Fixture: axis names flow from the scheme's axis roles (RL601 silent)."""
+from jax.sharding import PartitionSpec as P
+
+
+def make_update(mesh, axis_roles):
+    t = axis_roles["tenant"]
+    return P(t, None)

@@ -1,0 +1,9 @@
+"""Fixture: inline suppression silences a deliberate boundary sync."""
+
+
+def answer(est):
+    return est.item()  # repro-lint: ignore[RL301] the answer itself crosses
+
+def answer2(est):
+    # one scalar by design  # repro-lint: ignore[RL301]
+    return est.item()

@@ -10,8 +10,10 @@ import pytest
 from repro.configs import cells
 
 
-def materialize(sds_tree, key=jax.random.PRNGKey(0)):
+def materialize(sds_tree, key=None):
     """Concrete random arrays matching a ShapeDtypeStruct tree."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
     leaves, treedef = jax.tree.flatten(sds_tree)
     out = []
     for i, leaf in enumerate(leaves):

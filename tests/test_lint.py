@@ -1,0 +1,89 @@
+"""repro-lint contract tests.
+
+Three guarantees, all tier-1:
+
+1. every registered rule fires on its bad fixture and stays silent on its
+   good fixture (``tests/lint_fixtures/rlNNN_{bad,good}.py``) — a rule that
+   can't catch its own counterexample is dead weight;
+2. the inline suppression syntax and the baseline ratchet behave;
+3. the repo itself lints clean against the committed baseline — the same
+   invocation CI runs (``python -m tools.lint``).
+"""
+import pathlib
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT))
+
+from tools.lint import all_rules, lint_file, lint_repo, load_baseline  # noqa: E402
+from tools.lint.core import apply_baseline  # noqa: E402
+from tools.lint.rules.pallas_rules import check_oracle_registration  # noqa: E402
+
+FIXTURES = ROOT / "tests" / "lint_fixtures"
+
+# rules checked through per-file fixtures (RL503 is project-level, below)
+FILE_RULES = sorted(set(all_rules()) - {"RL503"})
+
+
+@pytest.mark.parametrize("rule_id", FILE_RULES)
+def test_rule_fires_on_bad_fixture(rule_id):
+    bad = FIXTURES / f"{rule_id.lower()}_bad.py"
+    assert bad.exists(), f"missing bad fixture for {rule_id}"
+    findings = lint_file(bad, rule_ids=[rule_id], force=True)
+    assert any(f.rule == rule_id for f in findings), (
+        f"{rule_id} did not fire on its bad fixture"
+    )
+
+
+@pytest.mark.parametrize("rule_id", FILE_RULES)
+def test_rule_passes_good_fixture(rule_id):
+    good = FIXTURES / f"{rule_id.lower()}_good.py"
+    assert good.exists(), f"missing good fixture for {rule_id}"
+    findings = lint_file(good, rule_ids=[rule_id], force=True)
+    assert not findings, (
+        f"{rule_id} false-positives on its good fixture: "
+        + "; ".join(f.render() for f in findings)
+    )
+
+
+def test_oracle_registration_fixtures():
+    good = check_oracle_registration(FIXTURES / "rl503_good")
+    bad = check_oracle_registration(FIXTURES / "rl503_bad")
+    assert not good, [f.render() for f in good]
+    assert any(f.rule == "RL503" for f in bad)
+
+
+def test_oracle_registration_repo():
+    assert check_oracle_registration(ROOT) == []
+
+
+def test_inline_suppression():
+    fixture = FIXTURES / "suppression.py"
+    findings = lint_file(fixture, rule_ids=["RL301"], force=True)
+    assert not findings, [f.render() for f in findings]
+
+
+def test_baseline_ratchet():
+    baseline = load_baseline()
+    findings = lint_repo()
+    new, baselined = apply_baseline(findings, baseline)
+    assert not new, "new findings:\n" + "\n".join(f.render() for f in new)
+    # one-directional: the run can never exceed what the baseline records
+    assert len(findings) <= len(baseline) + 0 or not findings
+
+
+def test_repo_lints_clean():
+    """The exact contract CI enforces: zero non-baselined findings."""
+    baseline = load_baseline()
+    new, _ = apply_baseline(lint_repo(), baseline)
+    assert not new, "\n".join(f.render() for f in new)
+
+
+def test_every_rule_has_fixture_pair():
+    for rule_id in FILE_RULES:
+        for kind in ("bad", "good"):
+            assert (FIXTURES / f"{rule_id.lower()}_{kind}.py").exists(), (
+                f"{rule_id} is registered but has no {kind} fixture"
+            )

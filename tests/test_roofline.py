@@ -102,8 +102,8 @@ class TestAnalyticFlops:
     def test_moe_scales_with_capacity(self):
         from repro.models.transformer import MoESettings, TransformerConfig
 
-        base = dict(name="m", n_layers=2, d_model=64, n_heads=2, n_kv_heads=2,
-                    d_ff=128, vocab=100)
+        base = {"name": "m", "n_layers": 2, "d_model": 64, "n_heads": 2,
+                "n_kv_heads": 2, "d_ff": 128, "vocab": 100}
         c1 = TransformerConfig(**base, moe=MoESettings(8, 2, 64, 0, 1.0))
         c2 = TransformerConfig(**base, moe=MoESettings(8, 2, 64, 0, 2.0))
         assert lm_flops(c2, "prefill", 4, 128) > lm_flops(c1, "prefill", 4, 128)

@@ -206,7 +206,7 @@ class TestLocalScheme:
         """The local scheme's ingest IS the paper's bulkUpdateAll — same
         seeds give byte-identical state; only the query differs."""
         edges = erdos_renyi_stream(25, 150, seed=3)
-        kw = dict(r=R, batch_size=BS, n_tenants=2, seeds=(7, 8))
+        kw = {"r": R, "batch_size": BS, "n_tenants": 2, "seeds": (7, 8)}
         g = TriangleCountEngine(EngineConfig(**kw))
         loc = TriangleCountEngine(EngineConfig(
             **kw, scheme="local",

@@ -34,7 +34,11 @@ Checks:
      surface (bounded queues, degraded queries, per-tenant snapshots), and
      the CLI/bench knobs; docs/engine.md and docs/robustness.md must link
      to it — an elastic knob or lifecycle verb is a documentation
-     contract.
+     contract;
+  9. every repro-lint rule ID registered in ``tools.lint`` appears
+     backticked in the docs/lint.md catalog, along with the suppression
+     and baseline vocabulary — registering a rule is a documentation
+     contract too.
 
   PYTHONPATH=src python tools/check_docs.py
 """
@@ -241,6 +245,28 @@ def check_serving_coverage() -> list[str]:
     return errors
 
 
+def check_lint_coverage() -> list[str]:
+    """docs/lint.md must catalog every registered repro-lint rule ID plus
+    the suppression/ratchet vocabulary — an undocumented rule is a CI
+    failure nobody can look up."""
+    sys.path.insert(0, str(ROOT))
+    from tools.lint import all_rules
+
+    text = (ROOT / "docs" / "lint.md").read_text()
+    errors = [
+        f"docs/lint.md: registered lint rule `{rid}` is not documented"
+        for rid in sorted(all_rules())
+        if f"`{rid}`" not in text
+    ]
+    errors += [
+        f"docs/lint.md: lint docs are missing {tok}"
+        for tok in ("repro-lint: ignore[", "baseline", "`python -m tools.lint`",
+                    "tests/lint_fixtures")
+        if tok not in text
+    ]
+    return errors
+
+
 def main() -> int:
     errors = (
         check_links()
@@ -251,6 +277,7 @@ def main() -> int:
         + check_robustness_coverage()
         + check_kernel_coverage()
         + check_serving_coverage()
+        + check_lint_coverage()
     )
     for e in errors:
         print(e, file=sys.stderr)

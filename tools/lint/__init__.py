@@ -1,0 +1,17 @@
+"""repro-lint: project-specific static analysis for the repo's invariants.
+
+See docs/lint.md for the rule catalog and tools/lint/core.py for the
+framework. Public surface:
+
+    from tools.lint import all_rules, lint_file, lint_repo
+"""
+from tools.lint.core import (  # noqa: F401
+    BASELINE_PATH,
+    FileContext,
+    Finding,
+    Rule,
+    all_rules,
+    lint_file,
+    lint_repo,
+    load_baseline,
+)

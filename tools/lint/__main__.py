@@ -1,0 +1,121 @@
+"""repro-lint CLI.
+
+    python -m tools.lint                     # repo-wide, baseline ratchet
+    python -m tools.lint src/repro/core/bulk.py tests/foo.py
+    python -m tools.lint --select RL301,RL302
+    python -m tools.lint --json findings.json
+    python -m tools.lint --no-baseline       # raw findings, no ratchet
+
+Exit codes: 0 clean (every finding baselined, baseline did not grow),
+1 findings, 2 usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+from tools.lint.core import (
+    BASELINE_PATH,
+    ROOT,
+    all_rules,
+    apply_baseline,
+    lint_file,
+    lint_repo,
+    load_baseline,
+)
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(prog="python -m tools.lint")
+    parser.add_argument("paths", nargs="*", help="files to lint (default: repo)")
+    parser.add_argument("--select", help="comma-separated rule IDs")
+    parser.add_argument("--json", dest="json_out", help="write findings JSON")
+    parser.add_argument(
+        "--baseline", default=str(BASELINE_PATH), help="baseline file"
+    )
+    parser.add_argument(
+        "--no-baseline", action="store_true", help="ignore the baseline"
+    )
+    parser.add_argument(
+        "--list-rules", action="store_true", help="print the rule catalog"
+    )
+    args = parser.parse_args(argv)
+
+    rules = all_rules()
+    if args.list_rules:
+        for rid in sorted(rules):
+            print(f"{rid}  {rules[rid].summary}")
+        return 0
+
+    rule_ids = None
+    if args.select:
+        rule_ids = [r.strip() for r in args.select.split(",") if r.strip()]
+        unknown = [r for r in rule_ids if r not in rules]
+        if unknown:
+            print(f"unknown rule id(s): {', '.join(unknown)}", file=sys.stderr)
+            return 2
+
+    if args.paths:
+        findings = []
+        for p in args.paths:
+            path = pathlib.Path(p)
+            if not path.exists():
+                print(f"no such file: {p}", file=sys.stderr)
+                return 2
+            findings.extend(lint_file(path, rule_ids=rule_ids))
+        findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    else:
+        findings = lint_repo(rule_ids=rule_ids)
+
+    baseline = (
+        set() if args.no_baseline else load_baseline(pathlib.Path(args.baseline))
+    )
+    new, baselined = apply_baseline(findings, baseline)
+
+    if args.json_out:
+        payload = {
+            "total": len(findings),
+            "baselined": baselined,
+            "new": len(new),
+            "baseline_size": len(baseline),
+            "findings": [
+                {
+                    "rule": f.rule,
+                    "path": f.path,
+                    "line": f.line,
+                    "col": f.col,
+                    "message": f.message,
+                    "key": f.key,
+                    "baselined": f.key in baseline,
+                }
+                for f in findings
+            ],
+        }
+        pathlib.Path(args.json_out).write_text(json.dumps(payload, indent=2))
+
+    for f in new:
+        print(f.render())
+
+    # the ratchet: new findings fail, and so does a baseline that has grown
+    # stale enough to exceed its recorded size (it may only shrink)
+    if new:
+        print(
+            f"\nrepro-lint: {len(new)} new finding(s) "
+            f"({baselined} baselined) — fix them or, for an intentional "
+            "boundary, annotate `# repro-lint: ignore[RULE] why`",
+            file=sys.stderr,
+        )
+        return 1
+    nfiles = len(args.paths) if args.paths else "repo"
+    print(
+        f"repro-lint OK ({nfiles}): {len(findings)} finding(s), "
+        f"{baselined} baselined, {len(all_rules())} rules"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, str(ROOT))
+    sys.exit(main())

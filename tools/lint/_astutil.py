@@ -1,0 +1,86 @@
+"""Shared AST helpers for repro-lint rules."""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+
+def dotted(node: ast.AST) -> str | None:
+    """'jax.random.split' for an Attribute/Name chain, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(node: ast.Call) -> str | None:
+    return dotted(node.func)
+
+
+def walk_calls(node: ast.AST) -> Iterator[ast.Call]:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            yield sub
+
+
+def func_defs(tree: ast.AST) -> list[ast.FunctionDef | ast.AsyncFunctionDef]:
+    return [
+        n
+        for n in ast.walk(tree)
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+    ]
+
+
+def decorator_names(fn: ast.FunctionDef | ast.AsyncFunctionDef) -> list[str]:
+    """Dotted names of decorators, looking through calls: for
+    ``@partial(jax.jit, ...)`` yields both 'partial' and 'jax.jit'."""
+    out: list[str] = []
+    for dec in fn.decorator_list:
+        name = dotted(dec)
+        if name:
+            out.append(name)
+        if isinstance(dec, ast.Call):
+            name = call_name(dec)
+            if name:
+                out.append(name)
+            for arg in dec.args:
+                inner = dotted(arg)
+                if inner:
+                    out.append(inner)
+    return out
+
+
+def assigned_names(target: ast.AST) -> list[str]:
+    """Flat names bound by an assignment target (handles tuple unpack)."""
+    if isinstance(target, ast.Name):
+        return [target.id]
+    if isinstance(target, (ast.Tuple, ast.List)):
+        out: list[str] = []
+        for elt in target.elts:
+            out.extend(assigned_names(elt))
+        return out
+    return []
+
+
+def self_attr(node: ast.AST) -> str | None:
+    """'x' if node is ``self.x``, else None."""
+    if (
+        isinstance(node, ast.Attribute)
+        and isinstance(node.value, ast.Name)
+        and node.value.id == "self"
+    ):
+        return node.attr
+    return None
+
+
+def literal_strings(node: ast.AST) -> list[str]:
+    """String constants in a (possibly nested) literal expression."""
+    return [
+        n.value
+        for n in ast.walk(node)
+        if isinstance(n, ast.Constant) and isinstance(n.value, str)
+    ]

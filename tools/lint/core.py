@@ -1,0 +1,193 @@
+"""repro-lint core: findings, suppression, baseline ratchet, file walking.
+
+The checker enforces the repo's *semantic* conventions — the invariants the
+paper's guarantees ride on (trace purity, counter-based RNG cursors, consumer
+thread ownership, static Pallas grids, axis-role sharding provenance) — the
+way ``tools/check_docs.py`` enforces the documentation contracts.
+
+Suppression syntax (same line, or an immediately preceding comment-only line):
+
+    x = int(np.asarray(v))  # repro-lint: ignore[RL302] snapshot boundary
+
+Baseline: ``tools/lint/baseline.json`` holds known findings keyed by
+``path::rule::line``. The ratchet is one-directional — a finding may leave
+the baseline (fixed) but a run that produces a non-baselined finding, or more
+findings than the baseline records, fails. The committed baseline is empty:
+the repo lints clean and must stay that way.
+"""
+from __future__ import annotations
+
+import ast
+import json
+import pathlib
+import re
+from dataclasses import dataclass, field
+from typing import Callable, Iterable
+
+ROOT = pathlib.Path(__file__).resolve().parents[2]
+
+_SUPPRESS = re.compile(r"#\s*repro-lint:\s*ignore\[([A-Z0-9,\s]+)\]")
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str  # repo-relative, forward slashes
+    line: int
+    col: int
+    message: str
+
+    @property
+    def key(self) -> str:
+        return f"{self.path}::{self.rule}::{self.line}"
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+
+@dataclass
+class FileContext:
+    """Everything a rule needs about one source file."""
+
+    path: pathlib.Path
+    relpath: str
+    src: str
+    tree: ast.AST
+    lines: list[str] = field(default_factory=list)
+
+    @classmethod
+    def load(cls, path: pathlib.Path, root: pathlib.Path = ROOT) -> "FileContext":
+        src = path.read_text()
+        rel = path.resolve().relative_to(root.resolve()).as_posix()
+        return cls(
+            path=path,
+            relpath=rel,
+            src=src,
+            tree=ast.parse(src, filename=str(path)),
+            lines=src.splitlines(),
+        )
+
+
+@dataclass(frozen=True)
+class Rule:
+    """One rule family entry: stable ID, scope predicate, checker."""
+
+    rule_id: str
+    summary: str
+    applies: Callable[[str], bool]
+    check: Callable[[FileContext], list[Finding]]
+
+
+_REGISTRY: dict[str, Rule] = {}
+
+
+def register(rule: Rule) -> Rule:
+    if rule.rule_id in _REGISTRY:
+        raise ValueError(f"duplicate rule id {rule.rule_id}")
+    _REGISTRY[rule.rule_id] = rule
+    return rule
+
+
+def all_rules() -> dict[str, Rule]:
+    # import for side effect of registration
+    from tools.lint import rules  # noqa: F401
+
+    return dict(_REGISTRY)
+
+
+def suppressed_rules(lines: list[str], line: int) -> set[str]:
+    """Rule IDs suppressed at 1-based source ``line``."""
+    out: set[str] = set()
+    for idx in (line - 1, line - 2):
+        if not (0 <= idx < len(lines)):
+            continue
+        text = lines[idx]
+        # a preceding line only counts if it is comment-only
+        if idx == line - 2 and not text.lstrip().startswith("#"):
+            continue
+        for m in _SUPPRESS.finditer(text):
+            out |= {r.strip() for r in m.group(1).split(",") if r.strip()}
+    return out
+
+
+def filter_suppressed(
+    findings: Iterable[Finding], lines: list[str]
+) -> list[Finding]:
+    return [
+        f for f in findings if f.rule not in suppressed_rules(lines, f.line)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# file walking
+# ---------------------------------------------------------------------------
+_SKIP_PARTS = {"__pycache__", ".git", "lint_fixtures", ".ruff_cache"}
+
+
+def repo_files(root: pathlib.Path = ROOT) -> list[pathlib.Path]:
+    """Python files subject to repo-wide linting (fixtures excluded)."""
+    dirs = ("src", "tests", "tools", "benchmarks", "examples")
+    out: list[pathlib.Path] = []
+    for d in dirs:
+        base = root / d
+        if not base.is_dir():
+            continue
+        for p in sorted(base.rglob("*.py")):
+            if _SKIP_PARTS & set(p.parts):
+                continue
+            out.append(p)
+    return out
+
+
+def lint_file(
+    path: pathlib.Path,
+    rule_ids: list[str] | None = None,
+    root: pathlib.Path = ROOT,
+    force: bool = False,
+) -> list[Finding]:
+    """Lint one file. ``force`` skips the per-rule scope predicate (used by
+    fixture tests to point any rule at any file)."""
+    ctx = FileContext.load(path, root=root)
+    rules = all_rules()
+    ids = rule_ids if rule_ids is not None else sorted(rules)
+    findings: list[Finding] = []
+    for rid in ids:
+        rule = rules[rid]
+        if force or rule.applies(ctx.relpath):
+            findings.extend(f for f in rule.check(ctx) if f.rule == rid)
+    return filter_suppressed(findings, ctx.lines)
+
+
+def lint_repo(
+    root: pathlib.Path = ROOT, rule_ids: list[str] | None = None
+) -> list[Finding]:
+    findings: list[Finding] = []
+    for path in repo_files(root):
+        findings.extend(lint_file(path, rule_ids=rule_ids, root=root))
+    # project-level rules (cross-file) live outside the per-file loop
+    from tools.lint.rules import pallas_rules
+
+    if rule_ids is None or "RL503" in rule_ids:
+        findings.extend(pallas_rules.check_oracle_registration(root))
+    return sorted(findings, key=lambda f: (f.path, f.line, f.rule))
+
+
+# ---------------------------------------------------------------------------
+# baseline ratchet
+# ---------------------------------------------------------------------------
+BASELINE_PATH = ROOT / "tools" / "lint" / "baseline.json"
+
+
+def load_baseline(path: pathlib.Path = BASELINE_PATH) -> set[str]:
+    if not path.exists():
+        return set()
+    data = json.loads(path.read_text())
+    return {e["key"] for e in data.get("findings", [])}
+
+
+def apply_baseline(
+    findings: list[Finding], baseline: set[str]
+) -> tuple[list[Finding], int]:
+    """Split findings into (new, baselined_count)."""
+    new = [f for f in findings if f.key not in baseline]
+    return new, len(findings) - len(new)

@@ -1,0 +1,9 @@
+"""Rule registration: importing this package registers every rule family."""
+from tools.lint.rules import (  # noqa: F401
+    host_sync,
+    pallas_rules,
+    rng,
+    sharding,
+    threads,
+    trace_purity,
+)

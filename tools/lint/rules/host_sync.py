@@ -1,0 +1,125 @@
+"""RL3xx — implicit device→host synchronization in hot-path modules.
+
+``engine/service.py``, ``engine/elastic.py`` and ``core/bulk.py`` sit on the
+ingest/query hot path: an implicit transfer there blocks the dispatch
+pipeline and serializes the serving loop on device round-trips. Transfers at
+*cold* boundaries are part of the design, so functions whose names mark them
+as snapshot/restore/report/checkpoint surfaces are exempt; anything else
+must either stay on device or carry an explicit
+``# repro-lint: ignore[RL30x]`` with a justification.
+
+* RL301 — ``.item()`` call (the canonical blocking sync).
+* RL302 — ``int()``/``float()``/``bool()`` over an expression that produces
+  an array (``np.*``/``jnp.*`` call or a ``.max()``-style reduction).
+* RL303 — ``np.asarray``/``np.array``/``np.copy``/``jax.device_get`` — each
+  one is a full-array device→host copy.
+* RL304 — Python ``for`` iterating directly over a device-array expression
+  (one transfer per element).
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.lint import _astutil as A
+from tools.lint.core import FileContext, Finding, Rule, register
+
+_HOT_MODULES = (
+    "src/repro/engine/service.py",
+    "src/repro/engine/elastic.py",
+    "src/repro/core/bulk.py",
+)
+# cold-boundary surfaces where a host sync is the intended semantics
+_COLD_MARKS = ("snapshot", "restore", "report", "checkpoint", "template")
+
+_CASTS = {"int", "float", "bool"}
+_COPIES = {"np.asarray", "np.array", "np.copy", "numpy.asarray",
+           "numpy.array", "jax.device_get", "device_get"}
+_REDUCERS = {"max", "min", "sum", "mean", "item", "argmax", "argmin", "all",
+             "any"}
+
+
+def _applies(relpath: str) -> bool:
+    return relpath in _HOT_MODULES
+
+
+def _is_cold(fn_name: str) -> bool:
+    low = fn_name.lower()
+    return any(m in low for m in _COLD_MARKS)
+
+
+def _arrayish(expr: ast.AST) -> bool:
+    """Does the expression subtree force an array into existence?"""
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Call):
+            name = A.call_name(node) or ""
+            if name.startswith(("np.", "jnp.", "numpy.", "jax.numpy.")):
+                return True
+            if (
+                isinstance(node.func, ast.Attribute)
+                and node.func.attr in _REDUCERS
+            ):
+                return True
+    return False
+
+
+def _check(ctx: FileContext) -> list[Finding]:
+    findings: list[Finding] = []
+
+    def emit(rule: str, node: ast.AST, msg: str) -> None:
+        findings.append(
+            Finding(rule, ctx.relpath, node.lineno, node.col_offset, msg)
+        )
+
+    for fn in A.func_defs(ctx.tree):
+        if _is_cold(fn.name):
+            continue
+        nested_cold = {
+            n
+            for d in A.func_defs(fn)
+            if d is not fn and _is_cold(d.name)
+            for n in ast.walk(d)
+        }
+        for node in ast.walk(fn):
+            if node in nested_cold:
+                continue
+            if isinstance(node, ast.Call):
+                name = A.call_name(node) or ""
+                if (
+                    isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "item"
+                    and not node.args
+                ):
+                    emit("RL301", node,
+                         f".item() blocks on a device sync in hot path "
+                         f"{fn.name!r}")
+                elif name in _CASTS and node.args and _arrayish(node.args[0]):
+                    emit("RL302", node,
+                         f"{name}() over an array expression is an implicit "
+                         f"device→host sync in hot path {fn.name!r}")
+                elif name in _COPIES and not (
+                    node.args
+                    and isinstance(
+                        node.args[0],
+                        (ast.List, ast.ListComp, ast.Tuple, ast.Dict,
+                         ast.Constant, ast.GeneratorExp),
+                    )
+                ):
+                    emit("RL303", node,
+                         f"{name}() copies a full array to host in hot path "
+                         f"{fn.name!r}")
+            elif isinstance(node, ast.For) and isinstance(node.iter, ast.Call):
+                iname = A.call_name(node.iter) or ""
+                if iname.startswith(("jnp.", "jax.numpy.")):
+                    emit("RL304", node,
+                         f"iterating a device array transfers one element "
+                         f"per step in hot path {fn.name!r}")
+    return findings
+
+
+for _rid, _summary in (
+    ("RL301", ".item() sync inside a hot-path module"),
+    ("RL302", "int()/float()/bool() cast forcing a device sync in hot path"),
+    ("RL303", "np.asarray/device_get full-array host copy in hot path"),
+    ("RL304", "Python iteration over a device array in hot path"),
+):
+    register(Rule(_rid, _summary, _applies, _check))

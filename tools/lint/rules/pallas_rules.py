@@ -1,0 +1,223 @@
+"""RL5xx — Pallas kernel constraints.
+
+The resident kernels only stay cache-oblivious and compile-once if their
+launch geometry is static and their bodies are branch-free over tracers:
+
+* RL501 — ``grid=`` and ``pl.BlockSpec`` dimension expressions must be
+  Python ints (names, literals, int arithmetic). A ``jnp``/``jax`` call in a
+  dim means the grid depends on a traced value — that recompiles per shape
+  at best and is a trace error at worst.
+* RL502 — no Python ``if``/``while`` on tracer-derived values inside a
+  kernel body (params ending in ``_ref``, or functions passed to
+  ``pallas_call``). Use ``pl.when``/``jnp.where``/``lax.cond``.
+* RL503 — (project-level) every kernel module under ``kernels/`` must have
+  a ``kernels/ref.py`` counterpart exercised by the differential harness
+  ``tests/_kernel_oracle.py`` — an unregistered kernel is an unchecked
+  kernel.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import re
+
+from tools.lint import _astutil as A
+from tools.lint.core import FileContext, Finding, Rule, register
+
+_EXEMPT = {"ref.py", "__init__.py"}
+
+
+def _applies(relpath: str) -> bool:
+    return (
+        relpath.startswith("src/repro/kernels/")
+        and relpath.rsplit("/", 1)[-1] not in _EXEMPT
+    )
+
+
+def _traced_call_in(expr: ast.AST) -> ast.Call | None:
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Call):
+            name = A.call_name(node) or ""
+            if name.startswith(("jnp.", "jax.", "lax.")):
+                return node
+    return None
+
+
+def _dim_exprs(call: ast.Call) -> list[ast.AST]:
+    """Dimension expressions of a pallas_call/BlockSpec call."""
+    name = A.call_name(call) or ""
+    out: list[ast.AST] = []
+    if name.endswith("pallas_call"):
+        for kw in call.keywords:
+            if kw.arg == "grid":
+                out.extend(
+                    kw.value.elts
+                    if isinstance(kw.value, ast.Tuple)
+                    else [kw.value]
+                )
+    elif name.endswith("BlockSpec"):
+        block_shape = None
+        if call.args:
+            block_shape = call.args[0]
+        for kw in call.keywords:
+            if kw.arg == "block_shape":
+                block_shape = kw.value
+        if isinstance(block_shape, (ast.Tuple, ast.List)):
+            out.extend(block_shape.elts)
+    return out
+
+
+def _check_static_dims(ctx: FileContext) -> list[Finding]:
+    findings = []
+    for call in A.walk_calls(ctx.tree):
+        for dim in _dim_exprs(call):
+            traced = _traced_call_in(dim)
+            if traced is not None:
+                findings.append(Finding(
+                    "RL501", ctx.relpath, dim.lineno, dim.col_offset,
+                    f"grid/BlockSpec dim uses traced call "
+                    f"{A.call_name(traced)!r} — launch geometry must be "
+                    "Python ints",
+                ))
+            for node in ast.walk(dim):
+                if isinstance(node, ast.Constant) and isinstance(
+                    node.value, float
+                ):
+                    findings.append(Finding(
+                        "RL501", ctx.relpath, node.lineno, node.col_offset,
+                        "grid/BlockSpec dim contains a float constant — "
+                        "dims must be Python ints",
+                    ))
+    return findings
+
+
+def _kernel_fns(ctx: FileContext) -> list[ast.FunctionDef]:
+    passed: set[str] = set()
+    for call in A.walk_calls(ctx.tree):
+        name = A.call_name(call) or ""
+        if name.endswith("pallas_call") and call.args:
+            if isinstance(call.args[0], ast.Name):
+                passed.add(call.args[0].id)
+            if isinstance(call.args[0], ast.Call):  # partial(kernel, ...)
+                for a in call.args[0].args:
+                    if isinstance(a, ast.Name):
+                        passed.add(a.id)
+    out = []
+    for fn in A.func_defs(ctx.tree):
+        params = [a.arg for a in fn.args.args + fn.args.posonlyargs]
+        if fn.name in passed or any(p.endswith("_ref") for p in params):
+            out.append(fn)
+    return out
+
+
+def _check_no_tracer_branch(ctx: FileContext) -> list[Finding]:
+    findings = []
+    for fn in _kernel_fns(ctx):
+        refs = {
+            a.arg
+            for a in fn.args.args + fn.args.posonlyargs
+            if a.arg.endswith("_ref")
+        }
+        tainted: set[str] = set()
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.Assign, ast.AnnAssign)):
+                value = node.value
+                if value is None:
+                    continue
+                is_tracer = False
+                for sub in ast.walk(value):
+                    if isinstance(sub, ast.Subscript):
+                        base = sub.value
+                        if isinstance(base, ast.Name) and base.id in refs:
+                            is_tracer = True
+                    elif isinstance(sub, ast.Call):
+                        name = A.call_name(sub) or ""
+                        if name.startswith(("pl.", "jnp.", "lax.", "jax.")):
+                            is_tracer = True
+                    elif isinstance(sub, ast.Name) and sub.id in tainted:
+                        is_tracer = True
+                if is_tracer:
+                    targets = (
+                        node.targets
+                        if isinstance(node, ast.Assign)
+                        else [node.target]
+                    )
+                    for t in targets:
+                        tainted.update(A.assigned_names(t))
+
+        def test_is_traced(test: ast.AST) -> bool:
+            for sub in ast.walk(test):
+                if isinstance(sub, ast.Name) and (
+                    sub.id in tainted or sub.id in refs
+                ):
+                    return True
+                if isinstance(sub, ast.Subscript):
+                    base = sub.value
+                    if isinstance(base, ast.Name) and base.id in refs:
+                        return True
+                if isinstance(sub, ast.Call):
+                    name = A.call_name(sub) or ""
+                    if name.startswith(("pl.", "jnp.", "lax.")):
+                        return True
+            return False
+
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.If, ast.While)) and test_is_traced(
+                node.test
+            ):
+                kind = "if" if isinstance(node, ast.If) else "while"
+                findings.append(Finding(
+                    "RL502", ctx.relpath, node.lineno, node.col_offset,
+                    f"Python `{kind}` on a tracer value inside kernel "
+                    f"{fn.name!r} — use pl.when/jnp.where/lax.cond",
+                ))
+    return findings
+
+
+def check_oracle_registration(root: pathlib.Path) -> list[Finding]:
+    """RL503: every kernels/ module is named in ref.py and the oracle."""
+    kdir = root / "src" / "repro" / "kernels"
+    oracle = root / "tests" / "_kernel_oracle.py"
+    ref = kdir / "ref.py"
+    if not kdir.is_dir():
+        return []
+    oracle_src = oracle.read_text() if oracle.exists() else ""
+    ref_src = ref.read_text() if ref.exists() else ""
+    findings = []
+    for mod in sorted(kdir.glob("*.py")):
+        stem = mod.stem
+        if mod.name in _EXEMPT or stem == "ops":
+            continue
+        pat = rf"(?<![\w]){re.escape(stem)}(?![\w])|{re.escape(stem)}_"
+        missing = []
+        if not re.search(pat, ref_src):
+            missing.append("kernels/ref.py")
+        if not re.search(pat, oracle_src):
+            missing.append("tests/_kernel_oracle.py")
+        if missing:
+            findings.append(Finding(
+                "RL503",
+                mod.resolve().relative_to(root.resolve()).as_posix(),
+                1, 0,
+                f"kernel module {stem!r} has no differential-oracle "
+                f"registration in {' and '.join(missing)}",
+            ))
+    return findings
+
+
+def _check(ctx: FileContext) -> list[Finding]:
+    return _check_static_dims(ctx) + _check_no_tracer_branch(ctx)
+
+
+for _rid, _summary in (
+    ("RL501", "grid/BlockSpec dims must be Python ints"),
+    ("RL502", "Python branch on a tracer value inside a kernel body"),
+):
+    register(Rule(_rid, _summary, _applies, _check))
+
+register(Rule(
+    "RL503",
+    "kernel module not registered in the kernels/ref.py differential oracle",
+    lambda relpath: False,  # project-level: run by lint_repo, not per file
+    lambda ctx: [],
+))

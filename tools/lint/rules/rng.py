@@ -1,0 +1,287 @@
+"""RL2xx — RNG key discipline.
+
+The repo's replay guarantee (elastic ``hot_add``/``evict`` bit-exactness,
+chunk ingest == K sequential batches) rests on counter-based key derivation:
+batch *i* consumes ``fold_in(key, step0 + i)``, and every sampler gets a key
+that was *derived* — by ``jax.random.split``/``fold_in``/``PRNGKey`` or the
+counter-cursor helpers in ``primitives/ingest.py`` — never manufactured by
+arithmetic or reused across two sampling calls.
+
+* RL201 — a ``jax.random`` sampler whose key argument is not a derived key:
+  not a parameter, not bound from ``split``/``fold_in``/``PRNGKey``/a
+  ``*key*`` helper, and not an index into a split key array.
+* RL202 — the same key name passed to two sampler calls with no intervening
+  derivation. Exclusive branches (``if``/``else``) may each consume the key;
+  loop bodies are scanned twice so cross-iteration reuse is caught.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.lint import _astutil as A
+from tools.lint.core import FileContext, Finding, Rule, register
+
+_SAMPLERS = {
+    "uniform", "normal", "bernoulli", "randint", "bits", "permutation",
+    "choice", "categorical", "gumbel", "laplace", "exponential", "gamma",
+    "beta", "dirichlet", "poisson", "truncated_normal", "rademacher",
+    "cauchy", "logistic", "maxwell", "multivariate_normal", "t",
+    "loggamma", "ball", "orthogonal",
+}
+_DERIVERS = {"split", "fold_in", "PRNGKey", "key", "clone", "wrap_key_data"}
+# the counter-cursor helpers from primitives/ingest.py (and anything that
+# names itself a key producer)
+_KEY_HELPER_MARK = "key"
+
+
+def _applies(relpath: str) -> bool:
+    return relpath.startswith("src/repro/")
+
+
+def _random_call_kind(call: ast.Call) -> str | None:
+    """'sampler' / 'deriver' for jax.random.* calls, else None."""
+    name = A.call_name(call)
+    if not name:
+        return None
+    parts = name.split(".")
+    if len(parts) >= 2 and parts[-2] == "random" and parts[0] == "jax":
+        attr = parts[-1]
+        if attr in _SAMPLERS:
+            return "sampler"
+        if attr in _DERIVERS:
+            return "deriver"
+    return None
+
+
+def _is_key_producer(call: ast.Call) -> bool:
+    """Derived-key expression: jax.random deriver or a *key* helper call."""
+    if _random_call_kind(call) == "deriver":
+        return True
+    name = A.call_name(call) or ""
+    return _KEY_HELPER_MARK in name.split(".")[-1].lower()
+
+
+def _key_arg(call: ast.Call) -> ast.AST | None:
+    for kw in call.keywords:
+        if kw.arg == "key":
+            return kw.value
+    return call.args[0] if call.args else None
+
+
+class _LambdaScan:
+    """Sampler checks inside one lambda body (its params are fresh keys)."""
+
+    def __init__(self, ctx: FileContext, keyish: set[str]) -> None:
+        self.ctx = ctx
+        self.keyish = keyish
+        self.findings: list[Finding] = []
+
+    def scan(self, body: ast.AST) -> None:
+        consumed: set[str] = set()
+        for node in ast.walk(body):
+            if isinstance(node, ast.Lambda):
+                self.keyish |= {a.arg for a in node.args.args}
+        for call in sorted(
+            (
+                c
+                for c in ast.walk(body)
+                if isinstance(c, ast.Call) and _random_call_kind(c) == "sampler"
+            ),
+            key=lambda c: (c.lineno, c.col_offset),
+        ):
+            key = _key_arg(call)
+            if isinstance(key, ast.Name):
+                if key.id not in self.keyish:
+                    self.findings.append(Finding(
+                        "RL201", self.ctx.relpath, call.lineno,
+                        call.col_offset,
+                        f"{A.call_name(call)} key {key.id!r} closed over by "
+                        "a lambda without derivation provenance",
+                    ))
+                if key.id in consumed:
+                    self.findings.append(Finding(
+                        "RL202", self.ctx.relpath, call.lineno,
+                        call.col_offset,
+                        f"key {key.id!r} feeds two samplers inside one "
+                        "lambda without re-derivation",
+                    ))
+                consumed.add(key.id)
+
+
+class _FnScan:
+    """Linear consumed-key scan over one function body."""
+
+    def __init__(self, ctx: FileContext, fn: ast.FunctionDef) -> None:
+        self.ctx = ctx
+        self.fn = fn
+        self.findings: list[Finding] = []
+        # names that are legitimate keys: params + derived bindings
+        self.keyish: set[str] = set()
+        args = fn.args
+        for a in (
+            args.posonlyargs + args.args + args.kwonlyargs
+            + ([args.vararg] if args.vararg else [])
+            + ([args.kwarg] if args.kwarg else [])
+        ):
+            self.keyish.add(a.arg)
+
+    def emit(self, rule: str, node: ast.AST, msg: str) -> None:
+        self.findings.append(
+            Finding(rule, self.ctx.relpath, node.lineno, node.col_offset, msg)
+        )
+
+    # -- binding tracking ---------------------------------------------------
+    def _bind(self, stmt: ast.stmt, consumed: set[str]) -> None:
+        if isinstance(stmt, ast.Assign):
+            value, targets = stmt.value, stmt.targets
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            value, targets = stmt.value, [stmt.target]
+        else:
+            return
+        names: list[str] = []
+        for t in targets:
+            names.extend(A.assigned_names(t))
+        derived = isinstance(value, ast.Call) and _is_key_producer(value)
+        # unpacking / indexing an existing key-ish value keeps provenance
+        if isinstance(value, ast.Subscript) and isinstance(value.value, ast.Name):
+            derived = derived or value.value.id in self.keyish
+        if isinstance(value, ast.Name) and value.id in self.keyish:
+            derived = True
+        for n in names:
+            if derived:
+                self.keyish.add(n)
+                consumed.discard(n)
+            else:
+                self.keyish.discard(n)
+
+    # -- statement walk -----------------------------------------------------
+    def run(self) -> None:
+        self._scan_stmts(self.fn.body, set())
+
+    def _scan_stmts(self, stmts: list[ast.stmt], consumed: set[str]) -> None:
+        for stmt in stmts:
+            if isinstance(stmt, ast.If):
+                a, b = set(consumed), set(consumed)
+                self._scan_stmts(stmt.body, a)
+                self._scan_stmts(stmt.orelse, b)
+                consumed |= a | b
+            elif isinstance(stmt, (ast.For, ast.While)):
+                loop_targets = (
+                    set(A.assigned_names(stmt.target))
+                    if isinstance(stmt, ast.For)
+                    else set()
+                )
+                if isinstance(stmt, ast.For):
+                    # iterating a split-key array binds fresh keys
+                    if (
+                        isinstance(stmt.iter, ast.Name)
+                        and stmt.iter.id in self.keyish
+                    ) or (
+                        isinstance(stmt.iter, ast.Call)
+                        and _is_key_producer(stmt.iter)
+                    ):
+                        self.keyish |= loop_targets
+                for _ in range(2):  # second pass catches cross-iteration reuse
+                    consumed -= loop_targets
+                    self._scan_stmts(stmt.body, consumed)
+                self._scan_stmts(stmt.orelse, consumed)
+            elif isinstance(stmt, ast.Try):
+                self._scan_stmts(stmt.body, consumed)
+                for h in stmt.handlers:
+                    self._scan_stmts(h.body, consumed)
+                self._scan_stmts(stmt.finalbody, consumed)
+            elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+                self._scan_stmts(stmt.body, consumed)
+            elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                pass  # nested defs are their own scan scope
+            else:
+                self._scan_exprs(stmt, consumed)
+                self._bind(stmt, consumed)
+
+    def _scan_exprs(self, stmt: ast.stmt, consumed: set[str]) -> None:
+        # lambdas are their own key scope (vmapped samplers take the lambda's
+        # param): exclude their subtrees here, scan them separately below
+        in_lambda: set[ast.AST] = set()
+        for node in ast.walk(stmt):
+            if isinstance(node, ast.Lambda):
+                in_lambda.update(
+                    n for n in ast.walk(node.body)
+                )
+                lam_keyish = {a.arg for a in node.args.args}
+                lam = _LambdaScan(self.ctx, lam_keyish)
+                lam.scan(node.body)
+                self.findings.extend(lam.findings)
+        calls = sorted(
+            (
+                c
+                for c in ast.walk(stmt)
+                if isinstance(c, ast.Call)
+                and c not in in_lambda
+                and _random_call_kind(c) == "sampler"
+            ),
+            key=lambda c: (c.lineno, c.col_offset),
+        )
+        for call in calls:
+            key = _key_arg(call)
+            sampler = A.call_name(call)
+            if key is None:
+                continue
+            if isinstance(key, ast.Name):
+                if key.id not in self.keyish:
+                    self.emit(
+                        "RL201", call,
+                        f"{sampler} key {key.id!r} has no derivation "
+                        "provenance (bind it from split/fold_in/PRNGKey or a "
+                        "counter-cursor helper)",
+                    )
+                if key.id in consumed:
+                    self.emit(
+                        "RL202", call,
+                        f"key {key.id!r} passed to a second sampler without "
+                        "an intervening split/fold_in — bit-exact replay "
+                        "breaks",
+                    )
+                consumed.add(key.id)
+            elif isinstance(key, ast.Call):
+                if not _is_key_producer(key):
+                    self.emit(
+                        "RL201", call,
+                        f"{sampler} key is a non-derivation call "
+                        f"{A.call_name(key)!r}",
+                    )
+            elif isinstance(key, ast.Subscript):
+                base = key.value
+                if not (isinstance(base, ast.Name) and base.id in self.keyish):
+                    self.emit(
+                        "RL201", call,
+                        f"{sampler} key is an index into a value with no key "
+                        "provenance",
+                    )
+            elif isinstance(key, ast.Attribute):
+                pass  # self._key etc. — provenance is the holder's contract
+            else:
+                self.emit(
+                    "RL201", call,
+                    f"{sampler} key is a {type(key).__name__} expression, "
+                    "not a derived key",
+                )
+
+
+def _check(ctx: FileContext) -> list[Finding]:
+    findings: list[Finding] = []
+    for fn in A.func_defs(ctx.tree):
+        scan = _FnScan(ctx, fn)
+        scan.run()
+        findings.extend(scan.findings)
+    # dedupe (loop double-scan can emit twice at one site)
+    out: dict[tuple[str, int, int], Finding] = {}
+    for f in findings:
+        out.setdefault((f.rule, f.line, f.col), f)
+    return list(out.values())
+
+
+for _rid, _summary in (
+    ("RL201", "sampler key lacks split/fold_in/counter-cursor provenance"),
+    ("RL202", "key reused by two sampler calls without re-derivation"),
+):
+    register(Rule(_rid, _summary, _applies, _check))

@@ -1,0 +1,60 @@
+"""RL6xx — sharding-spec provenance.
+
+Execution-plan builders (``build_*``/``make_*`` in ``core/distributed.py``
+and ``engine/backends.py``) must derive every ``PartitionSpec`` from the
+scheme's axis roles (``scheme_state_specs``/``scheme_state_sharding`` and
+the axis variables they hand out), never from hand-written axis-name
+literals. A literal axis name compiles fine on the mesh it was written for
+and silently misplaces state on every other mesh shape — exactly the drift
+the axis-role layer exists to prevent.
+
+* RL601 — a string literal passed positionally (or nested in a tuple) to
+  ``P(...)``/``PartitionSpec(...)`` inside a ``build_*``/``make_*``
+  function in the scoped modules.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.lint import _astutil as A
+from tools.lint.core import FileContext, Finding, Rule, register
+
+_SCOPE = (
+    "src/repro/core/distributed.py",
+    "src/repro/engine/backends.py",
+)
+_SPEC_NAMES = {"P", "PartitionSpec", "jax.sharding.PartitionSpec"}
+
+
+def _applies(relpath: str) -> bool:
+    return relpath in _SCOPE
+
+
+def _check(ctx: FileContext) -> list[Finding]:
+    findings: list[Finding] = []
+    for fn in A.func_defs(ctx.tree):
+        if not fn.name.startswith(("build_", "make_")):
+            continue
+        for call in A.walk_calls(fn):
+            if (A.call_name(call) or "") not in _SPEC_NAMES:
+                continue
+            for arg in list(call.args) + [kw.value for kw in call.keywords]:
+                for lit in ast.walk(arg):
+                    if isinstance(lit, ast.Constant) and isinstance(
+                        lit.value, str
+                    ):
+                        findings.append(Finding(
+                            "RL601", ctx.relpath, lit.lineno, lit.col_offset,
+                            f"hand-written axis name {lit.value!r} in a "
+                            f"PartitionSpec inside {fn.name!r} — derive it "
+                            "from scheme_state_specs/axis-role helpers",
+                        ))
+    return findings
+
+
+register(Rule(
+    "RL601",
+    "PartitionSpec built from a hand-written axis-name literal",
+    _applies,
+    _check,
+))

@@ -1,0 +1,203 @@
+"""RL4xx — thread-ownership annotations.
+
+The serving tier's correctness argument is *ownership*, not locking: the
+``ElasticServeLoop`` consumer thread solely owns bank mutations, the
+prefetch producer thread owns its production counters, and everything
+crossing a thread boundary goes through a queue or a lock. That argument is
+made checkable by a declaration convention on the class body::
+
+    _thread_ownership = {
+        "consumer": {
+            "methods": ("_run", "_apply_control"),
+            "attrs": ("bank", "res"),
+        },
+    }
+    _lock_guarded = ("_queues", "dropped")   # under `with self._lock`
+    _lock_name = "_lock"                      # optional, default "_lock"
+
+* RL401 — a class that the repo's thread model names as multi-threaded
+  (``ElasticServeLoop``, ``TenantQueues``, ``PrefetchQueue``) has no
+  ``_thread_ownership``/``_lock_guarded`` declaration.
+* RL402 — an attribute declared owned by one thread group is written (or
+  mutated via ``.append()``-style calls) from a method outside that group
+  (``__init__`` is always allowed: it runs before the threads exist).
+* RL403 — an attribute declared lock-guarded is touched outside a
+  ``with self._lock:`` block (outside ``__init__``).
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.lint import _astutil as A
+from tools.lint.core import FileContext, Finding, Rule, register
+
+REQUIRED_CLASSES = {"ElasticServeLoop", "TenantQueues", "PrefetchQueue"}
+
+_MUTATORS = {
+    "append", "extend", "add", "update", "pop", "popleft", "remove",
+    "insert", "clear", "setdefault", "discard", "appendleft",
+}
+
+
+def _applies(relpath: str) -> bool:
+    return relpath.startswith("src/repro/")
+
+
+def _literal_tuple(node: ast.AST) -> list[str] | None:
+    if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        out = []
+        for elt in node.elts:
+            if not (isinstance(elt, ast.Constant) and isinstance(elt.value, str)):
+                return None
+            out.append(elt.value)
+        return out
+    return None
+
+
+def _parse_ownership(cls: ast.ClassDef) -> tuple[
+    dict[str, dict[str, list[str]]] | None, list[str], str
+]:
+    """(ownership groups, lock-guarded attrs, lock attr name)."""
+    ownership: dict[str, dict[str, list[str]]] | None = None
+    guarded: list[str] = []
+    lock_name = "_lock"
+    for stmt in cls.body:
+        if not isinstance(stmt, ast.Assign):
+            continue
+        names = [
+            t.id for t in stmt.targets if isinstance(t, ast.Name)
+        ]
+        if "_thread_ownership" in names and isinstance(stmt.value, ast.Dict):
+            ownership = {}
+            for k, v in zip(stmt.value.keys, stmt.value.values):
+                if not (
+                    isinstance(k, ast.Constant) and isinstance(v, ast.Dict)
+                ):
+                    continue
+                group: dict[str, list[str]] = {"methods": [], "attrs": []}
+                for gk, gv in zip(v.keys, v.values):
+                    if isinstance(gk, ast.Constant) and gk.value in group:
+                        group[gk.value] = _literal_tuple(gv) or []
+                ownership[str(k.value)] = group
+        elif "_lock_guarded" in names:
+            guarded = _literal_tuple(stmt.value) or []
+        elif "_lock_name" in names and isinstance(stmt.value, ast.Constant):
+            lock_name = str(stmt.value.value)
+    return ownership, guarded, lock_name
+
+
+def _self_writes(method: ast.FunctionDef) -> list[tuple[str, ast.AST]]:
+    """(attr, node) for every write/mutation of ``self.X`` in the method."""
+    out: list[tuple[str, ast.AST]] = []
+    for node in ast.walk(method):
+        if isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            targets = (
+                node.targets if isinstance(node, ast.Assign) else [node.target]
+            )
+            for t in targets:
+                attr = A.self_attr(t)
+                if attr:
+                    out.append((attr, node))
+                # self.x[...] = v and self.x.field = v mutate x
+                if isinstance(t, (ast.Subscript, ast.Attribute)):
+                    attr = A.self_attr(t.value)
+                    if attr:
+                        out.append((attr, node))
+        elif isinstance(node, ast.Call) and isinstance(
+            node.func, ast.Attribute
+        ):
+            if node.func.attr in _MUTATORS:
+                attr = A.self_attr(node.func.value)
+                if attr:
+                    out.append((attr, node))
+    return out
+
+
+def _self_accesses(method: ast.FunctionDef) -> list[tuple[str, ast.AST]]:
+    return [
+        (attr, node)
+        for node in ast.walk(method)
+        for attr in [A.self_attr(node)]
+        if attr
+    ]
+
+
+def _lock_regions(method: ast.FunctionDef, lock_name: str) -> list[ast.With]:
+    out = []
+    for node in ast.walk(method):
+        if isinstance(node, ast.With):
+            for item in node.items:
+                expr = item.context_expr
+                if isinstance(expr, ast.Call):
+                    expr = expr.func
+                if A.self_attr(expr) == lock_name or (
+                    isinstance(expr, ast.Attribute)
+                    and expr.attr in ("acquire",)
+                    and A.self_attr(expr.value) == lock_name
+                ):
+                    out.append(node)
+    return out
+
+
+def _in_regions(node: ast.AST, regions: list[ast.With]) -> bool:
+    return any(
+        node in set(ast.walk(region)) for region in regions
+    )
+
+
+def _check(ctx: FileContext) -> list[Finding]:
+    findings: list[Finding] = []
+
+    def emit(rule: str, node: ast.AST, msg: str) -> None:
+        findings.append(
+            Finding(rule, ctx.relpath, node.lineno, node.col_offset, msg)
+        )
+
+    for cls in [
+        n for n in ast.walk(ctx.tree) if isinstance(n, ast.ClassDef)
+    ]:
+        ownership, guarded, lock_name = _parse_ownership(cls)
+        if ownership is None and not guarded:
+            if cls.name in REQUIRED_CLASSES:
+                emit("RL401", cls,
+                     f"class {cls.name!r} crosses threads but declares no "
+                     "_thread_ownership/_lock_guarded convention")
+            continue
+
+        methods = [
+            m for m in cls.body
+            if isinstance(m, (ast.FunctionDef, ast.AsyncFunctionDef))
+        ]
+        owner_of: dict[str, str] = {}
+        allowed: dict[str, set[str]] = {}
+        for group, spec in (ownership or {}).items():
+            for attr in spec["attrs"]:
+                owner_of[attr] = group
+                allowed[attr] = set(spec["methods"]) | {"__init__"}
+
+        for method in methods:
+            regions = _lock_regions(method, lock_name)
+            for attr, node in _self_writes(method):
+                if attr in owner_of and method.name not in allowed[attr]:
+                    emit("RL402", node,
+                         f"{cls.name}.{attr} is owned by the "
+                         f"{owner_of[attr]!r} thread group but written from "
+                         f"{method.name!r} (owner methods: "
+                         f"{sorted(allowed[attr] - {'__init__'})})")
+            if method.name == "__init__":
+                continue
+            for attr, node in _self_accesses(method):
+                if attr in guarded and not _in_regions(node, regions):
+                    emit("RL403", node,
+                         f"{cls.name}.{attr} is lock-guarded but accessed "
+                         f"outside `with self.{lock_name}` in "
+                         f"{method.name!r}")
+    return findings
+
+
+for _rid, _summary in (
+    ("RL401", "multi-threaded class missing a thread-ownership declaration"),
+    ("RL402", "thread-owned attribute written outside its owner methods"),
+    ("RL403", "lock-guarded attribute accessed outside `with self._lock`"),
+):
+    register(Rule(_rid, _summary, _applies, _check))

@@ -1,0 +1,242 @@
+"""RL1xx — trace purity.
+
+Functions that execute under a JAX trace (jit/pjit bodies, scan/cond/
+fori_loop carriers, shard_map and pallas_call bodies) must be pure: no host
+side effects, no mutation of closed-over Python state, no NumPy host calls
+on traced values. A host call inside a traced function either crashes at
+trace time, silently bakes a constant into the compiled program, or — the
+worst case — runs once at trace time and never again, which is how replay
+bit-exactness quietly dies.
+
+Traced-function identification (per module, no cross-module analysis):
+
+* roots: functions decorated with ``jit``/``pjit`` (including through
+  ``partial``), or passed by name to a trace entry point
+  (``lax.scan``/``fori_loop``/``while_loop``/``cond``/``switch``,
+  ``shard_map``, ``pallas_call``, ``vmap``, ``grad``, ``checkpoint``);
+* closure: functions called by name from an already-traced function;
+* heuristic: functions whose body computes with ``jnp``/``lax``/
+  ``jax.random`` and that are *not* program builders (builders construct
+  ``jit``/``pjit``/``pallas_call``/``Mesh`` objects on the host — their
+  inner defs are caught by the root rule instead).
+
+Rules:
+
+* RL101 — host side-effect call (``print``, ``time.*``, ``datetime.*``,
+  stdlib ``random.*``, ``input``, ``open``, ``os.*``/``sys.*``) inside a
+  traced function.
+* RL102 — mutation of closed-over or global Python state inside a traced
+  function (``global``/``nonlocal`` statements, mutating method calls on
+  names not bound locally).
+* RL103 — NumPy call on values inside a traced function (``np.*`` except
+  dtype/static helpers) — NumPy eagerly forces the tracer to a host value.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.lint import _astutil as A
+from tools.lint.core import FileContext, Finding, Rule, register
+
+_SCOPE_DIRS = ("src/repro/core/", "src/repro/primitives/", "src/repro/kernels/")
+
+_TRACE_DECORATORS = {
+    "jax.jit", "jit", "jax.pjit", "pjit", "jax.vmap", "jax.grad",
+    "jax.checkpoint", "jax.remat", "jax.custom_vjp", "jax.custom_jvp",
+}
+_TRACE_ENTRIES = {
+    "jax.lax.scan", "lax.scan", "jax.lax.fori_loop", "lax.fori_loop",
+    "jax.lax.while_loop", "lax.while_loop", "jax.lax.cond", "lax.cond",
+    "jax.lax.switch", "lax.switch", "jax.lax.map", "lax.map",
+    "jax.lax.associative_scan", "lax.associative_scan",
+    "shard_map", "jax.experimental.shard_map.shard_map", "_shard_map",
+    "pl.pallas_call", "pallas_call", "jax.jit", "jax.pjit", "pjit", "jit",
+    "jax.vmap", "jax.grad", "jax.checkpoint", "jax.remat",
+}
+# host-side program-builder APIs: a function creating these is host code
+_BUILDER_MARKS = (
+    "pl.pallas_call", "pallas_call", "jax.jit", "pjit", "jax.pjit",
+    "Mesh", "jax.sharding.Mesh", "NamedSharding", "jax.devices",
+    "jax.local_devices", "mesh_utils.create_device_mesh", "jax.device_put",
+    "jax.make_mesh",
+)
+_COMPUTE_MARKS = ("jnp.", "lax.", "jax.lax.", "jax.random.", "jax.nn.", "pl.")
+
+_HOST_CALLS = {"print", "input", "breakpoint", "open"}
+_HOST_PREFIXES = ("time.", "datetime.", "os.", "sys.", "logging.")
+
+_MUTATORS = {
+    "append", "extend", "add", "update", "pop", "popleft", "remove",
+    "insert", "clear", "setdefault", "discard", "appendleft", "put",
+    "put_nowait", "write",
+}
+
+_NP_ALLOWED = {
+    "int8", "int16", "int32", "int64", "uint8", "uint16", "uint32",
+    "uint64", "float16", "float32", "float64", "bool_", "dtype", "iinfo",
+    "finfo", "ndim", "shape", "prod", "log2", "ceil", "floor", "sqrt",
+    "pi", "inf", "nan", "newaxis", "errstate",
+}
+
+
+def _applies(relpath: str) -> bool:
+    return any(relpath.startswith(d) for d in _SCOPE_DIRS)
+
+
+def _has_stdlib_random(tree: ast.AST) -> bool:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            if any(a.name == "random" for a in node.names):
+                return True
+        if isinstance(node, ast.ImportFrom) and node.module == "random":
+            return True
+    return False
+
+
+def _fn_names_passed_to_entries(tree: ast.AST) -> set[str]:
+    out: set[str] = set()
+    for call in A.walk_calls(tree):
+        name = A.call_name(call)
+        if name in _TRACE_ENTRIES:
+            for arg in list(call.args) + [kw.value for kw in call.keywords]:
+                if isinstance(arg, ast.Name):
+                    out.add(arg.id)
+                if isinstance(arg, ast.Call):
+                    # partial(fn, ...) / jax.checkpoint(fn)
+                    for sub in arg.args:
+                        if isinstance(sub, ast.Name):
+                            out.add(sub.id)
+    return out
+
+
+def _classify(fn: ast.AST) -> tuple[bool, bool]:
+    """(computes, builds) — AST classification of a function body (docstrings
+    can't fool it the way a textual scan can)."""
+    computes = builds = False
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Attribute):
+            name = A.dotted(node) or ""
+            if name.startswith(_COMPUTE_MARKS):
+                computes = True
+        if isinstance(node, ast.Call):
+            name = A.call_name(node) or ""
+            if name in _BUILDER_MARKS or name.endswith(
+                ("pallas_call", ".pjit", ".Mesh", "NamedSharding")
+            ):
+                builds = True
+    return computes, builds
+
+
+def traced_functions(ctx: FileContext) -> list[ast.FunctionDef]:
+    defs = A.func_defs(ctx.tree)
+    by_name: dict[str, list[ast.AST]] = {}
+    for fn in defs:
+        by_name.setdefault(fn.name, []).append(fn)
+
+    passed = _fn_names_passed_to_entries(ctx.tree)
+    traced: set[ast.AST] = set()
+    for fn in defs:
+        decs = A.decorator_names(fn)
+        if set(decs) & _TRACE_DECORATORS or fn.name in passed:
+            traced.add(fn)
+            continue
+        computes, builds = _classify(fn)
+        if computes and not builds:
+            traced.add(fn)
+
+    # closure: names called from traced bodies
+    changed = True
+    while changed:
+        changed = False
+        for fn in list(traced):
+            for call in A.walk_calls(fn):
+                if isinstance(call.func, ast.Name):
+                    for cand in by_name.get(call.func.id, []):
+                        if cand not in traced:
+                            traced.add(cand)
+                            changed = True
+    return [f for f in defs if f in traced]
+
+
+def _local_bindings(fn: ast.FunctionDef) -> set[str]:
+    names: set[str] = set()
+    args = fn.args
+    for a in (
+        args.posonlyargs + args.args + args.kwonlyargs
+        + ([args.vararg] if args.vararg else [])
+        + ([args.kwarg] if args.kwarg else [])
+    ):
+        names.add(a.arg)
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            targets = node.targets if isinstance(node, ast.Assign) else [node.target]
+            for t in targets:
+                names.update(A.assigned_names(t))
+        elif isinstance(node, (ast.For, ast.comprehension)):
+            names.update(A.assigned_names(node.target))
+        elif isinstance(node, ast.withitem) and node.optional_vars:
+            names.update(A.assigned_names(node.optional_vars))
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            names.add(node.name)
+    return names
+
+
+def _check(ctx: FileContext) -> list[Finding]:
+    findings: list[Finding] = []
+    stdlib_random = _has_stdlib_random(ctx.tree)
+    seen: set[tuple[str, int, int]] = set()
+
+    def emit(rule: str, node: ast.AST, msg: str) -> None:
+        key = (rule, node.lineno, node.col_offset)
+        if key not in seen:
+            seen.add(key)
+            findings.append(
+                Finding(rule, ctx.relpath, node.lineno, node.col_offset, msg)
+            )
+
+    for fn in traced_functions(ctx):
+        local = _local_bindings(fn)
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                name = A.call_name(node) or ""
+                if name in _HOST_CALLS or name.startswith(_HOST_PREFIXES):
+                    emit("RL101", node,
+                         f"host side-effect call {name!r} inside traced "
+                         f"function {fn.name!r}")
+                elif stdlib_random and (
+                    name == "random" or name.startswith("random.")
+                ):
+                    emit("RL101", node,
+                         f"stdlib random call {name!r} inside traced "
+                         f"function {fn.name!r} — use jax.random with a "
+                         "counter-derived key")
+                elif name.startswith(("np.", "numpy.")):
+                    attr = name.split(".", 1)[1]
+                    if attr.split(".")[0] not in _NP_ALLOWED:
+                        emit("RL103", node,
+                             f"NumPy call {name!r} inside traced function "
+                             f"{fn.name!r} forces a host sync — use jnp")
+                elif (
+                    isinstance(node.func, ast.Attribute)
+                    and node.func.attr in _MUTATORS
+                    and isinstance(node.func.value, ast.Name)
+                    and node.func.value.id not in local
+                    and node.func.value.id not in ("self",)
+                ):
+                    emit("RL102", node,
+                         f"mutation of closed-over name "
+                         f"{node.func.value.id!r} via .{node.func.attr}() "
+                         f"inside traced function {fn.name!r}")
+            elif isinstance(node, (ast.Global, ast.Nonlocal)):
+                emit("RL102", node,
+                     f"{'global' if isinstance(node, ast.Global) else 'nonlocal'}"
+                     f" mutation inside traced function {fn.name!r}")
+    return findings
+
+
+for _rid, _summary in (
+    ("RL101", "host side-effect call inside a traced function"),
+    ("RL102", "mutation of closed-over Python state inside a traced function"),
+    ("RL103", "NumPy host call on traced values inside a traced function"),
+):
+    register(Rule(_rid, _summary, _applies, _check))
